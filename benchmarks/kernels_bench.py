@@ -1,0 +1,68 @@
+"""Kernel microbenchmarks: us_per_call for each Pallas kernel (interpret
+mode on CPU — structural check; real perf is the TPU target) and the jnp
+twin used by the production path."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.models.attention import chunked_attention
+
+from benchmarks.common import timed
+
+KEY = jax.random.PRNGKey(0)
+
+
+def run(quick: bool = False):
+    rows = []
+    B, H, T, D = 1, 4, 256, 64
+    q = jax.random.normal(KEY, (B, H, T, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (B, H, T, D))
+    v = jax.random.normal(jax.random.PRNGKey(2), (B, H, T, D))
+
+    fa = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, block_q=64,
+                                                     block_k=64))
+    rows.append(("kernel/flash_attention_interp",
+                 timed(lambda: jax.block_until_ready(fa(q, k, v)))))
+    fr = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
+    rows.append(("oracle/attention_materialized",
+                 timed(lambda: jax.block_until_ready(fr(q, k, v)))))
+    qb = q.transpose(0, 2, 1, 3)
+    ca = jax.jit(lambda q, k, v: chunked_attention(q, k, v, chunk=64))
+    rows.append(("prod/chunked_attention_jnp",
+                 timed(lambda: jax.block_until_ready(
+                     ca(qb, k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3))))))
+
+    n = 1 << 20
+    vv = jax.random.normal(KEY, (n,))
+    ww = jax.random.normal(jax.random.PRNGKey(3), (n,)) * 0.3
+    gs = jax.jit(lambda v, w: ops.gaia_select(v, w, 0.5))
+    rows.append(("kernel/gaia_select_1M",
+                 timed(lambda: jax.block_until_ready(gs(vv, ww)))))
+    gr = jax.jit(lambda v, w: ref.gaia_select_ref(v, w, 0.5))
+    rows.append(("oracle/gaia_select_1M",
+                 timed(lambda: jax.block_until_ready(gr(vv, ww)))))
+
+    dg = jax.jit(lambda v: ops.dgc_sparsify(v, jnp.float32(0.999)))
+    rows.append(("kernel/dgc_sparsify_1M",
+                 timed(lambda: jax.block_until_ready(dg(vv)))))
+    dq = jax.jit(lambda v: ref.dgc_threshold_ref(v, 0.999))
+    rows.append(("oracle/dgc_quantile_1M",
+                 timed(lambda: jax.block_until_ready(dq(vv)))))
+
+    x = jax.random.normal(KEY, (16, 16, 16, 64))
+    sc, bi = jnp.ones(64), jnp.zeros(64)
+    gn = jax.jit(lambda x: ops.group_norm(x, sc, bi, group_size=2))
+    rows.append(("kernel/group_norm",
+                 timed(lambda: jax.block_until_ready(gn(x)))))
+    gnr = jax.jit(lambda x: ref.group_norm_ref(x, sc, bi, group_size=2))
+    rows.append(("oracle/group_norm",
+                 timed(lambda: jax.block_until_ready(gnr(x)))))
+    return [dict(name=n, us_per_call=u) for n, u in rows]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(f"{r['name']},{r['us_per_call']:.1f},")

@@ -1,0 +1,59 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads experiments/dryrun/combos/*.json (written by repro.launch.dryrun)
+and prints the per-(arch x shape x mesh) three-term roofline with the
+dominant bottleneck and the useful-compute ratio."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+COMBO_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                         "dryrun", "combos")
+
+
+def load_reports(combo_dir: str = COMBO_DIR):
+    reports = []
+    for f in sorted(glob.glob(os.path.join(combo_dir, "*.json"))):
+        with open(f) as fh:
+            reports.append(json.load(fh))
+    return reports
+
+
+def run(quick: bool = False):
+    reports = load_reports()
+    rows = []
+    for r in reports:
+        if not r.get("ok"):
+            rows.append(dict(arch=r["arch"], shape=r["shape"], ok=False,
+                             error=r.get("error", "?")))
+            continue
+        ro = r["roofline"]
+        rows.append(dict(
+            arch=r["arch"], shape=r["shape"], mesh=r["mesh"], ok=True,
+            t_compute_ms=ro["t_compute_ms"], t_memory_ms=ro["t_memory_ms"],
+            t_collective_ms=ro["t_collective_ms"],
+            bottleneck=ro["bottleneck"], useful_ratio=ro["useful_ratio"],
+            coll_gb=ro["coll_gbytes_per_dev"]))
+    return rows
+
+
+def print_table(rows):
+    hdr = (f"{'arch':24s} {'shape':12s} {'mesh':9s} {'t_comp':>9s} "
+           f"{'t_mem':>9s} {'t_coll':>9s} {'bound':>10s} {'useful':>7s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if not r.get("ok"):
+            print(f"{r['arch']:24s} {r['shape']:12s} FAILED: "
+                  f"{r['error'][:60]}")
+            continue
+        print(f"{r['arch']:24s} {r['shape']:12s} {r['mesh']:9s} "
+              f"{r['t_compute_ms']:8.1f}m {r['t_memory_ms']:8.1f}m "
+              f"{r['t_collective_ms']:8.1f}m {r['bottleneck']:>10s} "
+              f"{r['useful_ratio']:7.2f}")
+
+
+if __name__ == "__main__":
+    print_table(run())

@@ -1,0 +1,39 @@
+"""Quickstart: the paper's core finding in ~60 seconds on CPU.
+
+Trains GN-LeNet on synthetic-CIFAR with 5 decentralized nodes twice —
+IID vs 100% skewed label partitions — under Gaia, and shows the accuracy
+gap plus communication savings.
+
+  PYTHONPATH=src python examples/quickstart.py
+"""
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.configs.base import CommConfig
+from repro.configs.cnn_zoo import CNN_ZOO
+from repro.core import partition_label_skew, train_decentralized
+from repro.data.synthetic import synth_images
+
+
+def main():
+    ds = synth_images(3000, seed=0, noise=0.8, class_sep=0.35)
+    val = synth_images(800, seed=99, noise=0.8, class_sep=0.35)
+    cfg = CNN_ZOO["gn-lenet"]
+    comm = CommConfig(strategy="gaia", gaia_t0=0.10)
+
+    print(f"model={cfg.name}  K=5 nodes  algo=gaia (T0={comm.gaia_t0})")
+    for skew, tag in ((0.0, "IID"), (1.0, "Non-IID")):
+        idx = partition_label_skew(ds.y, 5, skew, seed=1)
+        parts = [(ds.x[i], ds.y[i]) for i in idx]
+        r = train_decentralized(cfg, "gaia", parts, (val.x, val.y),
+                                comm=comm, steps=300, batch=20, lr=0.02,
+                                eval_every=100)
+        print(f"  {tag:8s} val_acc={r.val_acc:.3f}  "
+              f"comm_savings={r.comm_savings:.1f}x vs BSP")
+    print("\nThe Non-IID drop at identical hyper-parameters is the paper's "
+          "headline finding (Fig. 1).")
+
+
+if __name__ == "__main__":
+    main()

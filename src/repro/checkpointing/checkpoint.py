@@ -1,0 +1,76 @@
+"""Pytree checkpointing: npz payload + msgpack-encoded treedef.
+
+No orbax offline; this is a minimal, dependency-light implementation with
+the same save/restore contract (atomic rename, step-tagged directories).
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+from typing import Any, Optional
+
+import jax
+import msgpack
+import numpy as np
+
+Params = Any
+
+
+def _flatten(tree: Params):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, tree: Params, step: Optional[int] = None) -> str:
+    """Atomically writes ``<path>/ckpt_<step>`` (or <path> if step None)."""
+    target = os.path.join(path, f"ckpt_{step}") if step is not None else path
+    os.makedirs(os.path.dirname(target) or ".", exist_ok=True)
+    leaves, treedef = _flatten(tree)
+
+    _NATIVE = {"float64", "float32", "float16", "int64", "int32", "int16",
+               "int8", "uint64", "uint32", "uint16", "uint8", "bool"}
+
+    def to_np(l):
+        a = np.asarray(l)
+        if a.dtype.name not in _NATIVE:         # e.g. bfloat16, float8
+            a = a.astype(np.float32)
+        return a
+    arrays = {f"leaf_{i}": to_np(l) for i, l in enumerate(leaves)}
+    meta = msgpack.packb({
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "step": step,
+        "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+    })
+    tmpdir = tempfile.mkdtemp(dir=os.path.dirname(target) or ".")
+    np.savez(os.path.join(tmpdir, "payload.npz"), **arrays)
+    with open(os.path.join(tmpdir, "meta.msgpack"), "wb") as f:
+        f.write(meta)
+    if os.path.isdir(target):
+        import shutil
+        shutil.rmtree(target)
+    os.replace(tmpdir, target)
+    return target
+
+
+def restore(path: str, like: Params, step: Optional[int] = None) -> Params:
+    """Restores into the structure of ``like`` (shape/dtype validated)."""
+    target = os.path.join(path, f"ckpt_{step}") if step is not None else path
+    with np.load(os.path.join(target, "payload.npz")) as z:
+        leaves = [z[f"leaf_{i}"] for i in range(len(z.files))]
+    like_leaves, treedef = _flatten(like)
+    assert len(leaves) == len(like_leaves), \
+        f"checkpoint has {len(leaves)} leaves, expected {len(like_leaves)}"
+    out = []
+    for got, want in zip(leaves, like_leaves):
+        assert got.shape == want.shape, (got.shape, want.shape)
+        out.append(jax.numpy.asarray(got).astype(want.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def latest_step(path: str) -> Optional[int]:
+    if not os.path.isdir(path):
+        return None
+    steps = [int(d.split("_", 1)[1]) for d in os.listdir(path)
+             if d.startswith("ckpt_")]
+    return max(steps) if steps else None

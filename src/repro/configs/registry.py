@@ -1,0 +1,41 @@
+"""Architecture registry: ``get_config("<arch-id>")`` and the full list.
+
+The ten assigned architectures plus the paper's own CNN models (used for the
+faithful non-IID study on image classification).
+"""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.configs.base import ModelConfig
+
+_MODULES = {
+    "qwen3-0.6b":            "repro.configs.qwen3_0_6b",
+    "phi-3-vision-4.2b":     "repro.configs.phi_3_vision_4_2b",
+    "gemma2-9b":             "repro.configs.gemma2_9b",
+    "recurrentgemma-2b":     "repro.configs.recurrentgemma_2b",
+    "seamless-m4t-large-v2": "repro.configs.seamless_m4t_large_v2",
+    "starcoder2-3b":         "repro.configs.starcoder2_3b",
+    "deepseek-v2-236b":      "repro.configs.deepseek_v2_236b",
+    "minicpm3-4b":           "repro.configs.minicpm3_4b",
+    "mamba2-780m":           "repro.configs.mamba2_780m",
+    "deepseek-v2-lite-16b":  "repro.configs.deepseek_v2_lite_16b",
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+
+_cache: Dict[str, ModelConfig] = {}
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    if arch_id not in _cache:
+        if arch_id not in _MODULES:
+            raise KeyError(
+                f"unknown arch {arch_id!r}; known: {sorted(_MODULES)}")
+        _cache[arch_id] = importlib.import_module(_MODULES[arch_id]).CONFIG
+    return _cache[arch_id]
+
+
+def all_configs() -> Dict[str, ModelConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}

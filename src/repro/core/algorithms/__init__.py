@@ -1,0 +1,8 @@
+from repro.core.algorithms.base import ModelFns, tree_size
+from repro.core.algorithms.bsp import BSP
+from repro.core.algorithms.dgc import DGC, WARMUP_SPARSITIES, warmup_sparsity
+from repro.core.algorithms.fedavg import FedAvg
+from repro.core.algorithms.gaia import Gaia
+
+__all__ = ["ModelFns", "tree_size", "BSP", "DGC", "WARMUP_SPARSITIES",
+           "warmup_sparsity", "FedAvg", "Gaia"]

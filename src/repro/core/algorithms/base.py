@@ -1,0 +1,71 @@
+"""Shared machinery for the decentralized learning algorithms.
+
+Simulation backend: K nodes live on one host as a stacked leading axis
+(``vmap`` over nodes).  This is bit-faithful to the paper's algorithms —
+each node sees only its partition's minibatch; cross-node exchange is an
+explicit reduction over the node axis.  The pod-scale distributed backend
+(``repro.launch.steps``) applies the same update transforms across the
+``pod`` mesh axis with collectives.
+
+Every algorithm implements:
+  init(params, mstate)                       -> AlgoState
+  step(state, stacked_batch, lr, step_idx,
+       **dynamic_hypers)                     -> (AlgoState, metrics)
+  eval_params(state)                         -> (params, mstate) global model
+  node_params(state, k)                      -> node k's model
+
+``metrics["comm_floats"]`` counts the floats exchanged this step per node —
+the paper's communication-savings currency (BSP = model size each step).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+tmap = jax.tree_util.tree_map
+
+
+@dataclass(frozen=True)
+class ModelFns:
+    """Model adapter: everything an algorithm needs to know about a model.
+
+    loss_and_grad(params, mstate, batch) -> (loss, grads, new_mstate)
+        where ``batch`` is one node's minibatch (e.g. {"x": ..., "y": ...}).
+    """
+    loss_and_grad: Callable
+
+
+def tree_size(tree: Params) -> int:
+    return sum(l.size for l in jax.tree_util.tree_leaves(tree))
+
+
+def tree_nnz(tree: Params) -> jnp.ndarray:
+    return sum(jnp.sum(l != 0).astype(jnp.float32)
+               for l in jax.tree_util.tree_leaves(tree))
+
+
+def tree_stack_n(tree: Params, k: int) -> Params:
+    return tmap(lambda l: jnp.broadcast_to(l, (k,) + l.shape), tree)
+
+
+def tree_index(tree: Params, i) -> Params:
+    return tmap(lambda l: l[i], tree)
+
+
+def tree_mean0(tree: Params) -> Params:
+    return tmap(lambda l: jnp.mean(l, axis=0), tree)
+
+
+def tree_sum0(tree: Params) -> Params:
+    return tmap(lambda l: jnp.sum(l, axis=0), tree)
+
+
+def pernode_grads(fns: ModelFns, params: Params, mstate: Params,
+                  batch: Params, *, params_stacked: bool):
+    """vmap the node dimension.  batch leaves have leading axis K."""
+    in_axes = (0 if params_stacked else None, 0, 0)
+    return jax.vmap(fns.loss_and_grad, in_axes=in_axes)(params, mstate, batch)

@@ -1,0 +1,58 @@
+"""Divergence probes behind the paper's diagnostic figures.
+
+- Figure 4:  BatchNorm minibatch-mean divergence across partitions.
+- Figure 22: DGC residual update delta ||v/w||.
+- Figure 23: FedAvg local weight update delta at sync points.
+- §4.3 / Fig 21: per-partition model specialization (accuracy on own vs
+  other partitions' label subsets).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.cnn_zoo import CNNConfig
+from repro.models.cnn import cnn_batch_stats
+
+
+def bn_divergence(params, cfg: CNNConfig, node_batches: Sequence[np.ndarray],
+                  layer: int = 0) -> Tuple[np.ndarray, np.ndarray]:
+    """Per-channel divergence of minibatch means/vars between partitions:
+    ||mu_{B,P0} - mu_{B,P1}|| / ||avg(mu)||  (paper's Figure 4 metric,
+    generalized to K nodes as max pairwise over the node axis)."""
+    stats = [cnn_batch_stats(params, cfg, jnp.asarray(b), layer)
+             for b in node_batches]
+    mus = np.stack([np.asarray(m) for m, _ in stats])      # (K, C)
+    vars_ = np.stack([np.asarray(v) for _, v in stats])
+    K = mus.shape[0]
+    def div(x):
+        num = 0.0 * x[0]
+        for i in range(K):
+            for j in range(i + 1, K):
+                num = np.maximum(num, np.abs(x[i] - x[j]))
+        den = np.abs(x.mean(axis=0)) + 1e-8
+        return num / den
+    return div(mus), div(vars_)
+
+
+def model_l2_distance(params_a, params_b) -> float:
+    la = jax.tree_util.tree_leaves(params_a)
+    lb = jax.tree_util.tree_leaves(params_b)
+    num = sum(float(jnp.sum((a - b) ** 2)) for a, b in zip(la, lb))
+    den = sum(float(jnp.sum(a ** 2)) for a in la)
+    return (num / max(den, 1e-12)) ** 0.5
+
+
+def per_class_accuracy(predict_fn, x: np.ndarray, y: np.ndarray,
+                       n_classes: int) -> np.ndarray:
+    """Accuracy per class — exposes Gaia's per-partition specialization
+    (Fig 21): a node's model is accurate on its own classes only."""
+    preds = np.asarray(predict_fn(jnp.asarray(x)))
+    acc = np.zeros(n_classes)
+    for c in range(n_classes):
+        m = y == c
+        acc[c] = (preds[m] == c).mean() if m.any() else np.nan
+    return acc

@@ -1,0 +1,101 @@
+"""SkewScout (paper §7): communication-adaptive decentralized learning.
+
+Periodically (every ``travel_every`` minibatches):
+ 1. *Model traveling*: node k's current model is evaluated on a subset of
+    node j's training data (and vice versa).  Since node k's training
+    accuracy on its own partition is known, the drop is the measured
+    **accuracy loss** AL(θ) — a proxy for model divergence.
+ 2. *Communication control*: minimize Eq. 1,
+        J(θ) = λ_AL · max(0, AL(θ) − σ_AL) + λ_C · C(θ)/CM,
+    over the algorithm's θ ladder with a pluggable tuner (hill climbing by
+    default), where C(θ) is the measured per-step communication since the
+    last travel and CM is the full-model cost (BSP's per-step price).
+
+SkewScout is algorithm-agnostic: anything exposing a dynamic θ knob
+(Gaia t0, FedAvg iter_local, DGC sparsity) plugs in via ``theta_ladder``.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CommConfig
+from repro.core.tuners import make_tuner
+
+# θ ladders, ordered most-communication-heavy -> most-relaxed (paper §4.4)
+THETA_LADDERS = {
+    "gaia": [0.01, 0.02, 0.05, 0.10, 0.20, 0.30, 0.40, 0.50],
+    "fedavg": [1, 2, 5, 10, 20, 50, 100, 200],
+    "dgc": [0.75, 0.9375, 0.984375, 0.996, 0.999],
+}
+
+
+@dataclass
+class TravelReport:
+    step: int
+    theta: Any
+    accuracy_loss: float
+    comm_ratio: float          # C(θ)/CM since last travel (per step)
+    objective: float
+    new_theta: Any
+
+
+class SkewScout:
+    def __init__(self, comm: CommConfig, algo_name: str, model_floats: int,
+                 eval_acc_fn: Callable, *, start_index: Optional[int] = None,
+                 seed: int = 0):
+        """eval_acc_fn(params, mstate, x, y) -> accuracy in [0,1]."""
+        ladder = THETA_LADDERS[algo_name]
+        kw = {} if comm.tuner == "hill" else {"seed": seed}
+        self.tuner = make_tuner(comm.tuner, ladder, start_index=start_index,
+                                **kw)
+        self.comm = comm
+        self.model_floats = float(model_floats)
+        self.eval_acc = eval_acc_fn
+        self._comm_since = 0.0
+        self._steps_since = 0
+        self.history: List[TravelReport] = []
+
+    @property
+    def theta(self):
+        return self.tuner.theta
+
+    def record_step(self, comm_floats: float) -> None:
+        self._comm_since += float(comm_floats)
+        self._steps_since += 1
+
+    def maybe_travel(self, step: int, algo, state,
+                     sample_subset: Callable) -> Optional[TravelReport]:
+        """sample_subset(node) -> (x, y) training subset of that node."""
+        if self._steps_since < self.comm.travel_every:
+            return None
+        K = algo.K
+        # model traveling: each node's model scored at home vs. away
+        losses = []
+        for k in range(K):
+            pk, sk = algo.node_params(state, k)
+            x_home, y_home = sample_subset(k)
+            acc_home = float(self.eval_acc(pk, sk, x_home, y_home))
+            j = (k + 1) % K                      # ring travel (1 hop/probe)
+            x_away, y_away = sample_subset(j)
+            acc_away = float(self.eval_acc(pk, sk, x_away, y_away))
+            losses.append(max(0.0, acc_home - acc_away))
+        al = float(np.mean(losses))
+        c_ratio = (self._comm_since / max(self._steps_since, 1)
+                   ) / self.model_floats
+        obj = (self.comm.lambda_al * max(0.0, al - self.comm.sigma_al)
+               + self.comm.lambda_c * c_ratio)
+        old = self.tuner.theta
+        new = self.tuner.step(obj)
+        rep = TravelReport(step, old, al, c_ratio, obj, new)
+        self.history.append(rep)
+        self._comm_since = 0.0
+        self._steps_since = 0
+        return rep
+
+    def travel_overhead_floats(self) -> float:
+        """Cost of shipping one model per probe (counted against savings)."""
+        return self.model_floats * len(self.history)

@@ -1,0 +1,165 @@
+"""Decentralized training driver (simulation backend, CPU-scale).
+
+This is the harness behind every paper experiment: pick a CNN, a
+partitioning, an algorithm + θ, (optionally) SkewScout — train, track
+communication, and report validation accuracy of the global model.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import CommConfig
+from repro.configs.cnn_zoo import CNNConfig
+from repro.core.algorithms.base import ModelFns, tree_size
+from repro.core.algorithms.bsp import BSP
+from repro.core.algorithms.dgc import DGC, warmup_sparsity
+from repro.core.algorithms.fedavg import FedAvg
+from repro.core.algorithms.gaia import Gaia
+from repro.core.skewscout import SkewScout
+from repro.data.pipeline import DecentralizedLoader
+from repro.models.cnn import cnn_apply, init_cnn
+
+
+# ---------------------------------------------------------------------------
+# CNN adapter
+# ---------------------------------------------------------------------------
+
+def make_cnn_fns(cfg: CNNConfig) -> Tuple[ModelFns, Callable]:
+    def loss_fn(params, mstate, batch):
+        logits, new_ms = cnn_apply(params, mstate, cfg, batch["x"],
+                                   train=True)
+        labels = batch["y"]
+        logp = jax.nn.log_softmax(logits)
+        nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1).mean()
+        return nll, new_ms
+
+    def loss_and_grad(params, mstate, batch):
+        (loss, new_ms), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, mstate, batch)
+        return loss, grads, new_ms
+
+    @jax.jit
+    def eval_acc(params, mstate, x, y):
+        logits, _ = cnn_apply(params, mstate, cfg, x, train=False)
+        return jnp.mean((jnp.argmax(logits, -1) == y).astype(jnp.float32))
+
+    def eval_acc_np(params, mstate, x, y, batch: int = 512):
+        accs, ns = [], []
+        for i in range(0, len(x), batch):
+            xb = jnp.asarray(x[i:i + batch])
+            yb = jnp.asarray(y[i:i + batch])
+            accs.append(float(eval_acc(params, mstate, xb, yb)))
+            ns.append(len(xb))
+        return float(np.average(accs, weights=ns))
+
+    return ModelFns(loss_and_grad=loss_and_grad), eval_acc_np
+
+
+def make_algorithm(name: str, fns: ModelFns, n_nodes: int,
+                   comm: CommConfig, *, momentum: float = 0.9,
+                   weight_decay: float = 5e-4, lr0: Optional[float] = None):
+    if name == "bsp":
+        return BSP(fns, n_nodes, momentum=momentum, weight_decay=weight_decay)
+    if name == "gaia":
+        return Gaia(fns, n_nodes, momentum=momentum,
+                    weight_decay=weight_decay, t0=comm.gaia_t0, lr0=lr0)
+    if name == "fedavg":
+        return FedAvg(fns, n_nodes, momentum=momentum,
+                      weight_decay=weight_decay, iter_local=comm.iter_local)
+    if name == "dgc":
+        return DGC(fns, n_nodes, momentum=momentum,
+                   weight_decay=weight_decay, clip=comm.dgc_clip,
+                   sparsity=comm.dgc_sparsity)
+    raise ValueError(name)
+
+
+@dataclass
+class RunResult:
+    name: str
+    val_acc: float
+    val_acc_curve: List[Tuple[int, float]]
+    loss_curve: List[Tuple[int, float]]
+    comm_total_floats: float
+    bsp_equiv_floats: float
+    comm_savings: float
+    skewscout_history: List = field(default_factory=list)
+    extras: Dict[str, Any] = field(default_factory=dict)
+
+
+def train_decentralized(cnn_cfg: CNNConfig, algo_name: str,
+                        parts: Sequence[Tuple[np.ndarray, np.ndarray]],
+                        val: Tuple[np.ndarray, np.ndarray], *,
+                        comm: CommConfig = CommConfig(),
+                        steps: int = 400, batch: int = 20,
+                        lr_schedule: Callable = None, lr: float = 0.05,
+                        momentum: float = 0.9, weight_decay: float = 5e-4,
+                        eval_every: int = 100, seed: int = 0,
+                        theta_start_index: Optional[int] = None
+                        ) -> RunResult:
+    K = len(parts)
+    fns, eval_acc = make_cnn_fns(cnn_cfg)
+    params, mstate = init_cnn(jax.random.PRNGKey(seed), cnn_cfg)
+    algo = make_algorithm(algo_name, fns, K, comm, momentum=momentum,
+                          weight_decay=weight_decay, lr0=lr)
+    state = algo.init(params, mstate)
+    loader = DecentralizedLoader(parts, batch, seed=seed)
+    lr_fn = lr_schedule or (lambda s: lr)
+
+    scout = None
+    if comm.skewscout and algo_name != "bsp":
+        scout = SkewScout(comm, algo_name, tree_size(params), eval_acc,
+                          start_index=theta_start_index, seed=seed)
+
+    loss_curve, acc_curve = [], []
+    comm_total = 0.0
+    steps_per_epoch = loader.steps_per_epoch
+
+    for t in range(steps):
+        xs, ys = loader.next_stacked()
+        sbatch = {"x": jnp.asarray(xs), "y": jnp.asarray(ys)}
+        lr_t = jnp.asarray(lr_fn(t), jnp.float32)
+        kw: Dict[str, Any] = {}
+        if algo_name == "gaia":
+            kw["t0"] = jnp.asarray(scout.theta if scout else comm.gaia_t0,
+                                   jnp.float32)
+        elif algo_name == "fedavg":
+            kw["iter_local"] = jnp.asarray(
+                scout.theta if scout else comm.iter_local, jnp.int32)
+        elif algo_name == "dgc":
+            epoch = t // steps_per_epoch
+            s = (scout.theta if scout
+                 else warmup_sparsity(epoch, comm.dgc_warmup_epochs))
+            kw["sparsity"] = jnp.asarray(s, jnp.float32)
+        state, metrics = algo.step(state, sbatch, lr_t,
+                                   jnp.asarray(t, jnp.int32), **kw)
+        cf = float(metrics["comm_floats"])
+        comm_total += cf
+        if scout:
+            scout.record_step(cf)
+            rep = scout.maybe_travel(
+                t, algo, state,
+                lambda node: loader.sample_train_subset(node, 256, seed=t))
+            if rep is not None:
+                comm_total += tree_size(params)  # model traveling overhead
+        if (t + 1) % eval_every == 0 or t == steps - 1:
+            p, s = algo.eval_params(state)
+            acc = eval_acc(p, s, val[0], val[1])
+            acc_curve.append((t + 1, acc))
+        loss_curve.append((t, float(metrics["loss"])))
+
+    bsp_equiv = float(tree_size(params)) * steps
+    return RunResult(
+        name=f"{cnn_cfg.name}/{algo_name}",
+        val_acc=acc_curve[-1][1],
+        val_acc_curve=acc_curve,
+        loss_curve=loss_curve,
+        comm_total_floats=comm_total,
+        bsp_equiv_floats=bsp_equiv,
+        comm_savings=bsp_equiv / max(comm_total, 1.0),
+        skewscout_history=list(scout.history) if scout else [],
+    )

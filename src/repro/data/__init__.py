@@ -1,0 +1,6 @@
+from repro.data.pipeline import DecentralizedLoader, PartitionLoader
+from repro.data.synthetic import (ImageDataset, TokenDataset, synth_geo_images,
+                                  synth_images, synth_tokens)
+
+__all__ = ["DecentralizedLoader", "PartitionLoader", "ImageDataset",
+           "TokenDataset", "synth_geo_images", "synth_images", "synth_tokens"]

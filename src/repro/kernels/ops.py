@@ -1,0 +1,70 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True off-TPU so the same call sites work in this
+CPU container; on TPU backends the compiled Mosaic path is used.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import dgc_topk as _dgc
+from repro.kernels import flash_attention as _fa
+from repro.kernels import gaia_select as _gaia
+from repro.kernels import group_norm as _gn
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "logit_softcap", "scale", "block_q", "block_k",
+    "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    logit_softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    interpret = _default_interpret() if interpret is None else interpret
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window, logit_softcap=logit_softcap,
+        scale=scale, block_q=block_q, block_k=block_k, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def gaia_select(v, w, threshold, *, block_rows: int = 64,
+                interpret: Optional[bool] = None):
+    interpret = _default_interpret() if interpret is None else interpret
+    return _gaia.gaia_select(v, w, threshold, block_rows=block_rows,
+                             interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("n_bins", "block_rows",
+                                             "interpret"))
+def dgc_sparsify(v, sparsity, *, n_bins: int = 256, block_rows: int = 64,
+                 interpret: Optional[bool] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full DGC top-s%: histogram -> threshold -> select.
+    Returns (selected, count, threshold)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    v_max = jnp.max(jnp.abs(v)).astype(jnp.float32)
+    hist = _dgc.abs_histogram(v, v_max, n_bins=n_bins,
+                              block_rows=block_rows, interpret=interpret)
+    t = _dgc.threshold_from_histogram(hist, v_max, sparsity)
+    sel, cnt = _dgc.dgc_select(v, t, block_rows=block_rows,
+                               interpret=interpret)
+    return sel, cnt, t
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "eps",
+                                             "interpret"))
+def group_norm(x, scale, bias, *, group_size: int = 2, eps: float = 1e-5,
+               interpret: Optional[bool] = None) -> jnp.ndarray:
+    interpret = _default_interpret() if interpret is None else interpret
+    return _gn.group_norm(x, scale, bias, group_size=group_size, eps=eps,
+                          interpret=interpret)

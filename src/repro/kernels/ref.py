@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for every Pallas kernel.  Tests assert_allclose the
+kernels (interpret=True on CPU) against these."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                        causal: bool = True,
+                        window: Optional[int] = None,
+                        logit_softcap: Optional[float] = None,
+                        scale: Optional[float] = None) -> jnp.ndarray:
+    """q: (B, H, Tq, D); k/v: (B, H, Tk, D).  Materialized-softmax oracle."""
+    B, H, Tq, D = q.shape
+    Tk = k.shape[2]
+    scale = D ** -0.5 if scale is None else scale
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if logit_softcap is not None:
+        s = logit_softcap * jnp.tanh(s / logit_softcap)
+    q_pos = jnp.arange(Tq) + (Tk - Tq)
+    k_pos = jnp.arange(Tk)
+    valid = jnp.ones((Tq, Tk), bool)
+    if causal:
+        valid &= k_pos[None, :] <= q_pos[:, None]
+    if window is not None:
+        valid &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(valid[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def gaia_select_ref(v: jnp.ndarray, w: jnp.ndarray, threshold: float
+                    ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Significance filter |v| > T*|w|.  Returns (selected, n_selected)."""
+    mask = jnp.abs(v) > threshold * jnp.abs(w)
+    return v * mask.astype(v.dtype), jnp.sum(mask).astype(jnp.int32)
+
+
+def dgc_threshold_ref(v: jnp.ndarray, sparsity: float) -> jnp.ndarray:
+    """Exact top-(1-sparsity) magnitude threshold (quantile)."""
+    return jnp.quantile(jnp.abs(v).reshape(-1).astype(jnp.float32), sparsity)
+
+
+def dgc_select_ref(v: jnp.ndarray, threshold: jnp.ndarray
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    mask = jnp.abs(v) > threshold
+    return v * mask.astype(v.dtype), jnp.sum(mask).astype(jnp.int32)
+
+
+def abs_histogram_ref(v: jnp.ndarray, n_bins: int, v_max: jnp.ndarray
+                      ) -> jnp.ndarray:
+    """Histogram of |v| over [0, v_max] with n_bins linear bins (clamped)."""
+    a = jnp.abs(v.reshape(-1)).astype(jnp.float32)
+    idx = jnp.clip((a / jnp.maximum(v_max, 1e-30) * n_bins).astype(jnp.int32),
+                   0, n_bins - 1)
+    return jnp.zeros((n_bins,), jnp.int32).at[idx].add(1)
+
+
+def group_norm_ref(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, *,
+                   group_size: int, eps: float = 1e-5) -> jnp.ndarray:
+    """x: (B, H, W, C) NHWC; groups of ``group_size`` adjacent channels."""
+    B, H, W, C = x.shape
+    G = C // group_size
+    xg = x.astype(jnp.float32).reshape(B, H * W, G, group_size)
+    mu = jnp.mean(xg, axis=(1, 3), keepdims=True)
+    var = jnp.var(xg, axis=(1, 3), keepdims=True)
+    y = (xg - mu) * jax.lax.rsqrt(var + eps)
+    y = y.reshape(B, H, W, C) * scale + bias
+    return y.astype(x.dtype)

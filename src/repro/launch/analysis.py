@@ -1,0 +1,136 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs   / (chips * peak_FLOP/s)
+  memory term     = HLO_bytes   / (chips * HBM_bw)
+  collective term = collective_bytes / (chips * link_bw)
+
+HLO_FLOPs/bytes come from ``compiled.cost_analysis()``; collective bytes are
+parsed from the optimized HLO text (all-gather / all-reduce / reduce-scatter
+/ all-to-all / collective-permute operand sizes).
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %all-reduce.5 = f32[2,1024,512]{2,1,0} all-reduce(...)
+#        ROOT %x = (f32[8]{0}, f32[4]{0}) all-gather-start(...)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(\([^)]*\)|\S+)\s+(all-gather|all-reduce|reduce-scatter|"
+    r"all-to-all|collective-permute)(?:-start)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output bytes per collective kind over the optimized HLO."""
+    out = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue                      # avoid double count of async pairs
+        m = _OP_RE.search(line)
+        if not m:
+            continue
+        out[m.group(2)] += _shape_bytes(m.group(1))
+    return out
+
+
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    hlo_gflops: float                    # total, all chips
+    hlo_gbytes: float
+    coll_gbytes: float
+    coll_breakdown: Dict[str, float]
+    t_compute: float                     # seconds
+    t_memory: float
+    t_collective: float
+    bottleneck: str
+    model_gflops: float                  # 6*N*D (or 6*N_active*D)
+    useful_ratio: float                  # model_flops / hlo_flops
+    bytes_per_device: Optional[float] = None
+    note: str = ""
+
+    def table_row(self) -> str:
+        return (f"| {self.arch} | {self.shape} | {self.mesh} | "
+                f"{self.t_compute*1e3:.2f} | {self.t_memory*1e3:.2f} | "
+                f"{self.t_collective*1e3:.2f} | {self.bottleneck} | "
+                f"{self.useful_ratio:.2f} |")
+
+
+def derive_roofline(arch: str, shape: str, mesh_name: str, n_chips: int,
+                    cost: Dict, hlo_text: str, model_flops: float,
+                    bytes_per_device: Optional[float] = None,
+                    note: str = "") -> Roofline:
+    # trip-count-aware per-device analysis (XLA's cost_analysis visits
+    # while bodies once — useless for scan-over-layers programs)
+    from repro.launch import hlo_analysis
+    hc = hlo_analysis.analyze(hlo_text)
+    flops = hc.flops
+    byts = hc.bytes_accessed
+    colls = hc.collective_bytes
+    coll_total = float(hc.coll_total)
+    t_c = flops / PEAK_FLOPS
+    t_m = byts / HBM_BW
+    t_x = coll_total / ICI_BW
+    terms = {"compute": t_c, "memory": t_m, "collective": t_x}
+    bottleneck = max(terms, key=terms.get)
+    per_dev_model_flops = model_flops / n_chips
+    return Roofline(
+        arch=arch, shape=shape, mesh=mesh_name, n_chips=n_chips,
+        hlo_gflops=flops / 1e9, hlo_gbytes=byts / 1e9,
+        coll_gbytes=coll_total / 1e9,
+        coll_breakdown={k: v / 1e9 for k, v in colls.items()},
+        t_compute=t_c, t_memory=t_m, t_collective=t_x,
+        bottleneck=bottleneck,
+        model_gflops=per_dev_model_flops / 1e9,
+        useful_ratio=(per_dev_model_flops / flops) if flops else 0.0,
+        bytes_per_device=bytes_per_device,
+        note=note)
+
+
+def model_flops_estimate(cfg, shape, mode: str) -> float:
+    """MODEL_FLOPS = 6*N*D for training, 2*N*D for inference
+    (N = active params, D = tokens processed)."""
+    n_active = cfg.n_active_params()
+    if mode == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if mode == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens
+    tokens = shape.global_batch                      # one token per request
+    return 2.0 * n_active * tokens

@@ -1,0 +1,231 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape)
+combination on the production meshes, record memory / cost / collective
+analysis for the roofline report.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-0.6b \
+      --shape train_4k [--multi-pod] [--strategy gaia] [--out report.json]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+import argparse
+import json
+import sys
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CommConfig, INPUT_SHAPES
+from repro.configs.registry import ARCH_IDS, get_config
+from repro.launch import analysis
+from repro.launch.mesh import make_production_mesh, n_pods as mesh_n_pods
+from repro.launch.sharding import (batch_shardings, cache_shardings,
+                                   param_shardings, replicated)
+from repro.launch.specs import input_specs
+from repro.launch.steps import (make_prefill_step, make_serve_step,
+                                make_train_step, train_state_shape)
+from repro.models.model import init_cache, init_model
+from repro.models.shard_hints import activation_sharding
+
+SDS = jax.ShapeDtypeStruct
+
+
+def _with_shardings(shapes, shardings):
+    return jax.tree_util.tree_map(
+        lambda sh, ns: SDS(sh.shape, sh.dtype, sharding=ns),
+        shapes, shardings)
+
+
+def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
+               strategy: str = "gaia", chunk: int = 512,
+               remat: bool = True, verbose: bool = True,
+               return_hlo: bool = False) -> Dict:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    pods = mesh_n_pods(mesh)
+    mesh_name = "x".join(str(s) for s in mesh.devices.shape)
+    comm = CommConfig(strategy=strategy)
+    long_mode = shape_name == "long_500k"
+
+    with mesh, activation_sharding(mesh):
+        if shape.mode == "train":
+            state_shape = train_state_shape(cfg, comm, pods)
+            state_shardings = {
+                k: param_shardings(v, mesh, stacked=True)
+                for k, v in state_shape.items()}
+            batch_shapes = input_specs(cfg, shape_name, n_pods=pods)
+            b_shardings = batch_shardings(batch_shapes, mesh,
+                                          pod_stacked=True)
+            step = make_train_step(cfg, comm, remat=remat, chunk=chunk)
+            jitted = jax.jit(
+                step,
+                in_shardings=(state_shardings, b_shardings, None),
+                donate_argnums=(0,))
+            args = (_with_shardings(state_shape, state_shardings),
+                    _with_shardings(batch_shapes, b_shardings),
+                    SDS((), jnp.int32))
+        elif shape.mode == "prefill":
+            p_shape = jax.eval_shape(
+                lambda: init_model(jax.random.PRNGKey(0), cfg))
+            p_shardings = param_shardings(p_shape, mesh)
+            batch_shapes = input_specs(cfg, shape_name)
+            b_shardings = batch_shardings(batch_shapes, mesh,
+                                          pod_stacked=False)
+            step = make_prefill_step(cfg, chunk=chunk)
+            jitted = jax.jit(step, in_shardings=(p_shardings, b_shardings))
+            args = (_with_shardings(p_shape, p_shardings),
+                    _with_shardings(batch_shapes, b_shardings))
+        else:  # decode
+            p_shape = jax.eval_shape(
+                lambda: init_model(jax.random.PRNGKey(0), cfg))
+            p_shardings = param_shardings(p_shape, mesh)
+            cache_shape = jax.eval_shape(
+                lambda: init_cache(cfg, shape.global_batch, shape.seq_len,
+                                   long_mode))
+            c_shardings = cache_shardings(
+                cache_shape, mesh, batch_sharded=shape.global_batch >= 8)
+            batch_shapes = input_specs(cfg, shape_name)
+            b_shardings = batch_shardings(batch_shapes, mesh,
+                                          pod_stacked=False)
+            step = make_serve_step(cfg)
+            jitted = jax.jit(
+                step, in_shardings=(p_shardings, c_shardings, b_shardings),
+                donate_argnums=(1,))
+            args = (_with_shardings(p_shape, p_shardings),
+                    _with_shardings(cache_shape, c_shardings),
+                    _with_shardings(batch_shapes, b_shardings))
+
+        lowered = jitted.lower(*args)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+
+    n_chips = mesh.devices.size
+    per_dev_bytes = None
+    mem_summary = {}
+    if mem is not None:
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "generated_code_size_in_bytes",
+                     "alias_size_in_bytes"):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                mem_summary[attr] = int(v)
+        per_dev_bytes = (mem_summary.get("argument_size_in_bytes", 0)
+                         + mem_summary.get("temp_size_in_bytes", 0)
+                         - mem_summary.get("alias_size_in_bytes", 0))
+    mf = analysis.model_flops_estimate(cfg, shape, shape.mode)
+    roof = analysis.derive_roofline(
+        arch, shape_name, mesh_name, n_chips, cost or {}, hlo, mf,
+        bytes_per_device=per_dev_bytes)
+    report = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "mode": shape.mode, "strategy": strategy if shape.mode == "train"
+        else None,
+        "ok": True,
+        "memory": mem_summary,
+        "cost": {k: float(v) for k, v in (cost or {}).items()
+                 if isinstance(v, (int, float))},
+        "roofline": {
+            "t_compute_ms": roof.t_compute * 1e3,
+            "t_memory_ms": roof.t_memory * 1e3,
+            "t_collective_ms": roof.t_collective * 1e3,
+            "bottleneck": roof.bottleneck,
+            "hlo_gflops_per_dev": roof.hlo_gflops,
+            "hlo_gbytes_per_dev": roof.hlo_gbytes,
+            "coll_gbytes_per_dev": roof.coll_gbytes,
+            "coll_breakdown_gb": roof.coll_breakdown,
+            "model_gflops_per_dev": roof.model_gflops,
+            "useful_ratio": roof.useful_ratio,
+        },
+    }
+    if return_hlo:
+        report["_hlo"] = hlo
+    if verbose:
+        print(f"[dryrun] {arch} x {shape_name} on {mesh_name}: OK  "
+              f"bottleneck={roof.bottleneck} "
+              f"t=(c {roof.t_compute*1e3:.2f} / m {roof.t_memory*1e3:.2f} / "
+              f"x {roof.t_collective*1e3:.2f}) ms  "
+              f"useful={roof.useful_ratio:.2f}")
+        if mem_summary:
+            print(f"         memory: {json.dumps(mem_summary)}")
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
+    ap.add_argument("--shape", default=None,
+                    choices=list(INPUT_SHAPES) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--strategy", default="gaia",
+                    choices=["bsp", "gaia", "fedavg", "dgc"])
+    ap.add_argument("--chunk", type=int, default=512)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--outdir", default=None,
+                    help="per-combo JSON dir; existing results are skipped")
+    ap.add_argument("--save-hlo", action="store_true",
+                    help="gzip the partitioned HLO next to each JSON")
+    args = ap.parse_args(argv)
+
+    combos = []
+    if args.all:
+        for a in ARCH_IDS:
+            for s in INPUT_SHAPES:
+                combos.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos = [(args.arch, args.shape)]
+
+    reports, failures = [], []
+    for a, s in combos:
+        tag = f"{a}__{s}__{'multi' if args.multi_pod else 'single'}"
+        path = os.path.join(args.outdir, tag + ".json") if args.outdir else None
+        if path and os.path.exists(path):
+            with open(path) as f:
+                rep = json.load(f)
+            (reports if rep.get("ok") else failures).append(rep)
+            print(f"[dryrun] {tag}: cached ({'ok' if rep.get('ok') else 'FAILED'})")
+            continue
+        try:
+            rep = dryrun_one(
+                a, s, multi_pod=args.multi_pod, strategy=args.strategy,
+                chunk=args.chunk, remat=not args.no_remat,
+                return_hlo=args.save_hlo)
+            if args.save_hlo and "_hlo" in rep:
+                import gzip
+                if args.outdir:
+                    os.makedirs(args.outdir, exist_ok=True)
+                    with gzip.open(os.path.join(
+                            args.outdir, tag + ".hlo.gz"), "wt") as f:
+                        f.write(rep.pop("_hlo"))
+                else:
+                    rep.pop("_hlo")
+            reports.append(rep)
+        except Exception as e:  # noqa: BLE001 — report and continue
+            traceback.print_exc()
+            rep = {"arch": a, "shape": s, "ok": False,
+                   "error": f"{type(e).__name__}: {e}"}
+            failures.append(rep)
+        if path:
+            os.makedirs(args.outdir, exist_ok=True)
+            with open(path, "w") as f:
+                json.dump(rep, f, indent=1)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(reports + failures, f, indent=1)
+    print(f"[dryrun] {len(reports)} ok, {len(failures)} failed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

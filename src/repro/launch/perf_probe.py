@@ -1,0 +1,51 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+"""Perf probe: compile one (arch x shape) combo and print the top
+collective / HBM-byte buckets attributed by op_name — the 'profile' that
+drives §Perf hypothesis generation (no real hardware; the lowered IR is
+the evidence).
+
+  PYTHONPATH=src python -m repro.launch.perf_probe --arch X --shape Y \
+      [--multi-pod] [--strategy gaia] [--chunk 512] [--no-remat]
+"""
+import argparse
+import sys
+
+from repro.launch import hlo_analysis
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--strategy", default="gaia")
+    ap.add_argument("--chunk", type=int, default=512)
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--top", type=int, default=14)
+    args = ap.parse_args(argv)
+
+    # late import so XLA_FLAGS is already set
+    from repro.launch.dryrun import dryrun_one
+    import repro.launch.dryrun as dr
+    import jax
+
+    # reuse dryrun_one but capture the HLO for bucket analysis
+    from repro.configs.base import INPUT_SHAPES
+    rep = dryrun_one(args.arch, args.shape, multi_pod=args.multi_pod,
+                     strategy=args.strategy, chunk=args.chunk,
+                     remat=not args.no_remat, verbose=True,
+                     return_hlo=True)
+    hc = hlo_analysis.analyze(rep["_hlo"])
+    print(f"\n== top collective buckets (GB/device/step) ==")
+    for name, b in hc.top_collectives(args.top):
+        print(f"  {b/1e9:10.3f}  {name}")
+    print(f"\n== top HBM-byte buckets (GB/device/step) ==")
+    for name, b in hc.top_bytes(args.top):
+        print(f"  {b/1e9:10.3f}  {name}")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

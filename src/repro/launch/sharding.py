@@ -1,0 +1,188 @@
+"""Parameter/activation sharding rules.
+
+2D scheme inside each pod: FSDP-style sharding over ``data`` + tensor/expert
+parallelism over ``model``:
+
+- in-projections (d -> heads*hd / ff):     (data, model)   [out-dim TP]
+- out-projections (heads*hd / ff -> d):    (model, data)   [in-dim TP]
+- embedding (vocab, d):                    (model, data)   [vocab TP]
+- MoE stacked experts (E, d, ff):          (model, data, None)  [expert par.]
+- norms / biases / small vectors:          replicated
+- the decentralized-site axis ``pod`` shards the *stacked replica* dimension
+  that ``steps.make_train_state`` prepends.
+
+Rules match on the flattened path string (e.g. "body/0/mixer/wq/w") plus
+leaf rank, so they cover every arch family without per-model tables.
+"""
+from __future__ import annotations
+
+import os
+import re
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Params = Any
+
+# (regex, spec-builder(shape) -> PartitionSpec) — first match wins.
+# Specs are written for the *unstacked* leaf; a leading axis entry is
+# prepended for pod-stacked training state.
+_IN_PROJ = r"(wq|wk|wv|wuq|wdq|wdkv|gate|up|in_proj|in_x|in_gate|wuq)"
+_OUT_PROJ = r"(wo|down|out_proj|out)"
+
+
+def _dims_ok(shape, spec) -> bool:
+    return len(spec) <= len(shape)
+
+
+def rule_spec(path: str, shape: Tuple[int, ...]) -> P:
+    ndim = len(shape)
+    if ndim <= 1 or min(shape) == 1:
+        return P()                                   # scalars/vectors/norms
+    # embedding / unembed
+    if re.search(r"embed/table$|table$", path):
+        return P("model", "data")
+    if re.search(r"unembed/w$", path):
+        return P("data", "model")
+    # MoE stacked experts (E, d, ff) / (E, ff, d)
+    if re.search(r"ffn/w_(gate|up|down)$", path) and ndim == 3:
+        return P("model", "data", None)
+    # MLA 3D up-projection (r, h, nope+v): shard heads
+    if re.search(r"wukv$", path) and ndim == 3:
+        return P(None, "model", None)
+    # conv kernels (K, Ch): shard channels
+    if re.search(r"conv_w$", path) and ndim == 2:
+        return P(None, "model")
+    # output projections: TP on the input dim
+    if re.search(_OUT_PROJ + r"/w$", path) and ndim == 2:
+        return P("model", "data")
+    # input projections and everything else 2D: TP on the output dim
+    if ndim == 2:
+        return P("data", "model")
+    return P()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def _clamp_spec(spec: P, shape, mesh: Mesh) -> P:
+    """Drop sharding on dims the mesh can't divide (tiny reduced configs)."""
+    out = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        if ax is None:
+            out.append(None)
+            continue
+        size = np.prod([mesh.shape[a] for a in
+                        (ax if isinstance(ax, tuple) else (ax,))])
+        out.append(ax if dim % size == 0 and dim >= size else None)
+    return P(*out)
+
+
+def param_shardings(params_shape: Params, mesh: Mesh, *,
+                    stacked: bool = False) -> Params:
+    """NamedSharding pytree for a params(-shaped) tree.  ``stacked``: the
+    tree has a prepended replica dimension (pod-site stacking in training
+    state) — sharded over ``pod`` when the mesh has that axis."""
+    stack_axis = "pod" if (stacked and "pod" in mesh.axis_names) else None
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    out = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        shape = leaf.shape
+        segs = ps.split("/")
+        # scan-stacked layer cycles carry a leading cycle axis
+        cycle_stacked = "body" in segs or "layers" in segs
+        lead: Tuple = ()
+        if stacked:
+            lead += (stack_axis,)
+            shape = shape[1:]
+        if cycle_stacked:
+            lead += (None,)
+            shape = shape[1:]
+        base = rule_spec(ps, shape)
+        spec = P(*lead, *tuple(base))
+        spec = _clamp_spec(spec, leaf.shape, mesh)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def cache_shardings(cache_shape: Params, mesh: Mesh, *,
+                    batch_sharded: bool) -> Params:
+    """Decode-cache shardings.  KV caches are (B, L, H, hd) (+ an optional
+    leading stacked-cycle axis).  When the batch is big enough it shards
+    over ``data``; for global_batch=1 (long_500k) the cache *length* dim
+    shards over ``data`` instead (sequence sharding)."""
+    def spec_for(path: str, shape) -> P:
+        nd = len(shape)
+        stacked = path.startswith("body")        # leading cycle axis
+        off = 1 if stacked else 0
+        dims = [None] * nd
+        if "pos" in path:                        # (B, L) int positions
+            if batch_sharded:
+                dims[off] = "data"
+            elif nd - off >= 2:
+                dims[off + 1] = "data"
+            return P(*dims)
+        if nd - off >= 3:                        # kv / ckv / conv / ssd
+            if batch_sharded:
+                dims[off] = "data"
+                # attention caches (k/v/ckv/krope): shard LENGTH over model
+                # (flash-decode); ssm/conv states: shard channel/head dims
+                if not os.environ.get("REPRO_BASELINE_DECODE") and any(
+                        t in path for t in ("/k", "/v", "ckv", "krope")):
+                    dims[off + 1] = "model"
+                elif nd - off >= 4:
+                    dims[off + 2] = "model"
+            else:
+                dims[off + 1] = "data"           # shard length/heads dim
+                if nd - off >= 4:
+                    dims[off + 2] = "model"
+        elif nd - off == 2:                      # (B, w) rglru h state
+            if batch_sharded:
+                dims[off] = "data"
+            else:
+                dims[off + 1] = "model"
+        return P(*dims)
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    out = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        spec = _clamp_spec(spec_for(ps, leaf.shape), leaf.shape, mesh)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_shardings(batch_shape: Params, mesh: Mesh, *,
+                    pod_stacked: bool) -> Params:
+    """Input batches: leading (pod?, batch) dims shard over (pod?, data)."""
+    def spec_for(shape) -> P:
+        nd = len(shape)
+        dims = [None] * nd
+        i = 0
+        if pod_stacked:
+            dims[0] = "pod" if "pod" in mesh.axis_names else None
+            i = 1
+        if nd > i and shape[i] > 1:
+            dims[i] = "data"
+        return P(*dims)
+    return jax.tree_util.tree_map(
+        lambda l: NamedSharding(mesh, _clamp_spec(spec_for(l.shape),
+                                                  l.shape, mesh)),
+        batch_shape)
+
+
+def replicated(tree: Params, mesh: Mesh) -> Params:
+    return jax.tree_util.tree_map(
+        lambda _: NamedSharding(mesh, P()), tree)

@@ -1,0 +1,77 @@
+"""ShapeDtypeStruct stand-ins for every model input — weak-type-correct,
+shardable, no device allocation.  The dry-run lowers against these."""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import INPUT_SHAPES, InputShape, ModelConfig
+
+SDS = jax.ShapeDtypeStruct
+
+
+def text_len(cfg: ModelConfig, seq_len: int) -> int:
+    """VLM: vision patch tokens occupy part of the sequence budget."""
+    if cfg.modality.kind == "vision":
+        return seq_len - cfg.modality.n_tokens
+    return seq_len
+
+
+def train_batch_specs(cfg: ModelConfig, shape: InputShape, *,
+                      n_pods: int = 1) -> Dict[str, SDS]:
+    assert shape.global_batch % n_pods == 0, (shape.global_batch, n_pods)
+    b = shape.global_batch // n_pods
+    T = text_len(cfg, shape.seq_len)
+    specs: Dict[str, SDS] = {
+        "tokens": SDS((n_pods, b, T), jnp.int32),
+        "labels": SDS((n_pods, b, T), jnp.int32),
+    }
+    if cfg.modality.kind == "vision":
+        specs["patches"] = SDS(
+            (n_pods, b, cfg.modality.n_tokens, cfg.modality.feat_dim),
+            jnp.bfloat16)
+    if cfg.encoder is not None:
+        specs["frames"] = SDS(
+            (n_pods, b, cfg.encoder.n_frames, cfg.modality.feat_dim),
+            jnp.bfloat16)
+    return specs
+
+
+def prefill_batch_specs(cfg: ModelConfig, shape: InputShape
+                        ) -> Dict[str, SDS]:
+    b = shape.global_batch
+    T = text_len(cfg, shape.seq_len)
+    specs: Dict[str, SDS] = {"tokens": SDS((b, T), jnp.int32)}
+    if cfg.modality.kind == "vision":
+        specs["patches"] = SDS(
+            (b, cfg.modality.n_tokens, cfg.modality.feat_dim), jnp.bfloat16)
+    if cfg.encoder is not None:
+        specs["frames"] = SDS(
+            (b, cfg.encoder.n_frames, cfg.modality.feat_dim), jnp.bfloat16)
+    return specs
+
+
+def decode_batch_specs(cfg: ModelConfig, shape: InputShape
+                       ) -> Dict[str, SDS]:
+    b = shape.global_batch
+    specs: Dict[str, SDS] = {
+        "token": SDS((b,), jnp.int32),
+        "t": SDS((b,), jnp.int32),
+    }
+    if cfg.encoder is not None:
+        # encoder memory precomputed at prefill time
+        specs["frames"] = SDS(
+            (b, cfg.encoder.n_frames, cfg.modality.feat_dim), jnp.bfloat16)
+    return specs
+
+
+def input_specs(cfg: ModelConfig, shape_name: str, *, n_pods: int = 1
+                ) -> Dict[str, SDS]:
+    shape = INPUT_SHAPES[shape_name]
+    if shape.mode == "train":
+        return train_batch_specs(cfg, shape, n_pods=n_pods)
+    if shape.mode == "prefill":
+        return prefill_batch_specs(cfg, shape)
+    return decode_batch_specs(cfg, shape)

@@ -1,0 +1,194 @@
+"""Distributed train/serve steps with the paper's communication strategies
+as a first-class stage.
+
+The decentralized-site axis is the mesh ``pod`` axis.  Training state holds
+*pod-stacked* model replicas — leaf shapes (n_pods, ...) sharded
+P('pod', ...) — so each pod trains its own replica on its own data shard
+(vmap over the stacked axis keeps all intra-pod collectives pod-local), and
+the cross-pod exchange is an explicit reduction over axis 0, which GSPMD
+lowers to collectives on the scarce cross-pod links:
+
+  bsp:    grads averaged across pods every step (the quality target)
+  gaia:   |accumulated update / weight| > T  -> masked psum (Algorithm 1)
+  fedavg: params averaged across pods every Iter_local steps (Algorithm 2)
+  dgc:    top-s% magnitude of accumulated -lr*grad momentum, via a
+          256-bin histogram threshold — the TPU-native replacement for
+          sort-based selection (Algorithm 3)
+
+This is the *same arithmetic* as repro.core.algorithms (tested equivalent),
+re-expressed for the SPMD path.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import CommConfig, ModelConfig
+from repro.models.model import decode_step, forward, loss_fn
+
+Params = Any
+tmap = jax.tree_util.tree_map
+
+
+# ---------------------------------------------------------------------------
+# Train state
+# ---------------------------------------------------------------------------
+
+def make_train_state(params: Params, comm: CommConfig, n_pods: int) -> Dict:
+    """Stack replicas over the pod axis; fp32 master velocity."""
+    stack = lambda l: jnp.broadcast_to(l, (n_pods,) + l.shape)
+    state = {
+        "params": tmap(stack, params),
+        "vel": tmap(lambda l: jnp.zeros((n_pods,) + l.shape, jnp.float32),
+                    params),
+    }
+    if comm.strategy in ("gaia", "dgc"):
+        state["acc"] = tmap(
+            lambda l: jnp.zeros((n_pods,) + l.shape, jnp.float32), params)
+    return state
+
+
+def train_state_shape(cfg: ModelConfig, comm: CommConfig, n_pods: int
+                      ) -> Dict:
+    from repro.models.model import init_model
+    p_shape = jax.eval_shape(
+        lambda: init_model(jax.random.PRNGKey(0), cfg))
+    return jax.eval_shape(
+        lambda p: make_train_state(p, comm, n_pods), p_shape)
+
+
+# ---------------------------------------------------------------------------
+# Histogram-quantile threshold (pure jnp twin of kernels/dgc_topk)
+# ---------------------------------------------------------------------------
+
+def hist_threshold(v: jnp.ndarray, sparsity: jnp.ndarray,
+                   n_bins: int = 256) -> jnp.ndarray:
+    a = jnp.abs(v.reshape(-1)).astype(jnp.float32)
+    vmax = jnp.maximum(jnp.max(a), 1e-30)
+    idx = jnp.clip((a / vmax * n_bins).astype(jnp.int32), 0, n_bins - 1)
+    hist = jnp.zeros((n_bins,), jnp.int32).at[idx].add(1)
+    cum = jnp.cumsum(hist).astype(jnp.float32)
+    target = sparsity * a.shape[0]
+    bin_idx = jnp.clip(jnp.searchsorted(cum, target), 0, n_bins - 1)
+    return (bin_idx.astype(jnp.float32) + 1.0) / n_bins * vmax
+
+
+# ---------------------------------------------------------------------------
+# Train step
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, comm: CommConfig, *,
+                    lr: float = 1e-3, momentum: float = 0.9,
+                    weight_decay: float = 0.0,
+                    remat: bool = True, chunk: int = 512) -> Callable:
+    """Returns train_step(state, batch, step_idx) -> (state, metrics).
+    ``batch`` leaves are (n_pods, b, ...)."""
+
+    def pod_loss(params, batch):
+        loss, parts = loss_fn(params, cfg, batch, remat=remat, chunk=chunk)
+        return loss
+
+    grad_fn = jax.value_and_grad(pod_loss)
+
+    def local_sgd(params, grads, vel):
+        """Per-pod momentum step.  Returns (params, vel, update)."""
+        def upd(w, g, u):
+            g32 = g.astype(jnp.float32) + weight_decay * w.astype(jnp.float32)
+            return momentum * u - lr * g32
+        vel = tmap(upd, params, grads, vel)
+        params = tmap(lambda w, u: (w.astype(jnp.float32) + u
+                                    ).astype(w.dtype), params, vel)
+        return params, vel
+
+    def train_step(state, batch, step_idx):
+        losses, grads = jax.vmap(grad_fn)(state["params"], batch)
+        metrics = {"loss": jnp.mean(losses)}
+
+        if comm.strategy == "bsp":
+            g = tmap(lambda x: jnp.mean(x, axis=0, keepdims=True), grads)
+            g = tmap(lambda x, p: jnp.broadcast_to(x, p.shape), g,
+                     state["params"])
+            params, vel = local_sgd(state["params"], g, state["vel"])
+            return {"params": params, "vel": vel}, metrics
+
+        if comm.strategy == "fedavg":
+            params, vel = local_sgd(state["params"], grads, state["vel"])
+            il = comm.iter_local
+            do_sync = (step_idx % il) == (il - 1)
+
+            def sync(p):
+                return tmap(lambda l: jnp.broadcast_to(
+                    jnp.mean(l, axis=0, keepdims=True), l.shape), p)
+            params = jax.lax.cond(do_sync, sync, lambda p: p, params)
+            return {"params": params, "vel": vel}, metrics
+
+        if comm.strategy == "gaia":
+            params, vel = local_sgd(state["params"], grads, state["vel"])
+            acc = tmap(lambda v, u: v + u, state["acc"], vel)
+            t0 = comm.gaia_t0
+
+            def exchange(w, v):
+                mask = (jnp.abs(v) > t0 * jnp.abs(w.astype(jnp.float32))
+                        ).astype(v.dtype)
+                sel = v * mask
+                total = jnp.sum(sel, axis=0, keepdims=True)   # cross-pod
+                w_new = (w.astype(jnp.float32) + (total - sel)
+                         ).astype(w.dtype)
+                return w_new, v * (1 - mask)
+            pairs = tmap(exchange, params, acc)
+            params = tmap(lambda pr: pr[0], pairs,
+                          is_leaf=lambda x: isinstance(x, tuple))
+            acc = tmap(lambda pr: pr[1], pairs,
+                       is_leaf=lambda x: isinstance(x, tuple))
+            return {"params": params, "vel": vel, "acc": acc}, metrics
+
+        if comm.strategy == "dgc":
+            # g = -lr * grad (clip folded into hist threshold scale)
+            g = tmap(lambda x: -lr * x.astype(jnp.float32), grads)
+            vel = tmap(lambda u, gl: momentum * u + gl, state["vel"], g)
+            acc = tmap(lambda v, u: v + u, state["acc"], vel)
+            s = comm.dgc_sparsity
+
+            def exchange(w, v, u):
+                t = jax.vmap(lambda vv: hist_threshold(vv, s))(v)  # per pod
+                t = t.reshape((-1,) + (1,) * (v.ndim - 1))
+                mask = (jnp.abs(v) > t).astype(v.dtype)
+                sel = v * mask
+                total = jnp.sum(sel, axis=0)                  # cross-pod
+                w_new = (w.astype(jnp.float32) + total[None]
+                         ).astype(w.dtype)
+                return w_new, v * (1 - mask), u * (1 - mask)
+            triples = tmap(exchange, state["params"], acc, vel)
+            params = tmap(lambda tr: tr[0], triples,
+                          is_leaf=lambda x: isinstance(x, tuple))
+            acc = tmap(lambda tr: tr[1], triples,
+                       is_leaf=lambda x: isinstance(x, tuple))
+            vel = tmap(lambda tr: tr[2], triples,
+                       is_leaf=lambda x: isinstance(x, tuple))
+            return {"params": params, "vel": vel, "acc": acc}, metrics
+
+        raise ValueError(comm.strategy)
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Serve steps
+# ---------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig, *, chunk: int = 512) -> Callable:
+    def prefill_step(params, batch):
+        logits, _ = forward(params, cfg, batch, remat=False, chunk=chunk)
+        return logits[:, -1]                       # next-token logits
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig) -> Callable:
+    def serve_step(params, cache, batch):
+        logits, new_cache = decode_step(params, cfg, batch, cache)
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tok, new_cache
+    return serve_step

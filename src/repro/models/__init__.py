@@ -1,0 +1,4 @@
+from repro.models.model import (decode_step, forward, init_cache, init_model,
+                                loss_fn)
+
+__all__ = ["decode_step", "forward", "init_cache", "init_model", "loss_fn"]

@@ -1,0 +1,354 @@
+"""Attention: GQA (qk-norm / softcap / sliding-window) and MLA
+(multi-head latent attention, deepseek-v2 / minicpm3) with three paths:
+
+- train/prefill: ``chunked_attention`` — a lax.scan online-softmax over key
+  blocks (flash-attention schedule in pure jnp, so it lowers on every
+  backend; the Pallas kernel in ``repro.kernels.flash_attention`` is the TPU
+  executable twin).
+- decode: one query token against a fixed-capacity KV cache.  The cache may
+  be a *ring buffer* of ``window`` slots (long-context mode) — the
+  sub-quadratic variant sanctioned for full-attention archs on long_500k.
+- MLA decode uses the *absorbed* form: scores are taken directly against the
+  compressed c_kv cache (kv_lora_rank-wide), never re-expanding K.
+"""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionConfig
+from repro.models.layers import (init_linear, init_rmsnorm, linear_apply,
+                                 rmsnorm_apply, softcap)
+from repro.models.rope import apply_rope
+from repro.models.shard_hints import hint
+
+Params = Dict[str, Any]
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Core: chunked online-softmax attention (pure jnp flash schedule)
+# ---------------------------------------------------------------------------
+
+def expand_kv(k: jnp.ndarray, n_heads: int) -> jnp.ndarray:
+    """GQA group expansion via a tiny head-map gather, keeping the head axis
+    shardable over ``model`` (a reshape-based grouped layout silently
+    replicates heads under GSPMD)."""
+    Hkv = k.shape[2]
+    if Hkv == n_heads:
+        return k
+    head_map = jnp.arange(n_heads) // (n_heads // Hkv)
+    return hint(jnp.take(k, head_map, axis=2), "data", None, "model", None)
+
+
+def chunked_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
+                      causal: bool = True,
+                      window: Optional[int] = None,
+                      logit_softcap: Optional[float] = None,
+                      scale: Optional[float] = None,
+                      chunk: int = 512,
+                      q_offset: int = 0) -> jnp.ndarray:
+    """q: (B, Tq, Hq, D); k, v: (B, Tk, Hkv, Dk/Dv).  Hq % Hkv == 0.
+
+    Online softmax over key chunks: O(Tq * chunk) live scores instead of
+    O(Tq * Tk).  ``q_offset`` is the absolute position of q[0] relative to
+    k[0] (prefill: Tk - Tq when a prefix cache exists).
+    """
+    B, Tq, Hq, D = q.shape
+    Tk = k.shape[1]
+    assert Hq % k.shape[2] == 0, (Hq, k.shape)
+    k = expand_kv(k, Hq)
+    v = expand_kv(v, Hq)
+    Dk, Dv = k.shape[-1], v.shape[-1]
+    scale = D ** -0.5 if scale is None else scale
+
+    # pad Tk to a multiple of chunk
+    n_chunks = -(-Tk // chunk)
+    pad = n_chunks * chunk - Tk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, chunk, Hq, Dk).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, chunk, Hq, Dv).transpose(1, 0, 2, 3, 4)
+
+    qh = hint(q, "data", None, "model", None)
+    q_pos = q_offset + jnp.arange(Tq)
+
+    def body(carry, xs):
+        m, l, acc = carry
+        k_blk, v_blk, blk_idx = xs
+        k_pos = blk_idx * chunk + jnp.arange(chunk)
+        # bf16 operands + f32 accumulation (flash-attention numerics)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qh, k_blk,
+                       preferred_element_type=jnp.float32) * scale
+        s = softcap(s, logit_softcap)
+        valid = (k_pos < Tk)[None, :]
+        if causal:
+            valid = valid & (k_pos[None, :] <= q_pos[:, None])
+        if window is not None:
+            valid = valid & (k_pos[None, :] > q_pos[:, None] - window)
+        s = jnp.where(valid[None, None], s, NEG_INF)
+        m_blk = jnp.max(s, axis=-1)                       # (B,H,Tq)
+        m_new = jnp.maximum(m, m_blk)
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhqk,bkhd->bhqd", p.astype(v_blk.dtype), v_blk,
+            preferred_element_type=jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, Hq, Tq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, Hq, Tq), jnp.float32)
+    a0 = jnp.zeros((B, Hq, Tq, Dv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(
+        body, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks)))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = out.transpose(0, 2, 1, 3)
+    return out.astype(q.dtype)
+
+
+def decode_attention(q: jnp.ndarray, k_cache: jnp.ndarray,
+                     v_cache: jnp.ndarray, *,
+                     q_pos: jnp.ndarray,
+                     cache_positions: jnp.ndarray,
+                     logit_softcap: Optional[float] = None,
+                     scale: Optional[float] = None) -> jnp.ndarray:
+    """One-token decode.  q: (B, 1, Hq, D); caches: (B, L, Hkv, D*).
+    ``cache_positions``: (B, L) absolute position of each cache slot, -1 for
+    empty (ring-buffer semantics fall out of position bookkeeping)."""
+    B, _, Hq, D = q.shape
+    scale = D ** -0.5 if scale is None else scale
+    if os.environ.get("REPRO_BASELINE_DECODE"):
+        # paper-faithful baseline path (pre-hillclimb): head-expand + f32
+        k_cache = expand_kv(k_cache, Hq)
+        v_cache = expand_kv(v_cache, Hq)
+        Dv = v_cache.shape[-1]
+        qh = q.reshape(B, Hq, D).astype(jnp.float32)
+        s = jnp.einsum("bhd,blhd->bhl", qh,
+                       k_cache.astype(jnp.float32)) * scale
+        s = softcap(s, logit_softcap)
+        valid = (cache_positions >= 0) & (cache_positions <= q_pos[:, None])
+        s = jnp.where(valid[:, None], s, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        out = jnp.einsum("bhl,blhd->bhd", p, v_cache.astype(jnp.float32))
+        return out.reshape(B, 1, Hq, Dv).astype(q.dtype)
+    Hkv = k_cache.shape[2]
+    Dv = v_cache.shape[-1]
+    g = Hq // Hkv
+    # grouped layout: no KV expansion (a head-expand gather forces GSPMD to
+    # replicate the cache).  The cache LENGTH dim is sharded over 'model'
+    # (flash-decode): per-shard partial scores, softmax combines are tiny.
+    k_cache = hint(k_cache, "data", "model", None, None)
+    v_cache = hint(v_cache, "data", "model", None, None)
+    qh = q.reshape(B, Hkv, g, D)
+    # bf16 operands + f32 accumulation: no full-cache convert materializes
+    s = jnp.einsum("bhgd,blhd->bhgl", qh, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    s = softcap(s, logit_softcap)
+    valid = (cache_positions >= 0) & (cache_positions <= q_pos[:, None])
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgl,blhd->bhgd", p.astype(v_cache.dtype), v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, 1, Hq, Dv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA block
+# ---------------------------------------------------------------------------
+
+def init_gqa(key, a: AttentionConfig, d_model: int, dtype) -> Params:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    p: Params = {
+        "wq": init_linear(k1, d_model, a.n_heads * a.head_dim, dtype),
+        "wk": init_linear(k2, d_model, a.n_kv_heads * a.head_dim, dtype),
+        "wv": init_linear(k3, d_model, a.n_kv_heads * a.head_dim, dtype),
+        "wo": init_linear(k4, a.n_heads * a.head_dim, d_model, dtype),
+    }
+    if a.qk_norm:
+        p["q_norm"] = init_rmsnorm(a.head_dim)
+        p["k_norm"] = init_rmsnorm(a.head_dim)
+    return p
+
+
+def gqa_qkv(p: Params, a: AttentionConfig, x: jnp.ndarray,
+            positions: jnp.ndarray):
+    B, T, _ = x.shape
+    q = linear_apply(p["wq"], x).reshape(B, T, a.n_heads, a.head_dim)
+    k = linear_apply(p["wk"], x).reshape(B, T, a.n_kv_heads, a.head_dim)
+    v = linear_apply(p["wv"], x).reshape(B, T, a.n_kv_heads, a.head_dim)
+    if a.qk_norm:
+        q = rmsnorm_apply(p["q_norm"], q)
+        k = rmsnorm_apply(p["k_norm"], k)
+    q = apply_rope(q, positions, a.rope_theta)
+    k = apply_rope(k, positions, a.rope_theta)
+    q = hint(q, "data", None, "model", None)
+    k = hint(k, "data", None, "model", None)
+    v = hint(v, "data", None, "model", None)
+    return q, k, v
+
+
+def gqa_apply(p: Params, a: AttentionConfig, x: jnp.ndarray, *,
+              window: Optional[int], positions: jnp.ndarray,
+              chunk: int = 512) -> jnp.ndarray:
+    """Train/prefill path (full sequence)."""
+    q, k, v = gqa_qkv(p, a, x, positions)
+    out = chunked_attention(q, k, v, causal=True, window=window,
+                            logit_softcap=a.attn_softcap, chunk=chunk)
+    B, T = x.shape[:2]
+    return linear_apply(p["wo"], out.reshape(B, T, -1))
+
+
+def gqa_init_cache(a: AttentionConfig, batch: int, length: int,
+                   dtype) -> Params:
+    return {
+        "k": jnp.zeros((batch, length, a.n_kv_heads, a.head_dim), dtype),
+        "v": jnp.zeros((batch, length, a.n_kv_heads, a.head_dim), dtype),
+        "pos": jnp.full((batch, length), -1, jnp.int32),
+    }
+
+
+def gqa_decode(p: Params, a: AttentionConfig, x: jnp.ndarray,
+               cache: Params, t: jnp.ndarray) -> Tuple[jnp.ndarray, Params]:
+    """x: (B, 1, d).  t: (B,) absolute position of this token.  The cache is
+    a ring buffer of ``L`` slots; slot = t mod L (sliding window when
+    L < full context)."""
+    B = x.shape[0]
+    L = cache["k"].shape[1]
+    q, k, v = gqa_qkv(p, a, x, t[:, None])
+    slot = (t % L).astype(jnp.int32)
+    b_idx = jnp.arange(B)
+    new_cache = {
+        "k": cache["k"].at[b_idx, slot].set(k[:, 0]),
+        "v": cache["v"].at[b_idx, slot].set(v[:, 0]),
+        "pos": cache["pos"].at[b_idx, slot].set(t.astype(jnp.int32)),
+    }
+    out = decode_attention(q, new_cache["k"], new_cache["v"], q_pos=t,
+                           cache_positions=new_cache["pos"],
+                           logit_softcap=a.attn_softcap)
+    return linear_apply(p["wo"], out.reshape(B, 1, -1)), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA block (deepseek-v2 / minicpm3)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, a: AttentionConfig, d_model: int, dtype) -> Params:
+    ks = jax.random.split(key, 6)
+    h = a.n_heads
+    qhead = a.nope_head_dim + a.rope_head_dim
+    p: Params = {}
+    if a.q_lora_rank:
+        p["wdq"] = init_linear(ks[0], d_model, a.q_lora_rank, dtype)
+        p["q_norm"] = init_rmsnorm(a.q_lora_rank)
+        p["wuq"] = init_linear(ks[1], a.q_lora_rank, h * qhead, dtype)
+    else:
+        p["wq"] = init_linear(ks[0], d_model, h * qhead, dtype)
+    p["wdkv"] = init_linear(ks[2], d_model,
+                            a.kv_lora_rank + a.rope_head_dim, dtype)
+    p["kv_norm"] = init_rmsnorm(a.kv_lora_rank)
+    # up-projection, kept 3D so decode can use the absorbed form
+    wukv = jax.random.normal(
+        ks[3], (a.kv_lora_rank, h, a.nope_head_dim + a.v_head_dim),
+        jnp.float32) * (a.kv_lora_rank ** -0.5)
+    p["wukv"] = wukv.astype(dtype)
+    p["wo"] = init_linear(ks[4], h * a.v_head_dim, d_model, dtype)
+    return p
+
+
+def _mla_q(p: Params, a: AttentionConfig, x: jnp.ndarray,
+           positions: jnp.ndarray):
+    B, T, _ = x.shape
+    h = a.n_heads
+    if a.q_lora_rank:
+        cq = rmsnorm_apply(p["q_norm"], linear_apply(p["wdq"], x))
+        q = linear_apply(p["wuq"], cq)
+    else:
+        q = linear_apply(p["wq"], x)
+    q = hint(q.reshape(B, T, h, a.nope_head_dim + a.rope_head_dim),
+             "data", None, "model", None)
+    q_nope = q[..., :a.nope_head_dim]
+    q_rope = apply_rope(q[..., a.nope_head_dim:], positions, a.rope_theta)
+    return q_nope, q_rope
+
+
+def _mla_ckv(p: Params, a: AttentionConfig, x: jnp.ndarray,
+             positions: jnp.ndarray):
+    ckv_kr = linear_apply(p["wdkv"], x)
+    c_kv = rmsnorm_apply(p["kv_norm"], ckv_kr[..., :a.kv_lora_rank])
+    k_rope = ckv_kr[..., a.kv_lora_rank:][:, :, None, :]   # (B,T,1,rope_dim)
+    k_rope = apply_rope(k_rope, positions, a.rope_theta)[:, :, 0]
+    return c_kv, k_rope
+
+
+def mla_apply(p: Params, a: AttentionConfig, x: jnp.ndarray, *,
+              positions: jnp.ndarray, window: Optional[int] = None,
+              chunk: int = 512) -> jnp.ndarray:
+    """Train/prefill: expand K/V from the latent and run chunked attention."""
+    B, T, _ = x.shape
+    h = a.n_heads
+    q_nope, q_rope = _mla_q(p, a, x, positions)
+    c_kv, k_rope = _mla_ckv(p, a, x, positions)
+    kv = jnp.einsum("btr,rhd->bthd", c_kv, p["wukv"].astype(x.dtype))
+    kv = hint(kv, "data", None, "model", None)
+    k_nope = kv[..., :a.nope_head_dim]
+    v = kv[..., a.nope_head_dim:]
+    k_rope_b = jnp.broadcast_to(
+        k_rope[:, :, None, :], (B, T, h, a.rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    scale = (a.nope_head_dim + a.rope_head_dim) ** -0.5
+    out = chunked_attention(q, k, v, causal=True, window=window,
+                            scale=scale, chunk=chunk)
+    return linear_apply(p["wo"], out.reshape(B, T, -1))
+
+
+def mla_init_cache(a: AttentionConfig, batch: int, length: int,
+                   dtype) -> Params:
+    return {
+        "ckv": jnp.zeros((batch, length, a.kv_lora_rank), dtype),
+        "krope": jnp.zeros((batch, length, a.rope_head_dim), dtype),
+        "pos": jnp.full((batch, length), -1, jnp.int32),
+    }
+
+
+def mla_decode(p: Params, a: AttentionConfig, x: jnp.ndarray,
+               cache: Params, t: jnp.ndarray) -> Tuple[jnp.ndarray, Params]:
+    """Absorbed decode: scores against the compressed cache directly.
+    Cache is a ring buffer (sliding window when L < context)."""
+    B = x.shape[0]
+    L = cache["ckv"].shape[1]
+    h = a.n_heads
+    q_nope, q_rope = _mla_q(p, a, x, t[:, None])           # (B,1,h,*)
+    c_kv, k_rope = _mla_ckv(p, a, x, t[:, None])           # (B,1,r),(B,1,rd)
+    slot = (t % L).astype(jnp.int32)
+    b_idx = jnp.arange(B)
+    new_cache = {
+        "ckv": cache["ckv"].at[b_idx, slot].set(c_kv[:, 0]),
+        "krope": cache["krope"].at[b_idx, slot].set(k_rope[:, 0]),
+        "pos": cache["pos"].at[b_idx, slot].set(t.astype(jnp.int32)),
+    }
+    wukv = p["wukv"].astype(jnp.float32)
+    w_uk = wukv[..., :a.nope_head_dim]                     # (r,h,nope)
+    w_uv = wukv[..., a.nope_head_dim:]                     # (r,h,v)
+    # absorb W_uk into q: (B,h,r)
+    q_abs = jnp.einsum("bhn,rhn->bhr", q_nope[:, 0].astype(jnp.float32), w_uk)
+    ckv_f = new_cache["ckv"].astype(jnp.float32)           # (B,L,r)
+    s_nope = jnp.einsum("bhr,blr->bhl", q_abs, ckv_f)
+    s_rope = jnp.einsum("bhd,bld->bhl",
+                        q_rope[:, 0].astype(jnp.float32),
+                        new_cache["krope"].astype(jnp.float32))
+    scale = (a.nope_head_dim + a.rope_head_dim) ** -0.5
+    s = (s_nope + s_rope) * scale
+    valid = (new_cache["pos"] >= 0) & (new_cache["pos"] <= t[:, None])
+    s = jnp.where(valid[:, None], s, NEG_INF)
+    pr = jax.nn.softmax(s, axis=-1)
+    out_c = jnp.einsum("bhl,blr->bhr", pr, ckv_f)          # (B,h,r)
+    out = jnp.einsum("bhr,rhv->bhv", out_c, w_uv)          # (B,h,v)
+    out = out.reshape(B, 1, h * a.v_head_dim).astype(x.dtype)
+    return linear_apply(p["wo"], out), new_cache

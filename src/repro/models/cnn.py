@@ -1,0 +1,122 @@
+"""CNN models for the paper's own study (image classification).
+
+LeNet / BN-LeNet (LeNet + BatchNorm after each conv, as in the paper) /
+GN-LeNet (GroupNorm swap, §5.2) / BRN-LeNet (Batch Renormalization,
+Appendix I) / AlexNet-s / ResNet-s.  NHWC layout, functional params, with
+explicit BatchNorm state so the non-IID minibatch-statistics pathology is
+observable and measurable (``repro.core.divergence``).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.cnn_zoo import CNNConfig
+from repro.models.layers import (batchnorm_apply, batchrenorm_apply,
+                                 groupnorm_apply, init_batchnorm,
+                                 init_groupnorm)
+
+Params = Dict[str, Any]
+
+
+def _conv_init(key, k: int, c_in: int, c_out: int) -> jnp.ndarray:
+    fan_in = k * k * c_in
+    return jax.random.normal(key, (k, k, c_in, c_out)) * (2.0 / fan_in) ** 0.5
+
+
+def init_cnn(key, cfg: CNNConfig) -> Tuple[Params, Params]:
+    """Returns (params, state).  state = BatchNorm running stats (may be {})."""
+    n_blocks = len(cfg.conv_channels)
+    keys = jax.random.split(key, n_blocks + len(cfg.fc_dims) + 1)
+    params: Params = {"conv": [], "norm": [], "fc": []}
+    state: Params = {"norm": []}
+    c_in = cfg.in_channels
+    side = cfg.image_size
+    for i, (c, k) in enumerate(zip(cfg.conv_channels, cfg.kernel_sizes)):
+        params["conv"].append({"w": _conv_init(keys[i], k, c_in, c),
+                               "b": jnp.zeros((c,))})
+        if cfg.norm in ("batch", "batchrenorm"):
+            np_, ns = init_batchnorm(c)
+            params["norm"].append(np_)
+            state["norm"].append(ns)
+        elif cfg.norm == "group":
+            params["norm"].append(init_groupnorm(c, cfg.group_size))
+            state["norm"].append({})
+        else:
+            params["norm"].append({})
+            state["norm"].append({})
+        if cfg.pool_after[i]:
+            side //= 2
+        c_in = c
+    d = side * side * c_in
+    for j, fd in enumerate(cfg.fc_dims):
+        kf = keys[n_blocks + j]
+        params["fc"].append({
+            "w": jax.random.normal(kf, (d, fd)) * (2.0 / d) ** 0.5,
+            "b": jnp.zeros((fd,))})
+        d = fd
+    kf = keys[-1]
+    params["out"] = {"w": jax.random.normal(kf, (d, cfg.n_classes)) * d ** -0.5,
+                     "b": jnp.zeros((cfg.n_classes,))}
+    return params, state
+
+
+def cnn_apply(params: Params, state: Params, cfg: CNNConfig,
+              images: jnp.ndarray, *, train: bool
+              ) -> Tuple[jnp.ndarray, Params]:
+    """images: (B, H, W, C).  Returns (logits, new_state)."""
+    x = images
+    new_norm_states = []
+    prev_block = None
+    for i, (cp, np_) in enumerate(zip(params["conv"], params["norm"])):
+        y = jax.lax.conv_general_dilated(
+            x, cp["w"], window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC")) + cp["b"]
+        ns = state["norm"][i]
+        if cfg.norm == "batch" and np_:
+            y, ns = batchnorm_apply(np_, ns, y, train=train)
+        elif cfg.norm == "batchrenorm" and np_:
+            y, ns = batchrenorm_apply(np_, ns, y, train=train)
+        elif cfg.norm == "group" and np_:
+            y = groupnorm_apply(np_, y, group_size=cfg.group_size)
+        new_norm_states.append(ns)
+        y = jax.nn.relu(y)
+        if cfg.residual and prev_block is not None \
+                and prev_block.shape == y.shape:
+            y = y + prev_block
+        prev_block = y
+        x = y
+        if cfg.pool_after[i]:
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                "VALID")
+            prev_block = None
+    x = x.reshape(x.shape[0], -1)
+    for fp in params["fc"]:
+        x = jax.nn.relu(x @ fp["w"] + fp["b"])
+    logits = x @ params["out"]["w"] + params["out"]["b"]
+    return logits, {"norm": new_norm_states}
+
+
+def cnn_batch_stats(params: Params, cfg: CNNConfig, images: jnp.ndarray,
+                    layer: int = 0) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Minibatch (mu_B, sigma_B) per channel at conv ``layer`` — the probe
+    behind the paper's Figure 4 divergence analysis."""
+    x = images
+    for i, cp in enumerate(params["conv"]):
+        y = jax.lax.conv_general_dilated(
+            x, cp["w"], window_strides=(1, 1), padding="SAME",
+            dimension_numbers=("NHWC", "HWIO", "NHWC")) + cp["b"]
+        if i == layer:
+            mu = jnp.mean(y, axis=(0, 1, 2))
+            var = jnp.var(y, axis=(0, 1, 2))
+            return mu, var
+        # continue through the network as if normless
+        x = jax.nn.relu(y)
+        if cfg.pool_after[i]:
+            x = jax.lax.reduce_window(
+                x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1),
+                "VALID")
+    raise ValueError(f"layer {layer} out of range")

@@ -1,0 +1,82 @@
+"""Encoder stack for enc-dec archs (seamless-m4t backbone).
+
+The modality frontend (mel-spectrogram + conv feature extractor) is stubbed
+per the carve-out: ``input_specs()`` provides precomputed frame embeddings
+(B, n_frames, feat_dim).  The encoder here is the transformer stack that
+consumes them (bidirectional self-attention); the decoder is the shared
+``transformer.py`` machinery with cross-attention enabled.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import attention as attn
+from repro.models.layers import (gated_mlp_apply, init_gated_mlp, init_linear,
+                                 linear_apply, make_norm)
+from repro.models.transformer import _tree_stack
+
+Params = Dict[str, Any]
+
+
+def _dt(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+def init_encoder_layer(key, cfg: ModelConfig) -> Params:
+    ed = cfg.encoder.d_model
+    a = cfg.attention
+    dt = _dt(cfg)
+    ks = jax.random.split(key, 5)
+    norm_init, _ = make_norm(cfg.norm, ed)
+    h, hd = a.n_heads, a.head_dim
+    return {
+        "norm1": norm_init(), "norm2": norm_init(),
+        "wq": init_linear(ks[0], ed, h * hd, dt),
+        "wk": init_linear(ks[1], ed, h * hd, dt),
+        "wv": init_linear(ks[2], ed, h * hd, dt),
+        "wo": init_linear(ks[3], h * hd, ed, dt),
+        "ffn": init_gated_mlp(ks[4], ed, cfg.d_ff, dt),
+    }
+
+
+def init_encoder(key, cfg: ModelConfig) -> Params:
+    e = cfg.encoder
+    ks = jax.random.split(key, e.n_layers + 2)
+    dt = _dt(cfg)
+    norm_init, _ = make_norm(cfg.norm, e.d_model)
+    layers = [init_encoder_layer(ks[i], cfg) for i in range(e.n_layers)]
+    p: Params = {
+        "in_proj": init_linear(ks[-2], cfg.modality.feat_dim, e.d_model, dt),
+        "layers": _tree_stack(layers),
+        "final_norm": norm_init(),
+    }
+    return p
+
+
+def encoder_apply(p: Params, cfg: ModelConfig, frames: jnp.ndarray
+                  ) -> jnp.ndarray:
+    """frames: (B, S, feat_dim) -> memory (B, S, enc_d_model)."""
+    ed = cfg.encoder.d_model
+    a = cfg.attention
+    h, hd = a.n_heads, a.head_dim
+    _, norm_apply = make_norm(cfg.norm, ed)
+    x = linear_apply(p["in_proj"], frames.astype(_dt(cfg)))
+    B, S, _ = x.shape
+
+    def layer(x, lp):
+        hh = norm_apply(lp["norm1"], x)
+        q = linear_apply(lp["wq"], hh).reshape(B, S, h, hd)
+        k = linear_apply(lp["wk"], hh).reshape(B, S, h, hd)
+        v = linear_apply(lp["wv"], hh).reshape(B, S, h, hd)
+        y = attn.chunked_attention(q, k, v, causal=False,
+                                   chunk=min(512, S))
+        x = x + linear_apply(lp["wo"], y.reshape(B, S, -1))
+        x = x + gated_mlp_apply(lp["ffn"], norm_apply(lp["norm2"], x))
+        return x, None
+
+    x, _ = jax.lax.scan(layer, x, p["layers"])
+    return norm_apply(p["final_norm"], x)

@@ -1,0 +1,215 @@
+"""Core layers: normalizations (the paper's §5 study lives here), MLPs,
+embeddings.  Pure-functional: ``init_*`` build param pytrees, ``*_apply``
+are side-effect-free.
+
+BatchNorm carries running statistics explicitly (returned as updated state),
+which is what makes the paper's non-IID pathology reproducible: each
+partition's minibatch statistics (mu_B, sigma_B) diverge while the merged
+model's running estimates match none of them.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.shard_hints import hint
+
+Params = Dict[str, Any]
+
+
+def _dtype(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Normalization layers
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(dim: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm_apply(p: Params, x: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"].astype(jnp.float32))).astype(x.dtype)
+
+
+def init_layernorm(dim: int, dtype=jnp.float32) -> Params:
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm_apply(p: Params, x: jnp.ndarray, eps: float = 1e-5) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+def init_batchnorm(channels: int) -> Tuple[Params, Params]:
+    """Returns (params, state).  State = running mean/var, updated in train."""
+    params = {"scale": jnp.ones((channels,), jnp.float32),
+              "bias": jnp.zeros((channels,), jnp.float32)}
+    state = {"mean": jnp.zeros((channels,), jnp.float32),
+             "var": jnp.ones((channels,), jnp.float32),
+             "count": jnp.zeros((), jnp.float32)}
+    return params, state
+
+
+def batchnorm_apply(p: Params, state: Params, x: jnp.ndarray, *,
+                    train: bool, momentum: float = 0.9,
+                    eps: float = 1e-5) -> Tuple[jnp.ndarray, Params]:
+    """x: (B, H, W, C) or (B, C).  NHWC layout.
+
+    Training uses minibatch statistics (the source of the paper's non-IID
+    pathology); eval uses the running estimates.
+    """
+    xf = x.astype(jnp.float32)
+    axes = tuple(range(x.ndim - 1))
+    if train:
+        mu = jnp.mean(xf, axis=axes)
+        var = jnp.var(xf, axis=axes)
+        new_state = {
+            "mean": momentum * state["mean"] + (1 - momentum) * mu,
+            "var": momentum * state["var"] + (1 - momentum) * var,
+            "count": state["count"] + 1.0,
+        }
+    else:
+        mu, var = state["mean"], state["var"]
+        new_state = state
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * p["scale"] + p["bias"]
+    return y.astype(x.dtype), new_state
+
+
+def batchrenorm_apply(p: Params, state: Params, x: jnp.ndarray, *,
+                      train: bool, momentum: float = 0.9, eps: float = 1e-5,
+                      r_max: float = 3.0, d_max: float = 5.0
+                      ) -> Tuple[jnp.ndarray, Params]:
+    """Batch Renormalization (Ioffe 2017) — Appendix I alternative.
+
+    Uses minibatch stats corrected toward the running estimates by
+    (clipped) r, d so train/eval normalization match more closely.
+    """
+    xf = x.astype(jnp.float32)
+    axes = tuple(range(x.ndim - 1))
+    if not train:
+        y = (xf - state["mean"]) * jax.lax.rsqrt(state["var"] + eps)
+        return (y * p["scale"] + p["bias"]).astype(x.dtype), state
+    mu_b = jnp.mean(xf, axis=axes)
+    var_b = jnp.var(xf, axis=axes)
+    sigma_b = jnp.sqrt(var_b + eps)
+    sigma = jnp.sqrt(state["var"] + eps)
+    r = jax.lax.stop_gradient(jnp.clip(sigma_b / sigma, 1 / r_max, r_max))
+    d = jax.lax.stop_gradient(
+        jnp.clip((mu_b - state["mean"]) / sigma, -d_max, d_max))
+    y = (xf - mu_b) / sigma_b * r + d
+    y = y * p["scale"] + p["bias"]
+    new_state = {
+        "mean": momentum * state["mean"] + (1 - momentum) * mu_b,
+        "var": momentum * state["var"] + (1 - momentum) * var_b,
+        "count": state["count"] + 1.0,
+    }
+    return y.astype(x.dtype), new_state
+
+
+def init_groupnorm(channels: int, group_size: int = 2) -> Params:
+    assert channels % group_size == 0, (channels, group_size)
+    return {"scale": jnp.ones((channels,), jnp.float32),
+            "bias": jnp.zeros((channels,), jnp.float32)}
+
+
+def groupnorm_apply(p: Params, x: jnp.ndarray, *, group_size: int = 2,
+                    eps: float = 1e-5) -> jnp.ndarray:
+    """GroupNorm (Wu & He 2018) with groups of ``group_size`` adjacent
+    channels — per-sample statistics, hence minibatch-independent (the
+    paper's §5.2 fix).  x: (B, H, W, C) or (B, C)."""
+    xf = x.astype(jnp.float32)
+    orig_shape = xf.shape
+    c = orig_shape[-1]
+    n_groups = c // group_size
+    xg = xf.reshape(orig_shape[0], -1, n_groups, group_size)
+    mu = jnp.mean(xg, axis=(1, 3), keepdims=True)
+    var = jnp.var(xg, axis=(1, 3), keepdims=True)
+    y = (xg - mu) * jax.lax.rsqrt(var + eps)
+    y = y.reshape(orig_shape)
+    return (y * p["scale"] + p["bias"]).astype(x.dtype)
+
+
+def make_norm(kind: str, dim: int):
+    """Returns (init_fn() -> params, apply_fn(params, x) -> y) for the
+    per-sample norms used by transformer blocks."""
+    if kind == "rms":
+        return (lambda: init_rmsnorm(dim)), rmsnorm_apply
+    if kind == "layer":
+        return (lambda: init_layernorm(dim)), layernorm_apply
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# Linear / MLP / Embedding
+# ---------------------------------------------------------------------------
+
+def init_linear(key, d_in: int, d_out: int, dtype=jnp.bfloat16,
+                bias: bool = False, scale: Optional[float] = None) -> Params:
+    s = scale if scale is not None else d_in ** -0.5
+    w = (jax.random.normal(key, (d_in, d_out), jnp.float32) * s).astype(dtype)
+    p = {"w": w}
+    if bias:
+        p["b"] = jnp.zeros((d_out,), dtype)
+    return p
+
+
+def linear_apply(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def init_gated_mlp(key, d_model: int, d_ff: int, dtype=jnp.bfloat16) -> Params:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "gate": init_linear(k1, d_model, d_ff, dtype),
+        "up": init_linear(k2, d_model, d_ff, dtype),
+        "down": init_linear(k3, d_ff, d_model, dtype),
+    }
+
+
+def gated_mlp_apply(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    g = jax.nn.silu(linear_apply(p["gate"], x))
+    u = linear_apply(p["up"], x)
+    if g.ndim == 3:
+        g = hint(g, "data", None, "model")
+    return linear_apply(p["down"], g * u)
+
+
+def init_embedding(key, vocab: int, d_model: int, dtype=jnp.bfloat16) -> Params:
+    # unit-variance activations after the sqrt(d_model) embed scaling
+    e = (jax.random.normal(key, (vocab, d_model), jnp.float32)
+         * d_model ** -0.5).astype(dtype)
+    return {"table": e}
+
+
+def embedding_apply(p: Params, tokens: jnp.ndarray,
+                    compute_dtype=None) -> jnp.ndarray:
+    t = p["table"]
+    if compute_dtype is not None:
+        t = t.astype(compute_dtype)
+    return jnp.take(t, tokens, axis=0)
+
+
+def unembed_apply(p: Params, x: jnp.ndarray) -> jnp.ndarray:
+    return x @ p["table"].astype(x.dtype).T
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)

@@ -1,0 +1,72 @@
+"""Top-level model API: one entry point per (family-agnostic) operation.
+
+``batch`` layout (all produced by ``repro.launch.specs.input_specs``):
+- train/prefill: {"tokens": (B, T_text) int32, "labels": (B, T_text) int32,
+  ["patches": (B, n_vis, feat)] , ["frames": (B, S, feat)]}
+- decode: {"token": (B,) int32, "t": (B,) int32, ["frames": ...]} + cache
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import encdec, transformer
+
+Params = Dict[str, Any]
+
+
+def init_model(key, cfg: ModelConfig) -> Params:
+    k1, k2 = jax.random.split(key)
+    p = transformer.init_lm(k1, cfg)
+    if cfg.encoder is not None:
+        p["encoder"] = init_encoder_params(k2, cfg)
+    return p
+
+
+def init_encoder_params(key, cfg: ModelConfig) -> Params:
+    return encdec.init_encoder(key, cfg)
+
+
+def _memory(p: Params, cfg: ModelConfig, batch: Dict[str, Any]
+            ) -> Optional[jnp.ndarray]:
+    if cfg.encoder is None:
+        return None
+    return encdec.encoder_apply(p["encoder"], cfg, batch["frames"])
+
+
+def forward(p: Params, cfg: ModelConfig, batch: Dict[str, Any], *,
+            remat: bool = True, chunk: int = 512
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence forward.  Returns (logits (B,T,V) fp32, moe_aux)."""
+    return transformer.lm_apply(
+        p, cfg, batch["tokens"],
+        patches=batch.get("patches"),
+        memory=_memory(p, cfg, batch),
+        remat=remat, chunk=chunk)
+
+
+def loss_fn(p: Params, cfg: ModelConfig, batch: Dict[str, Any], *,
+            remat: bool = True, chunk: int = 512) -> Tuple[jnp.ndarray, Dict]:
+    logits, aux = forward(p, cfg, batch, remat=remat, chunk=chunk)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    ce = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+               long_mode: bool = False) -> Params:
+    return transformer.lm_init_cache(cfg, batch, cache_len, long_mode)
+
+
+def decode_step(p: Params, cfg: ModelConfig, batch: Dict[str, Any],
+                cache: Params) -> Tuple[jnp.ndarray, Params]:
+    """One serve step: next-token logits + updated cache."""
+    return transformer.lm_decode(
+        p, cfg, batch["token"], cache, batch["t"],
+        memory=_memory(p, cfg, batch))

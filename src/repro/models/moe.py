@@ -1,0 +1,107 @@
+"""Mixture-of-Experts FFN (deepseek-v2 style): shared experts + routed
+top-k experts with capacity-based scatter dispatch.
+
+Dispatch is GShard-style with a fixed per-expert capacity so every shape is
+static (jit/pjit-friendly) and the expert einsum carries an explicit expert
+axis — shardable over the ``model`` mesh axis (expert parallelism).  Tokens
+over capacity are dropped (their residual path passes through untouched).
+"""
+from __future__ import annotations
+
+import math
+import os
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.models.layers import gated_mlp_apply, init_gated_mlp, init_linear
+from repro.models.shard_hints import axis_env_size, current_mesh, hint
+
+Params = Dict[str, Any]
+
+
+def init_moe(key, m: MoEConfig, d_model: int, dtype) -> Params:
+    k_r, k_e, k_s = jax.random.split(key, 3)
+    E, ff = m.n_experts, m.d_ff_expert
+    ke = jax.random.split(k_e, 3)
+    s = d_model ** -0.5
+    p: Params = {
+        "router": init_linear(k_r, d_model, E, jnp.float32),
+        # stacked expert weights: (E, d, ff) / (E, ff, d)
+        "w_gate": (jax.random.normal(ke[0], (E, d_model, ff)) * s).astype(dtype),
+        "w_up":   (jax.random.normal(ke[1], (E, d_model, ff)) * s).astype(dtype),
+        "w_down": (jax.random.normal(ke[2], (E, ff, d_model))
+                   * ff ** -0.5).astype(dtype),
+    }
+    if m.n_shared:
+        p["shared"] = init_gated_mlp(k_s, d_model, m.n_shared * ff, dtype)
+    return p
+
+
+def moe_capacity(m: MoEConfig, n_tokens: int) -> int:
+    cap = int(math.ceil(n_tokens * m.top_k / m.n_experts * m.capacity_factor))
+    return max(8, -(-cap // 8) * 8)  # round up to 8 for TPU-friendly shapes
+
+
+def moe_apply(p: Params, m: MoEConfig, x: jnp.ndarray
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, T, d).  Returns (y, aux_loss)."""
+    B, T, d = x.shape
+    N = B * T
+    E, k = m.n_experts, m.top_k
+    if os.environ.get("REPRO_MOE_EP"):
+        from repro.models import moe_ep
+        mesh = current_mesh()
+        if moe_ep.ep_applicable_seq(m, B, T, mesh):
+            y, aux = moe_ep.moe_apply_ep(p, m, x, mesh)
+            if "shared" in p:
+                y = y + gated_mlp_apply(p["shared"], x.reshape(N, d)
+                                        ).reshape(B, T, d)
+            return y, aux
+    C = moe_capacity(m, N)
+    xf = x.reshape(N, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"]["w"])        # (N, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, expert_idx = jax.lax.top_k(probs, k)                # (N, k)
+    gate_w = gate_w / jnp.maximum(
+        jnp.sum(gate_w, axis=-1, keepdims=True), 1e-9)          # renormalize
+
+    # ---- load-balance auxiliary loss (Switch/GShard form) ----
+    me = jnp.mean(probs, axis=0)                                # (E,)
+    onehot_top1 = jax.nn.one_hot(expert_idx[:, 0], E)
+    ce = jnp.mean(onehot_top1, axis=0)
+    aux = m.router_aux_weight * E * jnp.sum(me * ce)
+
+    # ---- capacity dispatch ----
+    flat_e = expert_idx.reshape(-1)                             # (N*k,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)         # (N*k, E)
+    pos_in_e = jnp.cumsum(onehot, axis=0) - onehot              # rank in expert
+    pos = jnp.sum(pos_in_e * onehot, axis=-1)                   # (N*k,)
+    keep = pos < C
+    slot = jnp.where(keep, flat_e * C + pos, E * C)             # OOB => dropped
+
+    tok = jnp.repeat(jnp.arange(N), k)                          # (N*k,)
+    buf = jnp.zeros((E * C, d), x.dtype)
+    buf = buf.at[slot].add(xf[tok], mode="drop")                # scatter
+    buf = hint(buf.reshape(E, C, d), "model", None, None)
+
+    # ---- expert computation (expert axis shardable over 'model') ----
+    g = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["w_gate"].astype(x.dtype)))
+    u = jnp.einsum("ecd,edf->ecf", buf, p["w_up"].astype(x.dtype))
+    out = jnp.einsum("ecf,efd->ecd", g * u, p["w_down"].astype(x.dtype))
+    out = hint(out, "model", None, None)
+    out_flat = out.reshape(E * C, d)
+
+    # ---- combine ----
+    slot_safe = jnp.minimum(slot, E * C - 1)
+    gathered = out_flat[slot_safe] * keep[:, None]              # (N*k, d)
+    gathered = hint(gathered, "data", None)
+    gathered = gathered * gate_w.reshape(-1)[:, None].astype(x.dtype)
+    y = hint(jnp.zeros((N, d), x.dtype).at[tok].add(gathered), "data", None)
+
+    if "shared" in p:
+        y = y + gated_mlp_apply(p["shared"], xf)
+    return y.reshape(B, T, d), aux

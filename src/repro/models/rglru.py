@@ -1,0 +1,104 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin, arXiv:2402.19427).
+
+The recurrence  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)  is a
+first-order linear recurrence, evaluated over full sequences with
+``jax.lax.associative_scan`` (log-depth, TPU-friendly) and in O(1) per token
+at decode time.  a_t = exp(-c * softplus(Lambda) * r_t) with recurrence gate
+r_t and input gate i_t.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RGLRUConfig
+from repro.models.layers import init_linear, linear_apply
+from repro.models.shard_hints import hint
+
+Params = Dict[str, Any]
+
+_C = 8.0  # Griffin's fixed scaling constant
+
+
+def init_rglru(key, r: RGLRUConfig, d_model: int, dtype) -> Params:
+    w = r.lru_width or d_model
+    ks = jax.random.split(key, 6)
+    return {
+        # gated "recurrent unit" branch + linear gate branch (Griffin block)
+        "in_x": init_linear(ks[0], d_model, w, dtype),
+        "in_gate": init_linear(ks[1], d_model, w, dtype),
+        "conv_w": (jax.random.normal(ks[2], (r.d_conv, w))
+                   * r.d_conv ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "w_a": init_linear(ks[3], w, w, jnp.float32, bias=True),
+        "w_i": init_linear(ks[4], w, w, jnp.float32, bias=True),
+        # Lambda init so a^c is in (0.9, 0.999) at r=1 (Griffin appendix)
+        "lam": jnp.log(jnp.expm1(
+            -jnp.log(jnp.linspace(0.9, 0.999, w)) / _C)).astype(jnp.float32),
+        "out": init_linear(ks[5], w, d_model, dtype),
+    }
+
+
+def _gates(p: Params, xw: jnp.ndarray):
+    xf = xw.astype(jnp.float32)
+    r_g = jax.nn.sigmoid(linear_apply(p["w_a"], xf))
+    i_g = jax.nn.sigmoid(linear_apply(p["w_i"], xf))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r_g       # (..., w), <= 0
+    a = jnp.exp(log_a)
+    # sqrt(1 - a^2) computed stably via log: 0.5*log1p(-exp(2 log_a))
+    beta = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, 1.0))
+    return a, beta * i_g * xf
+
+
+def _conv(x: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=jnp.float32)
+    for i in range(K):
+        out = out + pad[:, i:i + x.shape[1]].astype(jnp.float32) \
+            * w[K - 1 - i].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(x.dtype)
+
+
+def rglru_apply(p: Params, r: RGLRUConfig, x: jnp.ndarray) -> jnp.ndarray:
+    """Full-sequence path.  x: (B, T, d_model)."""
+    gate = jax.nn.gelu(linear_apply(p["in_gate"], x))
+    xw = _conv(linear_apply(p["in_x"], x), p["conv_w"], p["conv_b"])
+    xw = hint(xw, "data", None, "model")
+    a, b = _gates(p, xw)                                 # (B,T,w) fp32
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = h.astype(x.dtype) * gate
+    return linear_apply(p["out"], y)
+
+
+def rglru_init_state(r: RGLRUConfig, d_model: int, batch: int, dtype) -> Params:
+    w = r.lru_width or d_model
+    return {
+        "conv": jnp.zeros((batch, r.d_conv - 1, w), dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def rglru_decode(p: Params, r: RGLRUConfig, x: jnp.ndarray, state: Params
+                 ) -> Tuple[jnp.ndarray, Params]:
+    """One-token decode.  x: (B, 1, d_model)."""
+    gate = jax.nn.gelu(linear_apply(p["in_gate"], x[:, 0]))
+    xw_t = linear_apply(p["in_x"], x[:, 0])
+    hist = jnp.concatenate([state["conv"], xw_t[:, None]], axis=1)
+    # tap order: conv_w[0] multiplies the NEWEST sample (matches prefill)
+    wconv = p["conv_w"][::-1].astype(jnp.float32)
+    xw = (jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32), wconv)
+          + p["conv_b"].astype(jnp.float32)).astype(x.dtype)
+    a, b = _gates(p, xw)
+    h = a * state["h"] + b
+    y = h.astype(x.dtype) * gate
+    out = linear_apply(p["out"], y)[:, None]
+    return out, {"conv": hist[:, 1:].astype(state["conv"].dtype), "h": h}

@@ -1,0 +1,31 @@
+"""Rotary position embeddings, including the decoupled/partial variant used
+by MLA (only ``rope_head_dim`` dims rotate)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jnp.ndarray:
+    """(head_dim//2,) inverse frequencies."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray,
+               theta: float = 10_000.0) -> jnp.ndarray:
+    """x: (..., T, n_heads, head_dim); positions: (..., T) or (T,).
+
+    Rotates pairs (x[2i], x[2i+1]).  Returns same shape/dtype.
+    """
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                       # (hd/2,)
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., T, hd/2)
+    cos = jnp.cos(angles)[..., None, :]                        # (...,T,1,hd/2)
+    sin = jnp.sin(angles)[..., None, :]
+    xf = x.astype(jnp.float32)
+    x1 = xf[..., 0::2]
+    x2 = xf[..., 1::2]
+    r1 = x1 * cos - x2 * sin
+    r2 = x1 * sin + x2 * cos
+    out = jnp.stack([r1, r2], axis=-1).reshape(x.shape)
+    return out.astype(x.dtype)

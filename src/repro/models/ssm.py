@@ -1,0 +1,182 @@
+"""Mamba-2 SSD (state-space duality) block — chunked dual form
+[arXiv:2405.21060].
+
+The sequence is split into chunks of length Q.  Within a chunk the SSD is
+evaluated in its quadratic "attention-like" dual form (MXU-friendly); across
+chunks a compact (heads, head_dim, d_state) recurrent state is carried with
+``lax.scan``.  Decode is a single-step recurrence on the same state — O(1)
+per token, which is why mamba2 runs long_500k natively.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models.layers import init_linear, init_rmsnorm, linear_apply, rmsnorm_apply
+from repro.models.shard_hints import hint
+
+Params = Dict[str, Any]
+
+
+def d_inner(s: SSMConfig, d_model: int) -> int:
+    return s.expand * d_model
+
+
+def init_ssm(key, s: SSMConfig, d_model: int, dtype) -> Params:
+    di = d_inner(s, d_model)
+    assert di == s.n_heads * s.head_dim, (di, s.n_heads, s.head_dim)
+    conv_ch = di + 2 * s.d_state
+    ks = jax.random.split(key, 4)
+    return {
+        # projects to [z (di), x (di), B (n), C (n), dt (h)]
+        "in_proj": init_linear(ks[0], d_model,
+                               2 * di + 2 * s.d_state + s.n_heads, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.d_conv, conv_ch))
+                   * s.d_conv ** -0.5).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((s.n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((s.n_heads,), jnp.float32),
+        "D": jnp.ones((s.n_heads,), jnp.float32),
+        "norm": init_rmsnorm(di),
+        "out_proj": init_linear(ks[2], di, d_model, dtype),
+    }
+
+
+def _split_proj(s: SSMConfig, proj: jnp.ndarray, d_model: int):
+    di = d_inner(s, d_model)
+    n = s.d_state
+    z = proj[..., :di]
+    xbc = proj[..., di:di + di + 2 * n]
+    dt = proj[..., di + di + 2 * n:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jnp.ndarray, w: jnp.ndarray, b: jnp.ndarray
+                 ) -> jnp.ndarray:
+    """Depthwise causal conv over time.  xbc: (B, T, Ch); w: (K, Ch)."""
+    K = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(K):  # K is tiny (4); unrolled taps beat a conv call here
+        out = out + pad[:, i:i + xbc.shape[1]].astype(jnp.float32) \
+            * w[K - 1 - i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
+                B_in: jnp.ndarray, C_in: jnp.ndarray, D: jnp.ndarray, *,
+                chunk: int, init_state: jnp.ndarray = None
+                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD over a full sequence.
+
+    x: (B, T, h, p); dt: (B, T, h) (post-softplus); B_in/C_in: (B, T, n);
+    a_log: (h,) (A = -exp(a_log)).  Returns (y: (B,T,h,p), final_state:
+    (B, h, p, n)).
+    """
+    Bsz, T, h, p_dim = x.shape
+    n = B_in.shape[-1]
+    Q = min(chunk, T)
+    assert T % Q == 0, (T, Q)
+    nc = T // Q
+    A = -jnp.exp(a_log)                                        # (h,) < 0
+
+    xd = x.astype(jnp.float32) * dt[..., None]                 # x * dt
+    dA = dt * A                                                # (B,T,h) <= 0
+
+    def reshape_c(v, tail):
+        return v.reshape((Bsz, nc, Q) + tail).transpose(
+            (1, 0, 2) + tuple(range(3, 3 + len(tail))))
+
+    xd_c = reshape_c(xd, (h, p_dim))        # (nc,B,Q,h,p)
+    dA_c = reshape_c(dA, (h,))              # (nc,B,Q,h)
+    B_c = reshape_c(B_in.astype(jnp.float32), (n,))
+    C_c = reshape_c(C_in.astype(jnp.float32), (n,))
+
+    if init_state is None:
+        init_state = jnp.zeros((Bsz, h, p_dim, n), jnp.float32)
+
+    def body(S, inp):
+        xd_k, dA_k, B_k, C_k = inp
+        cum = jnp.cumsum(dA_k, axis=1)                         # (B,Q,h)
+        total = cum[:, -1]                                     # (B,h)
+        # intra-chunk (dual quadratic form)
+        rel = cum[:, :, None, :] - cum[:, None, :, :]          # (B,q,k,h)
+        causal = (jnp.arange(Q)[:, None] >= jnp.arange(Q)[None, :])
+        L = jnp.exp(jnp.where(causal[None, :, :, None], rel, -jnp.inf))
+        scores = jnp.einsum("bqn,bkn->bqk", C_k, B_k)          # (B,q,k)
+        y_intra = jnp.einsum("bqk,bqkh,bkhp->bqhp", scores, L, xd_k)
+        # inter-chunk: contribution of carried state
+        y_inter = jnp.einsum("bqn,bhpn,bqh->bqhp", C_k, S, jnp.exp(cum))
+        # state update
+        w_end = jnp.exp(total[:, None, :] - cum)               # (B,Q,h)
+        S_new = jnp.exp(total)[:, :, None, None] * S + jnp.einsum(
+            "bqh,bqn,bqhp->bhpn", w_end, B_k, xd_k)
+        return S_new, y_intra + y_inter
+
+    S_final, y = jax.lax.scan(body, init_state, (xd_c, dA_c, B_c, C_c))
+    y = y.transpose(1, 0, 2, 3, 4).reshape(Bsz, T, h, p_dim)
+    y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y, S_final
+
+
+def ssm_apply(p: Params, s: SSMConfig, d_model: int, x: jnp.ndarray
+              ) -> jnp.ndarray:
+    """Full-sequence (train/prefill) path.  x: (B, T, d_model)."""
+    Bsz, T, _ = x.shape
+    di = d_inner(s, d_model)
+    proj = linear_apply(p["in_proj"], x)
+    z, xbc, dt = _split_proj(s, proj, d_model)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = hint(xbc[..., :di].reshape(Bsz, T, s.n_heads, s.head_dim),
+              "data", None, "model", None)
+    B_in = xbc[..., di:di + s.d_state]
+    C_in = xbc[..., di + s.d_state:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    y, _ = ssd_chunked(xs, dt, p["A_log"], B_in, C_in, p["D"], chunk=s.chunk)
+    y = y.reshape(Bsz, T, di).astype(x.dtype)
+    y = rmsnorm_apply(p["norm"], y * jax.nn.silu(z))
+    return linear_apply(p["out_proj"], y)
+
+
+def ssm_init_state(s: SSMConfig, d_model: int, batch: int, dtype) -> Params:
+    di = d_inner(s, d_model)
+    return {
+        "conv": jnp.zeros((batch, s.d_conv - 1, di + 2 * s.d_state), dtype),
+        "ssd": jnp.zeros((batch, s.n_heads, s.head_dim, s.d_state),
+                         jnp.float32),
+    }
+
+
+def ssm_decode(p: Params, s: SSMConfig, d_model: int, x: jnp.ndarray,
+               state: Params) -> Tuple[jnp.ndarray, Params]:
+    """One-token decode.  x: (B, 1, d_model).  O(1) state update."""
+    Bsz = x.shape[0]
+    di = d_inner(s, d_model)
+    proj = linear_apply(p["in_proj"], x[:, 0])
+    z, xbc, dt = _split_proj(s, proj, d_model)
+    # conv over [state ++ current]
+    hist = jnp.concatenate([state["conv"], xbc[:, None]], axis=1)  # (B,K,Ch)
+    # tap order: conv_w[0] multiplies the NEWEST sample (matches prefill)
+    w = p["conv_w"][::-1].astype(jnp.float32)
+    conv = jnp.einsum("bkc,kc->bc", hist.astype(jnp.float32), w)
+    xbc_t = jax.nn.silu(conv + p["conv_b"].astype(jnp.float32)
+                        ).astype(x.dtype)
+    xs = xbc_t[..., :di].reshape(Bsz, s.n_heads, s.head_dim)
+    B_in = xbc_t[..., di:di + s.d_state].astype(jnp.float32)
+    C_in = xbc_t[..., di + s.d_state:].astype(jnp.float32)
+    dt_t = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # (B,h)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt_t * A)                                     # (B,h)
+    xd = xs.astype(jnp.float32) * dt_t[..., None]
+    S = decay[:, :, None, None] * state["ssd"] + jnp.einsum(
+        "bn,bhp->bhpn", B_in, xd)
+    y = jnp.einsum("bn,bhpn->bhp", C_in, S)
+    y = y + xs.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(Bsz, di).astype(x.dtype)
+    y = rmsnorm_apply(p["norm"], y * jax.nn.silu(z))
+    out = linear_apply(p["out_proj"], y)[:, None]
+    new_state = {"conv": hist[:, 1:].astype(state["conv"].dtype), "ssd": S}
+    return out, new_state

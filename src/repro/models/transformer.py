@@ -1,0 +1,393 @@
+"""Decoder-only LM composition covering all assigned families:
+dense / moe / mla / hybrid(rglru) / ssm / vlm (decoder of enc-dec lives in
+``encdec.py`` but reuses the same layer machinery).
+
+Layers are grouped into *cycles* (the smallest repeating structural unit —
+e.g. gemma2's (local, global), recurrentgemma's (rglru, rglru, attn)) and the
+body of the network is a ``lax.scan`` over stacked cycle parameters.  This
+keeps trace/compile time O(cycle) instead of O(n_layers) — essential for the
+60-layer MoE dry-runs — and gives the checkpointing policy a natural remat
+unit.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.shard_hints import hint
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (embedding_apply, gated_mlp_apply,
+                                 init_embedding, init_gated_mlp, init_linear,
+                                 linear_apply, make_norm, softcap,
+                                 unembed_apply)
+
+Params = Dict[str, Any]
+
+
+def _dtype(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.dtype]
+
+
+# ---------------------------------------------------------------------------
+# Layer structure
+# ---------------------------------------------------------------------------
+
+def layer_sig(cfg: ModelConfig, i: int) -> Tuple:
+    """Structural signature of layer i: (mixer, window, is_moe)."""
+    kind = cfg.block_kind(i)
+    window = cfg.attn_window(i) if kind == "attn" else None
+    is_moe = bool(cfg.moe.n_experts) and i >= cfg.moe.first_dense_layers
+    return (kind, window, is_moe)
+
+
+def cycle_period(cfg: ModelConfig) -> int:
+    p = len(cfg.attention.layer_pattern)
+    if cfg.rglru is not None:
+        p = p * len(cfg.rglru.block_pattern) // math.gcd(
+            p, len(cfg.rglru.block_pattern))
+    return p
+
+
+def layer_plan(cfg: ModelConfig) -> Tuple[List[int], int, int, List[int]]:
+    """Returns (prefix_layers, n_cycles, period, suffix_layers)."""
+    start = cfg.moe.first_dense_layers if cfg.moe.n_experts else 0
+    start = min(start, cfg.n_layers)
+    P = cycle_period(cfg)
+    body = cfg.n_layers - start
+    n_cycles = body // P
+    n_suffix = body - n_cycles * P
+    prefix = list(range(start))
+    suffix = list(range(cfg.n_layers - n_suffix, cfg.n_layers))
+    return prefix, n_cycles, P, suffix
+
+
+# ---------------------------------------------------------------------------
+# Single layer
+# ---------------------------------------------------------------------------
+
+def init_layer(key, cfg: ModelConfig, i: int) -> Params:
+    dt = _dtype(cfg)
+    kind, _, is_moe = layer_sig(cfg, i)
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    norm_init, _ = make_norm(cfg.norm, cfg.d_model)
+    p: Params = {"norm1": norm_init(), "norm2": norm_init()}
+    if kind == "attn":
+        a = cfg.attention
+        if a.kind == "mla":
+            p["mixer"] = attn.init_mla(k1, a, cfg.d_model, dt)
+        else:
+            p["mixer"] = attn.init_gqa(k1, a, cfg.d_model, dt)
+    elif kind == "rglru":
+        p["mixer"] = rglru_mod.init_rglru(k1, cfg.rglru, cfg.d_model, dt)
+    elif kind == "ssm":
+        p["mixer"] = ssm_mod.init_ssm(k1, cfg.ssm, cfg.d_model, dt)
+    else:
+        raise ValueError(kind)
+    if cfg.family == "ssm":
+        p.pop("norm2")          # mamba2: single mixer per block, no FFN
+    elif is_moe:
+        p["ffn"] = moe_mod.init_moe(k2, cfg.moe, cfg.d_model, dt)
+    else:
+        p["ffn"] = init_gated_mlp(k2, cfg.d_model, cfg.d_ff, dt)
+    if cfg.encoder is not None:
+        # enc-dec decoder layer: cross-attention to encoder memory
+        p["norm_x"] = norm_init()
+        p["xattn"] = _init_xattn(k3, cfg, dt)
+    return p
+
+
+def _init_xattn(key, cfg: ModelConfig, dt) -> Params:
+    a = cfg.attention
+    ks = jax.random.split(key, 4)
+    ed = cfg.encoder.d_model
+    h, hd = a.n_heads, a.head_dim
+    return {
+        "wq": init_linear(ks[0], cfg.d_model, h * hd, dt),
+        "wk": init_linear(ks[1], ed, h * hd, dt),
+        "wv": init_linear(ks[2], ed, h * hd, dt),
+        "wo": init_linear(ks[3], h * hd, cfg.d_model, dt),
+    }
+
+
+def _xattn_apply(p: Params, cfg: ModelConfig, x: jnp.ndarray,
+                 memory: jnp.ndarray) -> jnp.ndarray:
+    a = cfg.attention
+    B, T, _ = x.shape
+    S = memory.shape[1]
+    h, hd = a.n_heads, a.head_dim
+    q = linear_apply(p["wq"], x).reshape(B, T, h, hd)
+    k = linear_apply(p["wk"], memory).reshape(B, S, h, hd)
+    v = linear_apply(p["wv"], memory).reshape(B, S, h, hd)
+    out = attn.chunked_attention(q, k, v, causal=False,
+                                 chunk=min(512, S))
+    return linear_apply(p["wo"], out.reshape(B, T, -1))
+
+
+def layer_apply(p: Params, cfg: ModelConfig, sig: Tuple, x: jnp.ndarray, *,
+                positions: jnp.ndarray, memory: Optional[jnp.ndarray],
+                chunk: int = 512) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Full-sequence layer.  Returns (x, moe_aux)."""
+    kind, window, is_moe = sig
+    _, norm_apply = make_norm(cfg.norm, cfg.d_model)
+    aux = jnp.zeros((), jnp.float32)
+    h = norm_apply(p["norm1"], x)
+    if kind == "attn":
+        a = cfg.attention
+        if a.kind == "mla":
+            y = attn.mla_apply(p["mixer"], a, h, positions=positions,
+                               window=window, chunk=chunk)
+        else:
+            y = attn.gqa_apply(p["mixer"], a, h, window=window,
+                               positions=positions, chunk=chunk)
+    elif kind == "rglru":
+        y = rglru_mod.rglru_apply(p["mixer"], cfg.rglru, h)
+    else:
+        y = ssm_mod.ssm_apply(p["mixer"], cfg.ssm, cfg.d_model, h)
+    x = x + y
+    if memory is not None and "xattn" in p:
+        x = x + _xattn_apply(p["xattn"], cfg, norm_apply(p["norm_x"], x),
+                             memory)
+    if "norm2" in p:
+        h2 = norm_apply(p["norm2"], x)
+        if is_moe:
+            y2, aux = moe_mod.moe_apply(p["ffn"], cfg.moe, h2)
+        else:
+            y2 = gated_mlp_apply(p["ffn"], h2)
+        x = x + y2
+    return x, aux
+
+
+# ---------------------------------------------------------------------------
+# Decode-path cache per layer
+# ---------------------------------------------------------------------------
+
+def layer_init_cache(cfg: ModelConfig, i: int, batch: int, cache_len: int,
+                     long_mode: bool) -> Params:
+    dt = _dtype(cfg)
+    kind, window, _ = layer_sig(cfg, i)
+    if kind == "attn":
+        a = cfg.attention
+        L = cache_len
+        if window is not None:
+            L = min(L, window)
+        if long_mode and cfg.long_context == "window":
+            L = min(L, cfg.long_window)
+        if a.kind == "mla":
+            return attn.mla_init_cache(a, batch, L, dt)
+        return attn.gqa_init_cache(a, batch, L, dt)
+    if kind == "rglru":
+        return rglru_mod.rglru_init_state(cfg.rglru, cfg.d_model, batch, dt)
+    return ssm_mod.ssm_init_state(cfg.ssm, cfg.d_model, batch, dt)
+
+
+def layer_decode(p: Params, cfg: ModelConfig, sig: Tuple, x: jnp.ndarray,
+                 cache: Params, t: jnp.ndarray,
+                 memory: Optional[jnp.ndarray]
+                 ) -> Tuple[jnp.ndarray, Params]:
+    kind, _, _ = sig
+    _, norm_apply = make_norm(cfg.norm, cfg.d_model)
+    h = norm_apply(p["norm1"], x)
+    if kind == "attn":
+        a = cfg.attention
+        if a.kind == "mla":
+            y, cache = attn.mla_decode(p["mixer"], a, h, cache, t)
+        else:
+            y, cache = attn.gqa_decode(p["mixer"], a, h, cache, t)
+    elif kind == "rglru":
+        y, cache = rglru_mod.rglru_decode(p["mixer"], cfg.rglru, h, cache)
+    else:
+        y, cache = ssm_mod.ssm_decode(p["mixer"], cfg.ssm, cfg.d_model, h,
+                                      cache)
+    x = x + y
+    if memory is not None and "xattn" in p:
+        x = x + _xattn_apply(p["xattn"], cfg, norm_apply(p["norm_x"], x),
+                             memory)
+    if "norm2" in p:
+        h2 = norm_apply(p["norm2"], x)
+        if sig[2]:
+            y2, _ = moe_mod.moe_apply(p["ffn"], cfg.moe, h2)
+        else:
+            y2 = gated_mlp_apply(p["ffn"], h2)
+        x = x + y2
+    return x, cache
+
+
+# ---------------------------------------------------------------------------
+# Whole-model init
+# ---------------------------------------------------------------------------
+
+def _tree_stack(trees: List[Params]) -> Params:
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_lm(key, cfg: ModelConfig) -> Params:
+    dt = _dtype(cfg)
+    prefix, n_cycles, P, suffix = layer_plan(cfg)
+    keys = jax.random.split(key, cfg.n_layers + 4)
+    p: Params = {"embed": init_embedding(keys[0], cfg.vocab, cfg.d_model, dt)}
+    norm_init, _ = make_norm(cfg.norm, cfg.d_model)
+    p["final_norm"] = norm_init()
+    if not cfg.tie_embeddings:
+        p["unembed"] = init_linear(keys[1], cfg.d_model, cfg.vocab, dt)
+    if cfg.modality.kind == "vision":
+        p["projector"] = init_linear(keys[2], cfg.modality.feat_dim,
+                                     cfg.d_model, dt)
+    p["prefix"] = [init_layer(keys[4 + i], cfg, i) for i in prefix]
+    base = len(prefix)
+    cycles = []
+    for c in range(n_cycles):
+        cyc = [init_layer(keys[4 + base + c * P + j], cfg, base + c * P + j)
+               for j in range(P)]
+        cycles.append(cyc)
+    p["body"] = _tree_stack(cycles) if cycles else None
+    p["suffix"] = [init_layer(keys[4 + i], cfg, i) for i in suffix]
+    return p
+
+
+def body_sigs(cfg: ModelConfig) -> List[Tuple]:
+    prefix, n_cycles, P, _ = layer_plan(cfg)
+    base = len(prefix)
+    return [layer_sig(cfg, base + j) for j in range(P)]
+
+
+# ---------------------------------------------------------------------------
+# Whole-model forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def embed_inputs(p: Params, cfg: ModelConfig, tokens: jnp.ndarray,
+                 patches: Optional[jnp.ndarray]) -> jnp.ndarray:
+    dt = _dtype(cfg)
+    x = embedding_apply(p["embed"], tokens, compute_dtype=dt)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+    if cfg.modality.kind == "vision" and patches is not None:
+        vis = linear_apply(p["projector"], patches.astype(dt))
+        x = jnp.concatenate([vis, x], axis=1)
+    return hint(x, "data", None, None)
+
+
+def lm_apply(p: Params, cfg: ModelConfig, tokens: jnp.ndarray, *,
+             patches: Optional[jnp.ndarray] = None,
+             memory: Optional[jnp.ndarray] = None,
+             remat: bool = True,
+             chunk: int = 512) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """tokens: (B, T_text).  Returns (logits over the *text* positions,
+    moe_aux_loss).  For VLM, ``patches`` prepend cfg.modality.n_tokens
+    embeddings; logits for those positions are dropped."""
+    prefix, n_cycles, P, suffix = layer_plan(cfg)
+    x = embed_inputs(p, cfg, tokens, patches)
+    B, T, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(T), (B, T))
+    aux = jnp.zeros((), jnp.float32)
+
+    for i, lp in zip(prefix, p["prefix"]):
+        x, a = layer_apply(lp, cfg, layer_sig(cfg, i), x,
+                           positions=positions, memory=memory, chunk=chunk)
+        aux = aux + a
+
+    if p["body"] is not None:
+        sigs = body_sigs(cfg)
+
+        def cycle(carry, cyc_params):
+            x, aux = carry
+            for j in range(P):
+                x, a = layer_apply(
+                    cyc_params[j], cfg, sigs[j], x, positions=positions,
+                    memory=memory, chunk=chunk)
+                aux = aux + a
+            return (x, aux), None
+
+        body_fn = jax.checkpoint(cycle) if remat else cycle
+        (x, aux), _ = jax.lax.scan(body_fn, (x, aux), p["body"])
+
+    for i, lp in zip(suffix, p["suffix"]):
+        x, a = layer_apply(lp, cfg, layer_sig(cfg, i), x,
+                           positions=positions, memory=memory, chunk=chunk)
+        aux = aux + a
+
+    _, norm_apply = make_norm(cfg.norm, cfg.d_model)
+    x = norm_apply(p["final_norm"], x)
+    n_vis = cfg.modality.n_tokens if cfg.modality.kind == "vision" else 0
+    if n_vis:
+        x = x[:, n_vis:]
+    if cfg.tie_embeddings:
+        logits = unembed_apply(p["embed"], x)
+    else:
+        logits = linear_apply(p["unembed"], x)
+    logits = hint(logits, "data", None, "model")
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits, aux
+
+
+# ---------------------------------------------------------------------------
+# Whole-model decode
+# ---------------------------------------------------------------------------
+
+def lm_init_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                  long_mode: bool = False) -> Params:
+    prefix, n_cycles, P, suffix = layer_plan(cfg)
+    base = len(prefix)
+    cache: Params = {
+        "prefix": [layer_init_cache(cfg, i, batch, cache_len, long_mode)
+                   for i in prefix],
+        "suffix": [layer_init_cache(cfg, i, batch, cache_len, long_mode)
+                   for i in suffix],
+    }
+    if n_cycles:
+        cyc = [[layer_init_cache(cfg, base + j, batch, cache_len, long_mode)
+                for j in range(P)] for _ in range(n_cycles)]
+        cache["body"] = _tree_stack(cyc)
+    else:
+        cache["body"] = None
+    return cache
+
+
+def lm_decode(p: Params, cfg: ModelConfig, token: jnp.ndarray,
+              cache: Params, t: jnp.ndarray, *,
+              memory: Optional[jnp.ndarray] = None
+              ) -> Tuple[jnp.ndarray, Params]:
+    """token: (B,) int32; t: (B,) absolute positions.  One decode step."""
+    prefix, n_cycles, P, suffix = layer_plan(cfg)
+    dt = _dtype(cfg)
+    x = embedding_apply(p["embed"], token[:, None], compute_dtype=dt)
+    x = x * jnp.asarray(cfg.d_model ** 0.5, dt)
+
+    new_cache: Params = {"prefix": [], "suffix": [], "body": None}
+    for i, lp, lc in zip(prefix, p["prefix"], cache["prefix"]):
+        x, nc = layer_decode(lp, cfg, layer_sig(cfg, i), x, lc, t, memory)
+        new_cache["prefix"].append(nc)
+
+    if p["body"] is not None:
+        sigs = body_sigs(cfg)
+
+        def cycle(x, scanned):
+            cyc_params, cyc_cache = scanned
+            new_cc = []
+            for j in range(P):
+                x, nc = layer_decode(cyc_params[j], cfg, sigs[j], x,
+                                     cyc_cache[j], t, memory)
+                new_cc.append(nc)
+            return x, new_cc
+
+        x, new_body = jax.lax.scan(cycle, x, (p["body"], cache["body"]))
+        new_cache["body"] = new_body
+
+    for i, lp, lc in zip(suffix, p["suffix"], cache["suffix"]):
+        x, nc = layer_decode(lp, cfg, layer_sig(cfg, i), x, lc, t, memory)
+        new_cache["suffix"].append(nc)
+
+    _, norm_apply = make_norm(cfg.norm, cfg.d_model)
+    x = norm_apply(p["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = unembed_apply(p["embed"], x)
+    else:
+        logits = linear_apply(p["unembed"], x)
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits[:, 0], new_cache

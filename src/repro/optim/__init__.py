@@ -1,0 +1,7 @@
+from repro.optim.schedules import constant, polynomial_decay, step_decay
+from repro.optim.sgd import (clip_by_global_norm, global_norm, init_momentum,
+                             momentum_update)
+
+__all__ = ["constant", "polynomial_decay", "step_decay",
+           "clip_by_global_norm", "global_norm", "init_momentum",
+           "momentum_update"]

@@ -1,0 +1,29 @@
+"""Learning-rate schedules from the paper's training tables (App. C)."""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax.numpy as jnp
+
+
+def step_decay(eta0: float, boundaries: Sequence[int], factor: float = 0.1
+               ) -> Callable:
+    """'divides by 10 at epoch 64 and 96' — boundaries in *steps*."""
+    bounds = jnp.asarray(list(boundaries))
+
+    def lr(step):
+        n = jnp.sum(step >= bounds)
+        return eta0 * factor ** n
+    return lr
+
+
+def polynomial_decay(eta0: float, max_steps: int, power: float = 0.5
+                     ) -> Callable:
+    def lr(step):
+        frac = jnp.clip(step / max_steps, 0.0, 1.0)
+        return eta0 * (1.0 - frac) ** power
+    return lr
+
+
+def constant(eta0: float) -> Callable:
+    return lambda step: jnp.asarray(eta0)

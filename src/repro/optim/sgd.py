@@ -1,0 +1,44 @@
+"""Vanilla momentum SGD — the optimizer form the paper's Algorithms 1-3 are
+written against:  u <- m*u - eta*grad ;  w <- w + u.
+
+Weight decay is applied as L2-in-gradient (Caffe semantics, matching the
+paper's training setup tables)."""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+def init_momentum(params: Params) -> Params:
+    return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+
+def momentum_update(params: Params, grads: Params, velocity: Params, *,
+                    lr: jnp.ndarray, momentum: float = 0.9,
+                    weight_decay: float = 0.0
+                    ) -> Tuple[Params, Params, Params]:
+    """Returns (new_params, new_velocity, update).  ``update`` is the weight
+    delta u applied this step — what Gaia/DGC accumulate and exchange."""
+    def upd(w, g, u):
+        g = g + weight_decay * w
+        u_new = momentum * u - lr * g
+        return u_new
+    new_v = jax.tree_util.tree_map(upd, params, grads, velocity)
+    new_p = jax.tree_util.tree_map(lambda w, u: w + u, params, new_v)
+    return new_p, new_v, new_v
+
+
+def global_norm(tree: Params) -> jnp.ndarray:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def clip_by_global_norm(tree: Params, max_norm: float) -> Params:
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-12))
+    return jax.tree_util.tree_map(lambda l: l * scale, tree)

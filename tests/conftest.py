@@ -1,0 +1,10 @@
+import numpy as np
+import pytest
+
+# NOTE: XLA_FLAGS / host-device-count is deliberately NOT set here — smoke
+# tests and benches must see 1 device; only launch/dryrun.py forces 512.
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,163 @@
+"""Semantics of the four decentralized algorithms, validated step-by-step on
+a tiny quadratic model where every quantity is analytically checkable."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.algorithms.base import ModelFns, tree_size
+from repro.core.algorithms.bsp import BSP
+from repro.core.algorithms.dgc import DGC, warmup_sparsity
+from repro.core.algorithms.fedavg import FedAvg
+from repro.core.algorithms.gaia import Gaia
+
+K = 3
+DIM = 8
+
+
+def make_quadratic_fns():
+    """loss_k(w) = 0.5 * ||w - target||^2 with per-node targets in batch."""
+    def loss_and_grad(params, mstate, batch):
+        w = params["w"]
+        diff = w - batch["target"]
+        loss = 0.5 * jnp.sum(diff ** 2)
+        return loss, {"w": diff}, mstate
+    return ModelFns(loss_and_grad=loss_and_grad)
+
+
+def make_batch(targets):
+    return {"target": jnp.asarray(targets)}
+
+
+@pytest.fixture
+def setup():
+    fns = make_quadratic_fns()
+    params = {"w": jnp.zeros((DIM,))}
+    mstate = {"dummy": jnp.zeros((1,))}
+    targets = np.stack([np.full(DIM, float(k + 1)) for k in range(K)])
+    return fns, params, mstate, targets
+
+
+def test_bsp_equals_centralized_sgd(setup):
+    fns, params, mstate, targets = setup
+    algo = BSP(fns, K, momentum=0.0, weight_decay=0.0)
+    state = algo.init(params, mstate)
+    lr = 0.1
+    w = np.zeros(DIM)
+    for t in range(5):
+        state, m = algo.step(state, make_batch(targets),
+                             jnp.float32(lr), jnp.int32(t))
+        g = np.mean([w - targets[k] for k in range(K)], axis=0)
+        w = w - lr * g
+        np.testing.assert_allclose(np.asarray(state["params"]["w"]), w,
+                                   rtol=1e-5)
+    assert float(m["comm_floats"]) == tree_size(params)
+
+
+def test_gaia_threshold_zero_equals_bsp_sum(setup):
+    """With T=0 every update is significant: all nodes apply everyone's
+    update each step -> all replicas identical."""
+    fns, params, mstate, targets = setup
+    algo = Gaia(fns, K, momentum=0.0, t0=0.0)
+    state = algo.init(params, mstate)
+    for t in range(3):
+        state, m = algo.step(state, make_batch(targets),
+                             jnp.float32(0.05), jnp.int32(t))
+    w = np.asarray(state["params"]["w"])
+    for k in range(1, K):
+        np.testing.assert_allclose(w[k], w[0], rtol=1e-5)
+    # acc fully cleared when everything is significant
+    assert float(jnp.abs(state["acc"]["w"]).max()) < 1e-7
+
+
+def test_gaia_huge_threshold_is_fully_local(setup):
+    """With T=inf nothing is exchanged: each node converges to its own
+    target (the §4.3 specialization failure mode, distilled)."""
+    fns, params, mstate, targets = setup
+    algo = Gaia(fns, K, momentum=0.0, t0=1e9)
+    state = algo.init(params, mstate)
+    for t in range(200):
+        state, m = algo.step(state, make_batch(targets),
+                             jnp.float32(0.1), jnp.int32(t))
+    w = np.asarray(state["params"]["w"])
+    for k in range(K):
+        np.testing.assert_allclose(w[k], targets[k], atol=1e-3)
+    assert float(m["comm_floats"]) == 0.0
+
+
+def test_fedavg_syncs_only_at_interval(setup):
+    fns, params, mstate, targets = setup
+    algo = FedAvg(fns, K, momentum=0.0, iter_local=5)
+    state = algo.init(params, mstate)
+    comm = []
+    for t in range(10):
+        state, m = algo.step(state, make_batch(targets),
+                             jnp.float32(0.1), jnp.int32(t))
+        comm.append(float(m["comm_floats"]))
+        w = np.asarray(state["params"]["w"])
+        if (t % 5) == 4:                      # just synced: replicas equal
+            np.testing.assert_allclose(w[0], w[1], rtol=1e-6)
+    assert sum(c > 0 for c in comm) == 2      # steps 4 and 9
+
+
+def test_fedavg_local_models_diverge_between_syncs(setup):
+    fns, params, mstate, targets = setup
+    algo = FedAvg(fns, K, momentum=0.0, iter_local=50)
+    state = algo.init(params, mstate)
+    for t in range(3):
+        state, m = algo.step(state, make_batch(targets),
+                             jnp.float32(0.1), jnp.int32(t))
+    w = np.asarray(state["params"]["w"])
+    assert not np.allclose(w[0], w[1])
+
+
+def test_dgc_exchanges_only_top_fraction(setup):
+    fns, params, mstate, targets = setup
+    # make one coordinate's gradient dominant on each node
+    targets = np.zeros((K, DIM))
+    targets[:, 0] = 100.0
+    algo = DGC(fns, K, momentum=0.0, clip=1e9, sparsity=0.875)  # keep 1/8
+    state = algo.init(params, mstate)
+    state, m = algo.step(state, make_batch(targets),
+                         jnp.float32(0.1), jnp.int32(0))
+    w = np.asarray(state["params"]["w"])
+    # only coordinate 0 was exchanged and applied
+    assert abs(w[0]) > 0
+    np.testing.assert_allclose(w[1:], 0.0, atol=1e-7)
+    # residual keeps the unexchanged mass
+    acc = np.asarray(state["acc"]["w"])
+    assert np.all(acc[:, 0] == 0.0)
+
+
+def test_dgc_momentum_factor_masking(setup):
+    fns, params, mstate, targets = setup
+    targets = np.zeros((K, DIM))
+    targets[:, 0] = 100.0
+    algo = DGC(fns, K, momentum=0.9, clip=1e9, sparsity=0.875)
+    state = algo.init(params, mstate)
+    state, _ = algo.step(state, make_batch(targets),
+                         jnp.float32(0.1), jnp.int32(0))
+    vel = np.asarray(state["vel"]["w"])
+    assert np.all(vel[:, 0] == 0.0)           # cleared where exchanged
+
+
+def test_warmup_schedule():
+    assert warmup_sparsity(0, 4) == 0.75
+    assert warmup_sparsity(4, 4) == 0.9375
+    assert warmup_sparsity(100, 4) == 0.999
+
+
+def test_comm_accounting_gaia_decreases_with_threshold(setup):
+    fns, params, mstate, targets = setup
+    comm = {}
+    for t0 in (0.0, 0.5, 1e9):
+        algo = Gaia(fns, K, momentum=0.0, t0=t0)
+        state = algo.init(params, mstate)
+        total = 0.0
+        for t in range(5):
+            state, m = algo.step(state, make_batch(targets),
+                                 jnp.float32(0.05), jnp.int32(t))
+            total += float(m["comm_floats"])
+        comm[t0] = total
+    assert comm[0.0] >= comm[0.5] >= comm[1e9]
+    assert comm[1e9] == 0.0

@@ -1,0 +1,112 @@
+"""Per-architecture smoke tests: a REDUCED variant of each assigned config
+(2 layers, d_model<=256, <=4 experts) runs one forward + one train step +
+one decode step on CPU, asserting output shapes and no NaNs.  The FULL
+configs are exercised only via the dry-run (ShapeDtypeStructs)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models import decode_step, forward, init_cache, init_model, loss_fn
+
+KEY = jax.random.PRNGKey(0)
+
+
+def make_batch(cfg, B=2, T=64):
+    b = {"tokens": jax.random.randint(KEY, (B, T), 0, cfg.vocab),
+         "labels": jax.random.randint(jax.random.PRNGKey(1), (B, T), 0,
+                                      cfg.vocab)}
+    if cfg.modality.kind == "vision":
+        b["patches"] = jax.random.normal(
+            KEY, (B, cfg.modality.n_tokens, cfg.modality.feat_dim))
+    if cfg.encoder is not None:
+        b["frames"] = jax.random.normal(
+            KEY, (B, cfg.encoder.n_frames, cfg.modality.feat_dim))
+    return b
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_forward_shapes_and_finite(arch):
+    cfg = get_config(arch).reduced()
+    assert cfg.n_layers == 2 and cfg.d_model <= 512
+    assert cfg.moe.n_experts <= 4
+    p = init_model(KEY, cfg)
+    B, T = 2, 64
+    batch = make_batch(cfg, B, T)
+    logits, aux = forward(p, cfg, batch, chunk=32)
+    assert logits.shape == (B, T, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_one_train_step_no_nan(arch):
+    cfg = get_config(arch).reduced()
+    p = init_model(KEY, cfg)
+    batch = make_batch(cfg)
+
+    def loss(p):
+        l, _ = loss_fn(p, cfg, batch, chunk=32)
+        return l
+    l0, grads = jax.value_and_grad(loss)(p)
+    assert bool(jnp.isfinite(l0))
+    finite = jax.tree_util.tree_map(
+        lambda g: bool(jnp.all(jnp.isfinite(g))), grads)
+    assert all(jax.tree_util.tree_leaves(finite)), arch
+    # apply an SGD step and verify the loss is still finite (and params moved)
+    p2 = jax.tree_util.tree_map(lambda w, g: w - 1e-3 * g.astype(w.dtype),
+                                p, grads)
+    l1 = loss(p2)
+    assert bool(jnp.isfinite(l1))
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_decode_step(arch):
+    cfg = get_config(arch).reduced()
+    p = init_model(KEY, cfg)
+    B = 2
+    batch = make_batch(cfg, B)
+    cache = init_cache(cfg, B, 32)
+    db = {"token": batch["tokens"][:, 0], "t": jnp.zeros((B,), jnp.int32)}
+    if "frames" in batch:
+        db["frames"] = batch["frames"]
+    logits, cache2 = decode_step(p, cfg, db, cache)
+    assert logits.shape == (B, cfg.vocab)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+
+@pytest.mark.parametrize("arch", ["qwen3-0.6b", "mamba2-780m",
+                                  "recurrentgemma-2b"])
+def test_reduced_prefill_decode_agree(arch):
+    """Greedy next-token from full forward == from step-by-step decode."""
+    cfg = get_config(arch).reduced()
+    p = init_model(KEY, cfg)
+    B, T = 1, 24
+    batch = make_batch(cfg, B, T)
+    logits, _ = forward(p, cfg, batch, chunk=8)
+    cache = init_cache(cfg, B, T)
+    for t in range(T):
+        db = {"token": batch["tokens"][:, t], "t": jnp.full((B,), t)}
+        step_logits, cache = decode_step(p, cfg, db, cache)
+    np.testing.assert_allclose(np.asarray(step_logits),
+                               np.asarray(logits[:, -1]),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_n_params_sane():
+    """Config-derived parameter counts are within family expectations."""
+    expect = {
+        "qwen3-0.6b": (0.4e9, 1.1e9),
+        "gemma2-9b": (8e9, 12e9),
+        "deepseek-v2-236b": (180e9, 280e9),
+        "deepseek-v2-lite-16b": (12e9, 20e9),
+        "mamba2-780m": (0.5e9, 1.1e9),
+        "minicpm3-4b": (3e9, 5.5e9),
+        "starcoder2-3b": (2.5e9, 4.5e9),
+    }
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).n_params()
+        assert lo < n < hi, (arch, n)
+    # MoE active < total
+    ds = get_config("deepseek-v2-236b")
+    assert ds.n_active_params() < 0.2 * ds.n_params()

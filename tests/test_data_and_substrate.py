@@ -1,0 +1,122 @@
+"""Data pipeline, synthetic generators, optimizer, checkpointing."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpointing import latest_step, restore, save
+from repro.data.pipeline import DecentralizedLoader, PartitionLoader
+from repro.data.synthetic import (synth_geo_images, synth_images,
+                                  synth_tokens)
+from repro.optim import (clip_by_global_norm, global_norm, init_momentum,
+                         momentum_update, polynomial_decay, step_decay)
+
+
+def test_synth_images_deterministic_and_learnable_structure():
+    a = synth_images(100, seed=3)
+    b = synth_images(100, seed=3)
+    np.testing.assert_array_equal(a.x, b.x)
+    # same class, same world -> closer than different class (on average)
+    c = synth_images(2000, seed=0, noise=0.3)
+    x0 = c.x[c.y == 0].mean(0)
+    x1 = c.x[c.y == 1].mean(0)
+    assert np.abs(x0 - x1).mean() > 0.05
+
+
+def test_synth_images_val_shares_world():
+    tr = synth_images(500, seed=0)
+    va = synth_images(500, seed=9)
+    m_tr = [tr.x[tr.y == c].mean(0) for c in range(10) if (tr.y == c).any()]
+    m_va = [va.x[va.y == c].mean(0) for c in range(10) if (va.y == c).any()]
+    # prototypes match across splits (class_seed shared)
+    d_same = np.mean([np.abs(a - b).mean() for a, b in zip(m_tr, m_va)])
+    d_cross = np.abs(m_tr[0] - m_va[1]).mean()
+    assert d_same < d_cross
+
+
+def test_synth_geo_images_home_concentration():
+    ds, region = synth_geo_images(4000, n_regions=5, n_classes=15,
+                                  home_share=0.7, seed=0)
+    # each class should be concentrated in one region
+    shares = []
+    for c in range(15):
+        m = ds.y == c
+        counts = np.bincount(region[m], minlength=5)
+        shares.append(counts.max() / counts.sum())
+    assert np.mean(shares) > 0.55      # ~0.7 + uniform remainder
+
+
+def test_synth_tokens_markov_structure():
+    ds = synth_tokens(8, 512, vocab=64, seed=0)
+    assert ds.tokens.shape == (8, 512)
+    # order-2 structure: bigram entropy < unigram entropy * 2
+    flat = ds.tokens.reshape(-1)
+    assert len(np.unique(flat)) > 10
+
+
+def test_partition_loader_epochs_cover_data():
+    x = np.arange(100).reshape(100, 1).astype(np.float32)
+    y = np.arange(100).astype(np.int32)
+    ld = PartitionLoader(x, y, batch=10, seed=0)
+    seen = set()
+    for _ in range(10):
+        xb, yb = ld.next()
+        seen.update(yb.tolist())
+    assert seen == set(range(100))
+
+
+def test_decentralized_loader_stacked_shapes():
+    parts = [(np.zeros((50, 4), np.float32), np.zeros(50, np.int32)),
+             (np.ones((60, 4), np.float32), np.ones(60, np.int32))]
+    ld = DecentralizedLoader(parts, batch=8, seed=0)
+    xs, ys = ld.next_stacked()
+    assert xs.shape == (2, 8, 4) and ys.shape == (2, 8)
+    assert xs[0].sum() == 0 and xs[1].sum() == 8 * 4
+
+
+def test_momentum_update_matches_reference():
+    params = {"w": jnp.ones((3,))}
+    grads = {"w": jnp.full((3,), 2.0)}
+    vel = init_momentum(params)
+    p, v, u = momentum_update(params, grads, vel, lr=jnp.float32(0.1),
+                              momentum=0.9, weight_decay=0.0)
+    np.testing.assert_allclose(np.asarray(v["w"]), -0.2)
+    np.testing.assert_allclose(np.asarray(p["w"]), 0.8)
+    p2, v2, _ = momentum_update(p, grads, v, lr=jnp.float32(0.1),
+                                momentum=0.9)
+    np.testing.assert_allclose(np.asarray(v2["w"]), 0.9 * -0.2 - 0.2)
+
+
+def test_clip_by_global_norm():
+    t = {"a": jnp.full((4,), 3.0)}          # norm 6
+    c = clip_by_global_norm(t, 3.0)
+    assert float(global_norm(c)) == pytest.approx(3.0, rel=1e-5)
+    t2 = {"a": jnp.full((4,), 0.1)}
+    c2 = clip_by_global_norm(t2, 3.0)
+    np.testing.assert_allclose(np.asarray(c2["a"]), 0.1)
+
+
+def test_schedules():
+    lr = step_decay(1.0, [10, 20])
+    assert float(lr(5)) == 1.0
+    assert float(lr(15)) == pytest.approx(0.1)
+    assert float(lr(25)) == pytest.approx(0.01)
+    pd = polynomial_decay(1.0, 100, power=1.0)
+    assert float(pd(50)) == pytest.approx(0.5)
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6).reshape(2, 3).astype(jnp.bfloat16),
+            "b": [jnp.zeros(4), {"c": jnp.ones((2, 2), jnp.int32)}]}
+    path = str(tmp_path / "ckpt")
+    save(path, tree, step=7)
+    assert latest_step(path) == 7
+    like = jax.tree_util.tree_map(jnp.zeros_like, tree)
+    got = restore(path, like, step=7)
+    for a, b in zip(jax.tree_util.tree_leaves(got),
+                    jax.tree_util.tree_leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype

@@ -1,0 +1,14 @@
+"""End-to-end SPMD backend test (subprocess: needs its own device count)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_dist_backend_all_strategies():
+    script = os.path.join(os.path.dirname(__file__), "dist_backend_script.py")
+    out = subprocess.run([sys.executable, script], capture_output=True,
+                         text=True, timeout=900)
+    assert "ALL_DIST_OK" in out.stdout, out.stdout + "\n" + out.stderr

@@ -1,0 +1,193 @@
+"""Model-component correctness: SSD vs naive recurrence, RG-LRU scan vs
+step-by-step, MLA absorbed decode vs full attention, MoE properties,
+prefill/decode consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (AttentionConfig, MoEConfig, RGLRUConfig,
+                                SSMConfig)
+from repro.models import attention as attn_mod
+from repro.models import moe as moe_mod
+from repro.models import rglru as rglru_mod
+from repro.models import ssm as ssm_mod
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 SSD: chunked dual form == naive sequential recurrence
+# ---------------------------------------------------------------------------
+
+def naive_ssd(x, dt, a_log, B_in, C_in, D):
+    Bsz, T, h, p = x.shape
+    n = B_in.shape[-1]
+    A = -np.exp(np.asarray(a_log))
+    S = np.zeros((Bsz, h, p, n))
+    ys = np.zeros((Bsz, T, h, p))
+    x, dt, B_in, C_in = map(np.asarray, (x, dt, B_in, C_in))
+    for t in range(T):
+        decay = np.exp(dt[:, t] * A)                      # (B,h)
+        xd = x[:, t] * dt[:, t][..., None]                # (B,h,p)
+        S = decay[:, :, None, None] * S + np.einsum(
+            "bn,bhp->bhpn", B_in[:, t], xd)
+        ys[:, t] = np.einsum("bn,bhpn->bhp", C_in[:, t], S)
+    ys += np.asarray(x) * np.asarray(D)[None, None, :, None]
+    return ys, S
+
+
+@pytest.mark.parametrize("T,chunk", [(32, 8), (64, 16), (48, 48)])
+def test_ssd_chunked_matches_naive(T, chunk):
+    Bsz, h, p, n = 2, 3, 4, 5
+    x = jax.random.normal(KEY, (Bsz, T, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.PRNGKey(1), (Bsz, T, h)))
+    a_log = jnp.zeros((h,))
+    B_in = jax.random.normal(jax.random.PRNGKey(2), (Bsz, T, n))
+    C_in = jax.random.normal(jax.random.PRNGKey(3), (Bsz, T, n))
+    D = jnp.ones((h,))
+    y, S = ssm_mod.ssd_chunked(x, dt, a_log, B_in, C_in, D, chunk=chunk)
+    y_ref, S_ref = naive_ssd(x, dt, a_log, B_in, C_in, D)
+    np.testing.assert_allclose(np.asarray(y), y_ref, atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(S), S_ref, atol=1e-4, rtol=1e-4)
+
+
+def test_ssm_prefill_decode_consistency():
+    """Running ssm_apply over T tokens == T ssm_decode steps."""
+    s = SSMConfig(d_state=8, d_conv=4, expand=2, n_heads=4, head_dim=8,
+                  chunk=8)
+    d_model = 16
+    p = ssm_mod.init_ssm(KEY, s, d_model, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, d_model)) * 0.5
+    full = ssm_mod.ssm_apply(p, s, d_model, x)
+    state = ssm_mod.ssm_init_state(s, d_model, 2, jnp.float32)
+    outs = []
+    for t in range(16):
+        o, state = ssm_mod.ssm_decode(p, s, d_model, x[:, t:t + 1], state)
+        outs.append(o)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step),
+                               atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU
+# ---------------------------------------------------------------------------
+
+def test_rglru_scan_matches_stepwise():
+    r = RGLRUConfig(lru_width=16, d_conv=4)
+    d_model = 12
+    p = rglru_mod.init_rglru(KEY, r, d_model, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 10, d_model))
+    full = rglru_mod.rglru_apply(p, r, x)
+    state = rglru_mod.rglru_init_state(r, d_model, 2, jnp.float32)
+    outs = []
+    for t in range(10):
+        o, state = rglru_mod.rglru_decode(p, r, x[:, t:t + 1], state)
+        outs.append(o)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step),
+                               atol=1e-5, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Attention: prefill/decode consistency, MLA absorbed decode
+# ---------------------------------------------------------------------------
+
+def test_gqa_prefill_decode_consistency():
+    a = AttentionConfig(kind="gqa", n_heads=4, n_kv_heads=2, head_dim=16)
+    d_model = 32
+    p = attn_mod.init_gqa(KEY, a, d_model, jnp.float32)
+    T = 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, T, d_model))
+    positions = jnp.broadcast_to(jnp.arange(T), (2, T))
+    full = attn_mod.gqa_apply(p, a, x, window=None, positions=positions,
+                              chunk=4)
+    cache = attn_mod.gqa_init_cache(a, 2, T, jnp.float32)
+    outs = []
+    for t in range(T):
+        o, cache = attn_mod.gqa_decode(p, a, x[:, t:t + 1], cache,
+                                       jnp.full((2,), t))
+        outs.append(o)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_gqa_ring_buffer_equals_sliding_window():
+    """A ring buffer of W slots == sliding-window attention of width W."""
+    a = AttentionConfig(kind="gqa", n_heads=2, n_kv_heads=2, head_dim=8,
+                        sliding_window=4, layer_pattern=("local",))
+    d_model = 16
+    p = attn_mod.init_gqa(KEY, a, d_model, jnp.float32)
+    T, W = 12, 4
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, T, d_model))
+    positions = jnp.broadcast_to(jnp.arange(T), (1, T))
+    full = attn_mod.gqa_apply(p, a, x, window=W, positions=positions,
+                              chunk=4)
+    cache = attn_mod.gqa_init_cache(a, 1, W, jnp.float32)   # W slots only
+    outs = []
+    for t in range(T):
+        o, cache = attn_mod.gqa_decode(p, a, x[:, t:t + 1], cache,
+                                       jnp.full((1,), t))
+        outs.append(o)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_mla_absorbed_decode_matches_prefill():
+    a = AttentionConfig(kind="mla", n_heads=4, n_kv_heads=4, head_dim=32,
+                        q_lora_rank=16, kv_lora_rank=8, rope_head_dim=8,
+                        nope_head_dim=16, v_head_dim=16)
+    d_model = 32
+    p = attn_mod.init_mla(KEY, a, d_model, jnp.float32)
+    T = 10
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, T, d_model))
+    positions = jnp.broadcast_to(jnp.arange(T), (2, T))
+    full = attn_mod.mla_apply(p, a, x, positions=positions, chunk=5)
+    cache = attn_mod.mla_init_cache(a, 2, T, jnp.float32)
+    outs = []
+    for t in range(T):
+        o, cache = attn_mod.mla_decode(p, a, x[:, t:t + 1], cache,
+                                       jnp.full((2,), t))
+        outs.append(o)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step),
+                               atol=1e-4, rtol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+def test_moe_output_finite_and_aux_positive():
+    m = MoEConfig(n_experts=4, n_shared=1, top_k=2, d_ff_expert=16,
+                  capacity_factor=2.0)
+    p = moe_mod.init_moe(KEY, m, 8, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 8))
+    y, aux = moe_mod.moe_apply(p, m, x)
+    assert y.shape == x.shape
+    assert bool(jnp.all(jnp.isfinite(y)))
+    assert float(aux) > 0.0
+
+
+def test_moe_capacity_drops_tokens_gracefully():
+    m = MoEConfig(n_experts=2, n_shared=0, top_k=1, d_ff_expert=8,
+                  capacity_factor=0.1)       # absurdly low capacity
+    p = moe_mod.init_moe(KEY, m, 8, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 64, 8))
+    y, aux = moe_mod.moe_apply(p, m, x)
+    assert bool(jnp.all(jnp.isfinite(y)))
+
+
+def test_moe_grad_flows_to_router():
+    m = MoEConfig(n_experts=4, n_shared=0, top_k=2, d_ff_expert=8)
+    p = moe_mod.init_moe(KEY, m, 8, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 32, 8))
+
+    def loss(p):
+        y, aux = moe_mod.moe_apply(p, m, x)
+        return jnp.sum(y ** 2) + aux
+    g = jax.grad(loss)(p)
+    assert float(jnp.abs(g["router"]["w"]).sum()) > 0.0

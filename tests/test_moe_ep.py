@@ -1,0 +1,14 @@
+"""shard_map expert-parallel MoE == dense MoE (subprocess: own device count)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.slow
+def test_moe_ep_matches_dense():
+    script = os.path.join(os.path.dirname(__file__), "moe_ep_script.py")
+    out = subprocess.run([sys.executable, script], capture_output=True,
+                         text=True, timeout=600)
+    assert "EP_MOE_OK" in out.stdout, out.stdout + "\n" + out.stderr

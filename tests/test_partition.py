@@ -1,0 +1,93 @@
+"""Property-based tests (hypothesis) for the label-skew partitioner — the
+system invariants every experiment depends on."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import (label_distribution, partition_80_20,
+                                  partition_by_region, partition_label_skew,
+                                  skew_index)
+
+
+@st.composite
+def labels_and_nodes(draw):
+    n_classes = draw(st.integers(2, 10))
+    n_nodes = draw(st.integers(2, min(5, n_classes)))
+    n = draw(st.integers(n_classes * n_nodes * 4, 600))
+    y = draw(st.lists(st.integers(0, n_classes - 1), min_size=n, max_size=n))
+    y = np.asarray(y, np.int64)
+    # ensure every class is present so partitions are non-degenerate
+    y[:n_classes] = np.arange(n_classes)
+    return y, n_nodes
+
+
+@st.composite
+def balanced_labels_and_nodes(draw):
+    n_classes = draw(st.integers(2, 10))
+    n_nodes = draw(st.integers(2, min(5, n_classes)))
+    per = draw(st.integers(n_nodes * 4, 60))
+    y = np.repeat(np.arange(n_classes), per)
+    rng = np.random.default_rng(draw(st.integers(0, 100)))
+    rng.shuffle(y)
+    return y.astype(np.int64), n_nodes
+
+
+@given(labels_and_nodes(), st.floats(0.0, 1.0), st.integers(0, 5))
+@settings(max_examples=40, deadline=None)
+def test_partition_is_exact_cover(args, skew, seed):
+    y, n_nodes = args
+    parts = partition_label_skew(y, n_nodes, skew, seed=seed)
+    all_idx = np.concatenate(parts)
+    assert len(all_idx) == len(y)
+    assert len(np.unique(all_idx)) == len(y)          # disjoint + complete
+
+
+@given(labels_and_nodes(), st.integers(0, 5))
+@settings(max_examples=25, deadline=None)
+def test_full_skew_gives_disjoint_label_sets(args, seed):
+    y, n_nodes = args
+    parts = partition_label_skew(y, n_nodes, 1.0, seed=seed)
+    label_sets = [set(np.unique(y[p])) for p in parts]
+    for i in range(n_nodes):
+        for j in range(i + 1, n_nodes):
+            assert not (label_sets[i] & label_sets[j])
+
+
+@given(balanced_labels_and_nodes(), st.integers(0, 3))
+@settings(max_examples=25, deadline=None)
+def test_skew_index_monotone_in_skew(args, seed):
+    y, n_nodes = args
+    vals = [skew_index(y, partition_label_skew(y, n_nodes, s, seed=seed))
+            for s in (0.0, 0.5, 1.0)]
+    # tolerance scales with sampling noise (TV of an n-sample empirical
+    # distribution fluctuates ~ 1/sqrt(samples-per-node))
+    tol = 0.1 + 2.0 / np.sqrt(len(y) / n_nodes)
+    assert vals[0] <= vals[1] + tol
+    assert vals[1] <= vals[2] + tol
+    assert vals[2] >= 0.45        # full label skew is very skewed
+
+
+@given(labels_and_nodes())
+@settings(max_examples=20, deadline=None)
+def test_iid_partition_label_distributions_close(args):
+    y, n_nodes = args
+    parts = partition_label_skew(y, n_nodes, 0.0, seed=0)
+    dist = label_distribution(y, parts)
+    glob = np.bincount(y, minlength=dist.shape[1]) / len(y)
+    assert np.abs(dist - glob).max() < 0.35
+
+
+def test_partition_80_20():
+    y = np.repeat(np.arange(10), 100)
+    parts = partition_80_20(y, 10, major=0.8, seed=0)
+    assert sum(len(p) for p in parts) == len(y)
+    dist = label_distribution(y, parts)
+    for k in range(10):
+        assert abs(dist[k, k] - 0.8) < 0.05
+        assert abs(dist[k, (k - 1) % 10] - 0.2) < 0.05
+
+
+def test_partition_by_region():
+    region = np.asarray([0, 1, 2, 0, 1, 2, 0])
+    parts = partition_by_region(region, 3)
+    assert [len(p) for p in parts] == [3, 2, 2]

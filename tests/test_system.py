@@ -1,0 +1,104 @@
+"""End-to-end behaviour tests for the paper's system: short real training
+runs asserting the paper's qualitative claims hold in this implementation.
+
+These are the fastest versions of the claims that still discriminate —
+the full-scale versions live in benchmarks/ (fig1/fig5/fig6/fig8)."""
+import numpy as np
+import pytest
+
+from repro.configs.base import CommConfig
+from repro.configs.cnn_zoo import CNN_ZOO
+from repro.core import partition_label_skew, train_decentralized
+from repro.core.skewscout import THETA_LADDERS
+from repro.data.synthetic import synth_images
+
+STEPS = 250
+TRAIN = dict(steps=STEPS, batch=20, lr=0.02, eval_every=STEPS)
+
+
+@pytest.fixture(scope="module")
+def data():
+    ds = synth_images(2500, seed=0, noise=0.8, class_sep=0.35)
+    val = synth_images(600, seed=99, noise=0.8, class_sep=0.35)
+    return ds, val
+
+
+def _run(data, model, algo, skew, comm=None, **kw):
+    ds, val = data
+    idx = partition_label_skew(ds.y, 5, skew, seed=1)
+    parts = [(ds.x[i], ds.y[i]) for i in idx]
+    args = dict(TRAIN)
+    args.update(kw)
+    return train_decentralized(CNN_ZOO[model], algo, parts,
+                               (val.x, val.y), comm=comm or CommConfig(),
+                               **args)
+
+
+@pytest.mark.slow
+def test_bsp_iid_baseline_learns(data):
+    r = _run(data, "gn-lenet", "bsp", 0.0)
+    assert r.val_acc > 0.9, r.val_acc
+
+
+@pytest.mark.slow
+def test_noniid_hurts_fedavg_but_not_iid(data):
+    """Paper Fig 1: same theta retains accuracy IID, loses it non-IID."""
+    comm = CommConfig(iter_local=20)
+    iid = _run(data, "gn-lenet", "fedavg", 0.0, comm)
+    non = _run(data, "gn-lenet", "fedavg", 1.0, comm)
+    assert iid.val_acc > 0.85, iid.val_acc
+    assert non.val_acc < iid.val_acc - 0.05, (iid.val_acc, non.val_acc)
+
+
+@pytest.mark.slow
+def test_gaia_saves_communication_at_iid_quality(data):
+    comm = CommConfig(gaia_t0=0.10)
+    r = _run(data, "gn-lenet", "gaia", 0.0, comm)
+    assert r.val_acc > 0.85
+    assert r.comm_savings > 5.0, r.comm_savings
+
+
+@pytest.mark.slow
+def test_skewscout_tightens_theta_under_skew(data):
+    """Paper §7: under heavy skew the controller should walk theta toward
+    more communication (lower Gaia T0) relative to its start."""
+    comm = CommConfig(skewscout=True, travel_every=30, sigma_al=0.05)
+    r = _run(data, "gn-lenet", "gaia", 1.0, comm, theta_start_index=5)
+    assert r.skewscout_history, "no travel happened"
+    start = THETA_LADDERS["gaia"][5]
+    final = r.skewscout_history[-1].new_theta
+    assert final <= start, (start, final)
+
+
+@pytest.mark.slow
+def test_skewscout_relaxes_theta_when_iid(data):
+    comm = CommConfig(skewscout=True, travel_every=30, sigma_al=0.05)
+    r = _run(data, "gn-lenet", "gaia", 0.0, comm, theta_start_index=1)
+    assert r.skewscout_history
+    start = THETA_LADDERS["gaia"][1]
+    final = r.skewscout_history[-1].new_theta
+    assert final >= start, (start, final)
+
+
+@pytest.mark.slow
+def test_bn_minibatch_divergence_larger_under_skew(data):
+    """Paper Fig 4 mechanism, as a direct probe."""
+    import jax
+    from repro.core.divergence import bn_divergence
+    from repro.data.pipeline import DecentralizedLoader
+    from repro.models.cnn import init_cnn
+    ds, _ = data
+    cfg = CNN_ZOO["bn-lenet"]
+    params, _ = init_cnn(jax.random.PRNGKey(0), cfg)
+    divs = {}
+    for skew in (0.0, 1.0):
+        idx = partition_label_skew(ds.y, 2, skew, seed=1)
+        loader = DecentralizedLoader([(ds.x[i], ds.y[i]) for i in idx],
+                                     batch=20, seed=0)
+        acc = None
+        for _ in range(30):
+            xs, _ = loader.next_stacked()
+            mu_d, _ = bn_divergence(params, cfg, list(xs), layer=0)
+            acc = mu_d if acc is None else acc + mu_d
+        divs[skew] = float(np.mean(acc / 30))
+    assert divs[1.0] > 1.5 * divs[0.0], divs
