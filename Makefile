@@ -1,0 +1,20 @@
+PYTHON ?= python
+export PYTHONPATH := src:$(PYTHONPATH)
+
+.PHONY: test test-fast bench-smoke lint
+
+# tier-1 verify: the full test suite
+test:
+	$(PYTHON) -m pytest -x -q
+
+# skip the long end-to-end training tests
+test-fast:
+	$(PYTHON) -m pytest -x -q -m "not slow"
+
+# kernel microbenchmarks + the cheapest experiment benches
+bench-smoke:
+	$(PYTHON) -m benchmarks.run --only kernels,fig4
+
+# pyflakes-level check: every module compiles
+lint:
+	$(PYTHON) -m compileall -q src benchmarks examples tests

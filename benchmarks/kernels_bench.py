@@ -52,6 +52,19 @@ def run(quick: bool = False):
     rows.append(("oracle/dgc_quantile_1M",
                  timed(lambda: jax.block_until_ready(dq(vv)))))
 
+    from repro.topology import ring
+    topo = ring(8)
+    nbr_idx, nbr_w, self_w = (jnp.asarray(a) for a in
+                              topo.neighbor_arrays())
+    xs = jax.random.normal(KEY, (8, 1 << 17))        # 8 nodes x 128k params
+    nm = jax.jit(lambda x: ops.neighbor_mix(x, nbr_idx, nbr_w, self_w))
+    rows.append(("kernel/neighbor_mix_ring8_128k",
+                 timed(lambda: jax.block_until_ready(nm(xs)))))
+    W = jnp.asarray(topo.mixing, jnp.float32)
+    nr = jax.jit(lambda x: ref.neighbor_mix_ref(x, W))
+    rows.append(("oracle/neighbor_mix_dense",
+                 timed(lambda: jax.block_until_ready(nr(xs)))))
+
     x = jax.random.normal(KEY, (16, 16, 16, 64))
     sc, bi = jnp.ones(64), jnp.zeros(64)
     gn = jax.jit(lambda x: ops.group_norm(x, sc, bi, group_size=2))

@@ -17,7 +17,8 @@ import time
 
 from benchmarks import (fig1_accuracy, fig2_flickr, fig4_bn_divergence,
                         fig5_groupnorm, fig6_skew_degree, fig8_skewscout,
-                        kernels_bench, roofline, tab678_hparams)
+                        fig_topology, kernels_bench, roofline,
+                        tab678_hparams)
 
 BENCHES = {  # priority order: cheap + headline results first
     "kernels": (kernels_bench, "pallas kernels vs oracles"),
@@ -27,6 +28,7 @@ BENCHES = {  # priority order: cheap + headline results first
     "fig5": (fig5_groupnorm, "GroupNorm vs BatchNorm rescue"),
     "fig6": (fig6_skew_degree, "degree-of-skew sweep"),
     "fig2": (fig2_flickr, "geo-skew (Flickr-Mammal analogue)"),
+    "fig_topology": (fig_topology, "D-PSGD topology x skew sweep"),
     "tab678": (tab678_hparams, "theta sensitivity"),
     "roofline": (roofline, "dry-run roofline table"),
 }

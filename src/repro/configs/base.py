@@ -242,7 +242,11 @@ INPUT_SHAPES = {
 @dataclass(frozen=True)
 class CommConfig:
     """The paper's technique as a first-class trainer feature."""
-    strategy: str = "bsp"             # bsp | gaia | fedavg | dgc
+    strategy: str = "bsp"             # bsp | gaia | fedavg | dgc | dpsgd
+    # communication fabric (repro.topology): who talks to whom + link cost
+    topology: str = "full"            # full | ring | torus | random |
+    #                                   geo-wan | dcliques
+    link_profile: str = "uniform"     # uniform | datacenter | geo-wan
     # Gaia
     gaia_t0: float = 0.10
     # FedAvg

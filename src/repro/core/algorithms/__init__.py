@@ -1,8 +1,9 @@
 from repro.core.algorithms.base import ModelFns, tree_size
 from repro.core.algorithms.bsp import BSP
 from repro.core.algorithms.dgc import DGC, WARMUP_SPARSITIES, warmup_sparsity
+from repro.core.algorithms.dpsgd import DPSGD
 from repro.core.algorithms.fedavg import FedAvg
 from repro.core.algorithms.gaia import Gaia
 
 __all__ = ["ModelFns", "tree_size", "BSP", "DGC", "WARMUP_SPARSITIES",
-           "warmup_sparsity", "FedAvg", "Gaia"]
+           "warmup_sparsity", "DPSGD", "FedAvg", "Gaia"]

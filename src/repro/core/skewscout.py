@@ -11,6 +11,12 @@ Periodically (every ``travel_every`` minibatches):
     default), where C(θ) is the measured per-step communication since the
     last travel and CM is the full-model cost (BSP's per-step price).
 
+When a :class:`~repro.topology.CommLedger` is attached, C(θ)/CM is priced
+at the *link level*: floats are weighted by the inverse bandwidth of the
+links they crossed, so under the geo-wan profile scarce WAN bytes dominate
+the objective — the paper's Gaia setting, where only WAN traffic matters.
+With the uniform profile this reduces exactly to the flat float ratio.
+
 SkewScout is algorithm-agnostic: anything exposing a dynamic θ knob
 (Gaia t0, FedAvg iter_local, DGC sparsity) plugs in via ``theta_ladder``.
 """
@@ -46,8 +52,14 @@ class TravelReport:
 class SkewScout:
     def __init__(self, comm: CommConfig, algo_name: str, model_floats: int,
                  eval_acc_fn: Callable, *, start_index: Optional[int] = None,
-                 seed: int = 0):
-        """eval_acc_fn(params, mstate, x, y) -> accuracy in [0,1]."""
+                 seed: int = 0, ledger=None, warmup_travels: int = 1):
+        """eval_acc_fn(params, mstate, x, y) -> accuracy in [0,1].
+        ``ledger``: optional CommLedger; when given, C(θ)/CM is computed
+        from bandwidth-priced link traffic instead of raw floats.
+        ``warmup_travels``: initial probes that measure but do not move θ —
+        the first window's communication reflects the init transient
+        (updates are large at t=0 whatever θ is), so attributing it to the
+        current rung sends the hill climber the wrong way."""
         ladder = THETA_LADDERS[algo_name]
         kw = {} if comm.tuner == "hill" else {"seed": seed}
         self.tuner = make_tuner(comm.tuner, ladder, start_index=start_index,
@@ -55,6 +67,9 @@ class SkewScout:
         self.comm = comm
         self.model_floats = float(model_floats)
         self.eval_acc = eval_acc_fn
+        self.ledger = ledger
+        self.warmup_travels = warmup_travels
+        self._cost_mark = ledger.priced_cost() if ledger else 0.0
         self._comm_since = 0.0
         self._steps_since = 0
         self.history: List[TravelReport] = []
@@ -84,17 +99,36 @@ class SkewScout:
             acc_away = float(self.eval_acc(pk, sk, x_away, y_away))
             losses.append(max(0.0, acc_home - acc_away))
         al = float(np.mean(losses))
-        c_ratio = (self._comm_since / max(self._steps_since, 1)
-                   ) / self.model_floats
+        if self.ledger is not None:
+            # link-priced window cost vs. one full-model exchange (CM)
+            window = self.ledger.priced_cost() - self._cost_mark
+            c_ratio = (window / max(self._steps_since, 1)
+                       ) / self.ledger.full_exchange_cost(self.model_floats)
+        else:
+            c_ratio = (self._comm_since / max(self._steps_since, 1)
+                       ) / self.model_floats
         obj = (self.comm.lambda_al * max(0.0, al - self.comm.sigma_al)
                + self.comm.lambda_c * c_ratio)
         old = self.tuner.theta
-        new = self.tuner.step(obj)
+        if len(self.history) < self.warmup_travels:
+            new = old                     # measure-only warm-up probe
+        else:
+            new = self.tuner.step(obj)
         rep = TravelReport(step, old, al, c_ratio, obj, new)
         self.history.append(rep)
         self._comm_since = 0.0
         self._steps_since = 0
+        if self.ledger is not None:
+            self._cost_mark = self.ledger.priced_cost()
         return rep
+
+    def rebase_cost_mark(self) -> None:
+        """Re-anchor the priced-cost window after the caller books
+        traffic that should not count toward C(θ) — e.g. the model-travel
+        probe itself (the float-based path likewise excludes it from
+        ``_comm_since``)."""
+        if self.ledger is not None:
+            self._cost_mark = self.ledger.priced_cost()
 
     def travel_overhead_floats(self) -> float:
         """Cost of shipping one model per probe (counted against savings)."""

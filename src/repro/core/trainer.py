@@ -18,11 +18,14 @@ from repro.configs.cnn_zoo import CNNConfig
 from repro.core.algorithms.base import ModelFns, tree_size
 from repro.core.algorithms.bsp import BSP
 from repro.core.algorithms.dgc import DGC, warmup_sparsity
+from repro.core.algorithms.dpsgd import DPSGD
 from repro.core.algorithms.fedavg import FedAvg
 from repro.core.algorithms.gaia import Gaia
 from repro.core.skewscout import SkewScout
 from repro.data.pipeline import DecentralizedLoader
 from repro.models.cnn import cnn_apply, init_cnn
+from repro.topology import (LINK_PROFILES, CommLedger, Topology,
+                            build_topology)
 
 
 # ---------------------------------------------------------------------------
@@ -62,7 +65,8 @@ def make_cnn_fns(cfg: CNNConfig) -> Tuple[ModelFns, Callable]:
 
 def make_algorithm(name: str, fns: ModelFns, n_nodes: int,
                    comm: CommConfig, *, momentum: float = 0.9,
-                   weight_decay: float = 5e-4, lr0: Optional[float] = None):
+                   weight_decay: float = 5e-4, lr0: Optional[float] = None,
+                   topology: Optional[Topology] = None, seed: int = 0):
     if name == "bsp":
         return BSP(fns, n_nodes, momentum=momentum, weight_decay=weight_decay)
     if name == "gaia":
@@ -75,6 +79,14 @@ def make_algorithm(name: str, fns: ModelFns, n_nodes: int,
         return DGC(fns, n_nodes, momentum=momentum,
                    weight_decay=weight_decay, clip=comm.dgc_clip,
                    sparsity=comm.dgc_sparsity)
+    if name == "dpsgd":
+        # standalone fallback; label-aware topologies (dcliques) need the
+        # label histograms only train_decentralized can supply, so pass
+        # ``topology`` explicitly for those
+        topology = topology or build_topology(comm.topology, n_nodes,
+                                              seed=seed)
+        return DPSGD(fns, n_nodes, topology=topology, momentum=momentum,
+                     weight_decay=weight_decay)
     raise ValueError(name)
 
 
@@ -89,6 +101,11 @@ class RunResult:
     comm_savings: float
     skewscout_history: List = field(default_factory=list)
     extras: Dict[str, Any] = field(default_factory=dict)
+    # link-level accounting (repro.topology.CommLedger)
+    topology: str = "full"
+    comm_lan_floats: float = 0.0
+    comm_wan_floats: float = 0.0
+    sim_time_s: float = 0.0
 
 
 def train_decentralized(cnn_cfg: CNNConfig, algo_name: str,
@@ -101,19 +118,39 @@ def train_decentralized(cnn_cfg: CNNConfig, algo_name: str,
                         eval_every: int = 100, seed: int = 0,
                         theta_start_index: Optional[int] = None
                         ) -> RunResult:
+    if steps < 1:
+        raise ValueError(f"steps must be >= 1, got {steps}")
+    if eval_every < 1:
+        raise ValueError(f"eval_every must be >= 1, got {eval_every} "
+                         "(with steps < eval_every the final step still "
+                         "evaluates, but eval_every itself must be valid)")
     K = len(parts)
     fns, eval_acc = make_cnn_fns(cnn_cfg)
     params, mstate = init_cnn(jax.random.PRNGKey(seed), cnn_cfg)
+
+    # communication fabric: graph + link-level cost accounting
+    label_hist = None
+    if comm.topology in ("dcliques", "d-cliques"):
+        n_classes = int(max(int(y.max()) for _, y in parts)) + 1
+        label_hist = np.stack([np.bincount(np.asarray(y, np.int64),
+                                           minlength=n_classes)
+                               for _, y in parts])
+    topo = build_topology(comm.topology, K, label_hist=label_hist,
+                          seed=seed)
+    ledger = CommLedger(topo, LINK_PROFILES[comm.link_profile])
+
     algo = make_algorithm(algo_name, fns, K, comm, momentum=momentum,
-                          weight_decay=weight_decay, lr0=lr)
+                          weight_decay=weight_decay, lr0=lr, topology=topo,
+                          seed=seed)
     state = algo.init(params, mstate)
     loader = DecentralizedLoader(parts, batch, seed=seed)
     lr_fn = lr_schedule or (lambda s: lr)
 
     scout = None
-    if comm.skewscout and algo_name != "bsp":
+    if comm.skewscout and algo_name not in ("bsp", "dpsgd"):
         scout = SkewScout(comm, algo_name, tree_size(params), eval_acc,
-                          start_index=theta_start_index, seed=seed)
+                          start_index=theta_start_index, seed=seed,
+                          ledger=ledger)
 
     loss_curve, acc_curve = [], []
     comm_total = 0.0
@@ -139,6 +176,10 @@ def train_decentralized(cnn_cfg: CNNConfig, algo_name: str,
                                    jnp.asarray(t, jnp.int32), **kw)
         cf = float(metrics["comm_floats"])
         comm_total += cf
+        if algo_name == "dpsgd":
+            ledger.record_gossip(float(tree_size(params)))
+        elif cf > 0:
+            ledger.record_exchange(cf)
         if scout:
             scout.record_step(cf)
             rep = scout.maybe_travel(
@@ -146,12 +187,19 @@ def train_decentralized(cnn_cfg: CNNConfig, algo_name: str,
                 lambda node: loader.sample_train_subset(node, 256, seed=t))
             if rep is not None:
                 comm_total += tree_size(params)  # model traveling overhead
+                # one model total crosses the fabric per probe: M/K per node
+                ledger.record_exchange(float(tree_size(params)) / K)
+                scout.rebase_cost_mark()  # keep probe cost out of C(θ)
         if (t + 1) % eval_every == 0 or t == steps - 1:
             p, s = algo.eval_params(state)
             acc = eval_acc(p, s, val[0], val[1])
             acc_curve.append((t + 1, acc))
         loss_curve.append((t, float(metrics["loss"])))
 
+    if not acc_curve:
+        raise RuntimeError(
+            f"no evaluation happened in {steps} steps (eval_every="
+            f"{eval_every}); acc_curve is empty — check the schedule")
     bsp_equiv = float(tree_size(params)) * steps
     return RunResult(
         name=f"{cnn_cfg.name}/{algo_name}",
@@ -162,4 +210,10 @@ def train_decentralized(cnn_cfg: CNNConfig, algo_name: str,
         bsp_equiv_floats=bsp_equiv,
         comm_savings=bsp_equiv / max(comm_total, 1.0),
         skewscout_history=list(scout.history) if scout else [],
+        extras={"ledger": ledger.summary(),
+                "spectral_gap": topo.spectral_gap()},
+        topology=topo.name,
+        comm_lan_floats=ledger.lan_floats,
+        comm_wan_floats=ledger.wan_floats,
+        sim_time_s=ledger.sim_time_s,
     )

@@ -15,6 +15,7 @@ from repro.kernels import dgc_topk as _dgc
 from repro.kernels import flash_attention as _fa
 from repro.kernels import gaia_select as _gaia
 from repro.kernels import group_norm as _gn
+from repro.kernels import neighbor_mix as _nm
 
 
 def _default_interpret() -> bool:
@@ -59,6 +60,16 @@ def dgc_sparsify(v, sparsity, *, n_bins: int = 256, block_rows: int = 64,
     sel, cnt = _dgc.dgc_select(v, t, block_rows=block_rows,
                                interpret=interpret)
     return sel, cnt, t
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def neighbor_mix(x, nbr_idx, nbr_w, self_w, *, block_rows: int = 64,
+                 interpret: Optional[bool] = None) -> jnp.ndarray:
+    """Sparse gossip averaging y[k] = W[k,k]*x[k] + sum_j W[k,j]*x[j]
+    over padded neighbor lists (see Topology.neighbor_arrays)."""
+    interpret = _default_interpret() if interpret is None else interpret
+    return _nm.neighbor_mix(x, nbr_idx, nbr_w, self_w,
+                            block_rows=block_rows, interpret=interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("group_size", "eps",

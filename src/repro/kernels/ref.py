@@ -61,6 +61,13 @@ def abs_histogram_ref(v: jnp.ndarray, n_bins: int, v_max: jnp.ndarray
     return jnp.zeros((n_bins,), jnp.int32).at[idx].add(1)
 
 
+def neighbor_mix_ref(x: jnp.ndarray, mixing: jnp.ndarray) -> jnp.ndarray:
+    """Dense gossip-averaging oracle: ``W @ X`` with the full (K, K)
+    mixing matrix.  x: (K, N) stacked per-node vectors."""
+    return jnp.matmul(mixing.astype(jnp.float32),
+                      x.astype(jnp.float32)).astype(x.dtype)
+
+
 def group_norm_ref(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, *,
                    group_size: int, eps: float = 1e-5) -> jnp.ndarray:
     """x: (B, H, W, C) NHWC; groups of ``group_size`` adjacent channels."""

@@ -16,6 +16,7 @@ Enabled with REPRO_MOE_EP=1 under an active mesh with data+model axes
 """
 from __future__ import annotations
 
+import inspect
 import math
 from typing import Any, Dict, Tuple
 
@@ -24,6 +25,16 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import MoEConfig
+
+# newer jax promotes shard_map to jax.shard_map and (separately) renames
+# the replication-check kwarg check_rep -> check_vma; probe each change
+# independently since they landed in different releases
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map as _shard_map
+_CHECK_KW = ("check_vma" if "check_vma"
+             in inspect.signature(_shard_map).parameters else "check_rep")
 
 Params = Dict[str, Any]
 
@@ -130,13 +141,13 @@ def moe_apply_ep(p: Params, m: MoEConfig, x: jnp.ndarray, mesh
         y, aux = body(xb4.reshape(-1, d), rw, wg, wu, wd)
         return y.reshape(B_loc, 1, -1, d), aux
 
-    sm = jax.shard_map(
+    sm = _shard_map(
         body4, mesh=mesh,
         in_specs=(P("data", "model", None, None), P(None, None),
                   P("model", None, None), P("model", None, None),
                   P("model", None, None)),
         out_specs=(P("data", "model", None, None), P()),
-        check_vma=False)
+        **{_CHECK_KW: False})
     x4 = x.reshape(B, M, T // M, d)
     y, aux = sm(x4, p["router"]["w"], wg, wu, wd)
     return y.reshape(B, T, d), aux

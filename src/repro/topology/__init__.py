@@ -1,0 +1,37 @@
+"""Communication-fabric subsystem: who talks to whom, and what it costs.
+
+Module map
+----------
+``graphs.py``
+    :class:`Topology` (edge list + symmetric doubly-stochastic mixing
+    matrix + per-edge LAN/WAN class) and the builders: ``fully_connected``,
+    ``ring``, ``torus``, ``random_regular`` (expander), ``hierarchical``
+    (geo-WAN datacenters), ``d_cliques`` (label-aware cliques from
+    partition label histograms).  ``build_topology`` is the registry keyed
+    by ``CommConfig.topology``.
+
+``costs.py``
+    :class:`LinkProfile` (per-class bandwidth/latency presets in
+    ``LINK_PROFILES``: uniform | datacenter | geo-wan) and
+    :class:`CommLedger`, which turns each algorithm's exchanged floats
+    into per-link traffic, LAN/WAN totals, and a simulated wall-clock
+    step time.  The ledger is threaded through ``core/trainer.py`` and
+    prices SkewScout's ``C(theta)/CM`` objective in WAN-weighted cost.
+
+Downstream consumers
+--------------------
+``core/algorithms/dpsgd.py`` (gossip averaging = ``W @ params`` on graph
+edges, via the ``kernels/neighbor_mix.py`` Pallas kernel),
+``benchmarks/fig_topology.py`` (topology x skew sweep), and
+``examples/train_topology.py`` (the geo-WAN scenario end-to-end).
+"""
+from repro.topology.costs import LINK_PROFILES, CommLedger, LinkProfile
+from repro.topology.graphs import (Topology, build_topology, d_cliques,
+                                   fully_connected, hierarchical,
+                                   metropolis_weights, random_regular,
+                                   ring, torus)
+
+__all__ = ["LINK_PROFILES", "CommLedger", "LinkProfile", "Topology",
+           "build_topology", "d_cliques", "fully_connected",
+           "hierarchical", "metropolis_weights", "random_regular",
+           "ring", "torus"]

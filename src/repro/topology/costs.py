@@ -1,0 +1,136 @@
+"""Link-level communication cost accounting.
+
+Replaces the flat ``comm_floats`` scalar with per-link traffic: every
+exchange is attributed to the edges of the run's :class:`Topology`, split
+into LAN vs WAN totals, and priced into a simulated wall-clock step time
+(synchronous rounds: a step costs the slowest link's latency + transfer).
+
+Units: traffic in *floats* (the repo's communication currency, 4 bytes
+each); bandwidth in floats/second; latency in seconds.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Union
+
+import numpy as np
+
+from repro.topology.graphs import Topology
+
+
+@dataclass(frozen=True)
+class LinkProfile:
+    """Per-class bandwidth/latency.  ``uniform`` removes the LAN/WAN
+    distinction (every link is LAN-priced) — the seed repo's behaviour."""
+    name: str
+    lan_bandwidth: float        # floats / second
+    wan_bandwidth: float
+    lan_latency: float = 0.0    # seconds
+    wan_latency: float = 0.0
+
+    def bandwidth(self, cls: str) -> float:
+        return self.wan_bandwidth if cls == "wan" else self.lan_bandwidth
+
+    def latency(self, cls: str) -> float:
+        return self.wan_latency if cls == "wan" else self.lan_latency
+
+    def price_per_float(self, cls: str) -> float:
+        """Seconds per float — the scarcity weight used by SkewScout."""
+        return 1.0 / self.bandwidth(cls)
+
+
+# 4-byte floats: 10 Gb/s LAN ~ 312.5e6 floats/s; 100 Mb/s WAN ~ 3.125e6
+LINK_PROFILES: Dict[str, LinkProfile] = {
+    "uniform": LinkProfile("uniform", 312.5e6, 312.5e6, 0.0, 0.0),
+    "datacenter": LinkProfile("datacenter", 312.5e6, 312.5e6,
+                              1e-4, 1e-4),
+    "geo-wan": LinkProfile("geo-wan", 312.5e6, 3.125e6, 1e-4, 5e-2),
+}
+
+
+class CommLedger:
+    """Accumulates per-edge traffic and simulated time for one run.
+
+    ``record_exchange(c)``: all-to-all style — each node's ``c`` exchanged
+    floats are spread uniformly over its incident edges (the sum over
+    edges conserves ``K * c``).  ``record_gossip(m)``: D-PSGD style — every
+    edge carries the full model once per direction (``2m`` per edge).
+    """
+
+    def __init__(self, topology: Topology, profile: LinkProfile):
+        self.topology = topology
+        self.profile = profile
+        E = len(topology.edges)
+        self.edge_traffic = np.zeros(E)
+        self._deg = topology.degrees().astype(np.float64)
+        self._edge_bw = np.asarray(
+            [profile.bandwidth(c) for c in topology.edge_class])
+        self._edge_lat = np.asarray(
+            [profile.latency(c) for c in topology.edge_class])
+        self._is_wan = np.asarray(
+            [c == "wan" for c in topology.edge_class], bool)
+        self.lan_floats = 0.0
+        self.wan_floats = 0.0
+        self.sim_time_s = 0.0
+        # communication rounds recorded — includes probe/overhead
+        # exchanges, so this is NOT the trainer's step count
+        self.rounds = 0
+
+    # ---- recording ----
+    def _add(self, per_edge: np.ndarray) -> None:
+        self.edge_traffic += per_edge
+        self.lan_floats += float(per_edge[~self._is_wan].sum())
+        self.wan_floats += float(per_edge[self._is_wan].sum())
+        active = per_edge > 0
+        if active.any():
+            self.sim_time_s += float(np.max(
+                np.where(active,
+                         self._edge_lat + per_edge / self._edge_bw, 0.0)))
+        self.rounds += 1
+
+    def record_exchange(self,
+                        floats_per_node: Union[float, Sequence[float]]
+                        ) -> None:
+        """All-to-all exchange of ``floats_per_node`` floats per node,
+        routed uniformly over each node's incident edges."""
+        K = self.topology.n_nodes
+        c = np.broadcast_to(np.asarray(floats_per_node, np.float64), (K,))
+        per_edge = np.zeros(len(self.topology.edges))
+        share = np.where(self._deg > 0, c / np.maximum(self._deg, 1), 0.0)
+        for e, (i, j) in enumerate(self.topology.edges):
+            per_edge[e] = share[i] + share[j]
+        self._add(per_edge)
+
+    def record_gossip(self, model_floats: float) -> None:
+        """One gossip round: the full model crosses every edge, both
+        directions."""
+        self._add(np.full(len(self.topology.edges), 2.0 * model_floats))
+
+    # ---- pricing ----
+    @property
+    def total_floats(self) -> float:
+        return self.lan_floats + self.wan_floats
+
+    def priced_cost(self) -> float:
+        """Cumulative bandwidth-weighted cost (seconds of link time);
+        WAN floats dominate under the geo-wan profile, matching the
+        paper's Gaia objective of pricing scarce WAN bytes."""
+        return (self.lan_floats * self.profile.price_per_float("lan")
+                + self.wan_floats * self.profile.price_per_float("wan"))
+
+    def full_exchange_cost(self, model_floats: float) -> float:
+        """Priced cost of one BSP-style full-model exchange on this
+        topology — SkewScout's CM denominator."""
+        K = self.topology.n_nodes
+        share = model_floats / np.maximum(self._deg, 1)
+        cost = 0.0
+        for e, (i, j) in enumerate(self.topology.edges):
+            cls = self.topology.edge_class[e]
+            cost += (share[i] + share[j]) * self.profile.price_per_float(cls)
+        return max(cost, 1e-30)
+
+    def summary(self) -> Dict[str, float]:
+        return dict(lan_floats=self.lan_floats, wan_floats=self.wan_floats,
+                    total_floats=self.total_floats,
+                    sim_time_s=self.sim_time_s,
+                    priced_cost=self.priced_cost(), rounds=self.rounds)

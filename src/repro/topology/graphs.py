@@ -1,0 +1,312 @@
+"""Communication graphs and mixing matrices.
+
+Every topology is an undirected connected graph over the K nodes plus a
+symmetric doubly-stochastic mixing matrix ``W`` (Metropolis–Hastings
+weights), the gossip-averaging operator of D-PSGD (Lian et al., 2017):
+``x_{t+1} = W @ x_t`` restricted to graph edges.  Edges carry a link
+class ("lan" | "wan") consumed by the cost model in ``costs.py``.
+
+Builders:
+  fully_connected   all-to-all (W = 1/K everywhere: exact averaging)
+  ring              cycle graph — the minimal-bandwidth baseline
+  torus             2D wrap-around grid (near-square factorization of K)
+  random_regular    d-regular expander via the pairing model
+  hierarchical      geo-WAN: LAN cliques (datacenters) joined by WAN
+                    links between gateway nodes (the paper's Gaia setting)
+  d_cliques         label-aware cliques (Bellet et al., 2021): greedy
+                    clique assembly so each clique's aggregate label
+                    histogram is near-uniform; inter-clique ring over WAN
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+Edge = Tuple[int, int]
+
+
+@dataclass(frozen=True)
+class Topology:
+    """An undirected communication graph with gossip weights.
+
+    edges        canonical (i < j) undirected edge list
+    mixing       (K, K) symmetric doubly-stochastic matrix, supported
+                 exactly on edges + the diagonal
+    edge_class   per-edge link class, "lan" or "wan"
+    cliques      D-Cliques / datacenter grouping (empty when unused)
+    """
+    name: str
+    n_nodes: int
+    edges: Tuple[Edge, ...]
+    mixing: np.ndarray
+    edge_class: Tuple[str, ...] = ()
+    cliques: Tuple[Tuple[int, ...], ...] = ()
+
+    def __post_init__(self):
+        if not self.edge_class:
+            object.__setattr__(self, "edge_class",
+                               ("lan",) * len(self.edges))
+        assert len(self.edge_class) == len(self.edges)
+
+    # ---- structure ----
+    def neighbors(self, k: int) -> List[int]:
+        out = [j for i, j in self.edges if i == k]
+        out += [i for i, j in self.edges if j == k]
+        return sorted(out)
+
+    def degrees(self) -> np.ndarray:
+        deg = np.zeros(self.n_nodes, np.int64)
+        for i, j in self.edges:
+            deg[i] += 1
+            deg[j] += 1
+        return deg
+
+    @property
+    def max_degree(self) -> int:
+        return int(self.degrees().max()) if self.edges else 0
+
+    @property
+    def mean_degree(self) -> float:
+        return float(self.degrees().mean()) if self.edges else 0.0
+
+    def wan_edge_indices(self) -> np.ndarray:
+        return np.asarray([e for e, c in enumerate(self.edge_class)
+                           if c == "wan"], np.int64)
+
+    # ---- spectral ----
+    def spectral_gap(self) -> float:
+        """1 - |lambda_2(W)|: larger gap => faster gossip consensus."""
+        ev = np.sort(np.abs(np.linalg.eigvalsh(self.mixing)))
+        return float(1.0 - ev[-2]) if len(ev) > 1 else 1.0
+
+    # ---- kernel-facing layout ----
+    def neighbor_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Padded (idx, weight, self_weight) arrays for the neighbor_mix
+        kernel: idx (K, D) int32 padded with the node's own index, weight
+        (K, D) float32 padded with 0, self_w (K,) float32 = diag(W)."""
+        K, D = self.n_nodes, max(self.max_degree, 1)
+        idx = np.tile(np.arange(K, dtype=np.int32)[:, None], (1, D))
+        w = np.zeros((K, D), np.float32)
+        fill = np.zeros(K, np.int64)
+        for i, j in self.edges:
+            for a, b in ((i, j), (j, i)):
+                idx[a, fill[a]] = b
+                w[a, fill[a]] = self.mixing[a, b]
+                fill[a] += 1
+        return idx, w, np.diag(self.mixing).astype(np.float32)
+
+
+def _canonical(edges: Sequence[Edge]) -> List[Edge]:
+    return sorted({(min(i, j), max(i, j)) for i, j in edges if i != j})
+
+
+def metropolis_weights(n_nodes: int, edges: Sequence[Edge]) -> np.ndarray:
+    """Symmetric doubly-stochastic W: W_ij = 1/(1 + max(deg_i, deg_j)) on
+    edges, diagonal takes the slack.  Standard gossip weights — doubly
+    stochastic for any graph, uniform 1/K on the complete graph."""
+    deg = np.zeros(n_nodes, np.int64)
+    for i, j in edges:
+        deg[i] += 1
+        deg[j] += 1
+    W = np.zeros((n_nodes, n_nodes))
+    for i, j in edges:
+        W[i, j] = W[j, i] = 1.0 / (1.0 + max(deg[i], deg[j]))
+    np.fill_diagonal(W, 1.0 - W.sum(axis=1))
+    return W
+
+
+def _connected(n_nodes: int, edges: Sequence[Edge]) -> bool:
+    adj: Dict[int, List[int]] = {k: [] for k in range(n_nodes)}
+    for i, j in edges:
+        adj[i].append(j)
+        adj[j].append(i)
+    seen, stack = {0}, [0]
+    while stack:
+        for j in adj[stack.pop()]:
+            if j not in seen:
+                seen.add(j)
+                stack.append(j)
+    return len(seen) == n_nodes
+
+
+def _build(name: str, n_nodes: int, edges: Sequence[Edge],
+           edge_class: Sequence[str] = (),
+           cliques: Sequence[Tuple[int, ...]] = ()) -> Topology:
+    edges = _canonical(edges)
+    if n_nodes > 1:
+        assert _connected(n_nodes, edges), f"{name}: graph not connected"
+    return Topology(name, n_nodes, tuple(edges),
+                    metropolis_weights(n_nodes, edges),
+                    tuple(edge_class), tuple(tuple(c) for c in cliques))
+
+
+# ---------------------------------------------------------------------------
+# builders
+# ---------------------------------------------------------------------------
+
+def fully_connected(n_nodes: int) -> Topology:
+    edges = [(i, j) for i in range(n_nodes) for j in range(i + 1, n_nodes)]
+    return _build("full", n_nodes, edges)
+
+
+def ring(n_nodes: int) -> Topology:
+    edges = [(k, (k + 1) % n_nodes) for k in range(n_nodes)]
+    return _build("ring", n_nodes, edges)
+
+
+def torus(n_nodes: int, rows: Optional[int] = None) -> Topology:
+    """2D wrap-around grid; K is factorized near-square when ``rows`` is
+    omitted.  Falls back to a ring when K is prime or < 4."""
+    if rows is None:
+        rows = int(np.sqrt(n_nodes))
+        while rows > 1 and n_nodes % rows:
+            rows -= 1
+    if rows <= 1 or n_nodes < 4:
+        return ring(n_nodes)
+    cols = n_nodes // rows
+    edges = []
+    for r in range(rows):
+        for c in range(cols):
+            k = r * cols + c
+            edges.append((k, r * cols + (c + 1) % cols))
+            edges.append((k, ((r + 1) % rows) * cols + c))
+    return _build("torus", n_nodes, edges)
+
+
+def random_regular(n_nodes: int, degree: int = 4,
+                   seed: int = 0) -> Topology:
+    """d-regular graph via the pairing model — an expander with high
+    probability (good spectral gap at constant degree)."""
+    assert (n_nodes * degree) % 2 == 0, "K * degree must be even"
+    assert degree < n_nodes, (degree, n_nodes)
+    rng = np.random.default_rng(seed)
+    for _ in range(200):
+        stubs = np.repeat(np.arange(n_nodes), degree)
+        rng.shuffle(stubs)
+        pairs = stubs.reshape(-1, 2)
+        if any(i == j for i, j in pairs):
+            continue
+        edges = _canonical([tuple(p) for p in pairs])
+        if len(edges) != n_nodes * degree // 2:   # multi-edge collapsed
+            continue
+        if _connected(n_nodes, edges):
+            return _build(f"random{degree}", n_nodes, edges)
+    # degenerate small cases: fall back to a ring (always connected)
+    return ring(n_nodes)
+
+
+def hierarchical(n_nodes: int, n_datacenters: Optional[int] = None
+                 ) -> Topology:
+    """Geo-WAN: nodes grouped into datacenters; each datacenter is a LAN
+    clique, and datacenter gateways (first node of each group) form a WAN
+    clique — the paper's Gaia deployment shape."""
+    if n_datacenters is None:
+        n_datacenters = max(2, int(round(np.sqrt(n_nodes))))
+    n_datacenters = min(n_datacenters, n_nodes)
+    groups = [list(range(n_nodes))[d::n_datacenters]
+              for d in range(n_datacenters)]
+    groups = [g for g in groups if g]
+    edges, cls = [], []
+    for g in groups:
+        for a in range(len(g)):
+            for b in range(a + 1, len(g)):
+                edges.append((g[a], g[b]))
+                cls.append("lan")
+    gateways = [g[0] for g in groups]
+    for a in range(len(gateways)):
+        for b in range(a + 1, len(gateways)):
+            edges.append((gateways[a], gateways[b]))
+            cls.append("wan")
+    ec = {(min(i, j), max(i, j)): c for (i, j), c in zip(edges, cls)}
+    edges = _canonical(edges)
+    return _build("geo-wan", n_nodes, edges, [ec[e] for e in edges],
+                  cliques=groups)
+
+
+def d_cliques(label_hist: np.ndarray, clique_size: Optional[int] = None,
+              seed: int = 0) -> Topology:
+    """Label-aware D-Cliques (Bellet et al., 2021).
+
+    ``label_hist``: (K, C) per-node label counts.  Nodes are greedily
+    grouped into cliques of ~``clique_size`` so each clique's aggregate
+    label distribution tracks the global one (skew cancels *inside* the
+    clique); cliques are LAN-connected internally and joined by a WAN
+    ring of inter-clique edges.
+    """
+    K, C = label_hist.shape
+    if clique_size is None:
+        # one clique should be able to span the label space: with
+        # exclusive-label partitions each node holds ~C/K classes, so C
+        # nodes per clique recovers a near-uniform clique histogram
+        # (Bellet et al. use cliques of size n_classes)
+        clique_size = min(K, max(2, C))
+    n_cliques = max(1, int(np.ceil(K / clique_size)))
+    glob = label_hist.sum(axis=0) / max(label_hist.sum(), 1)
+
+    rng = np.random.default_rng(seed)
+    sizes = [K // n_cliques + (c < K % n_cliques)
+             for c in range(n_cliques)]
+    remaining = list(rng.permutation(K))
+    cliques: List[List[int]] = []
+    # greedy, one clique at a time: repeatedly absorb the node that most
+    # reduces the clique's TV distance to the global label distribution,
+    # so skew cancels inside each clique
+    for size in sizes:
+        cq: List[int] = []
+        s = np.zeros(C)
+        while len(cq) < size and remaining:
+            def tv_with(k):
+                t = s + label_hist[k]
+                return 0.5 * np.abs(t / max(t.sum(), 1) - glob).sum()
+            k = min(remaining, key=tv_with)
+            cq.append(k)
+            s += label_hist[k]
+            remaining.remove(k)
+        if cq:
+            cliques.append(sorted(int(k) for k in cq))
+
+    edges, cls = [], []
+    for cq in cliques:
+        for a in range(len(cq)):
+            for b in range(a + 1, len(cq)):
+                edges.append((cq[a], cq[b]))
+                cls.append("lan")
+    for c in range(len(cliques)):       # inter-clique ring (WAN)
+        if len(cliques) > 1:
+            nxt = cliques[(c + 1) % len(cliques)]
+            edges.append((cliques[c][0], nxt[0]))
+            cls.append("wan")
+    ec = {(min(i, j), max(i, j)): c for (i, j), c in zip(edges, cls)}
+    edges = _canonical(edges)
+    return _build("dcliques", K, edges, [ec[e] for e in edges],
+                  cliques=cliques)
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def build_topology(name: str, n_nodes: int, *,
+                   label_hist: Optional[np.ndarray] = None,
+                   seed: int = 0, **kw) -> Topology:
+    """Topology factory keyed by ``CommConfig.topology``."""
+    if name in ("full", "fully_connected", "clique"):
+        return fully_connected(n_nodes)
+    if name == "ring":
+        return ring(n_nodes)
+    if name == "torus":
+        return torus(n_nodes, **kw)
+    if name in ("random", "expander"):
+        deg = kw.pop("degree", min(4, n_nodes - 1))
+        if (n_nodes * deg) % 2:
+            deg = max(2, deg - 1)
+        return random_regular(n_nodes, deg, seed=seed)
+    if name in ("geo-wan", "hierarchical"):
+        return hierarchical(n_nodes, **kw)
+    if name in ("dcliques", "d-cliques"):
+        assert label_hist is not None, \
+            "dcliques topology needs per-node label histograms"
+        return d_cliques(label_hist, seed=seed, **kw)
+    raise ValueError(f"unknown topology {name!r}")

@@ -1,7 +1,15 @@
 """Property-based tests (hypothesis) for the label-skew partitioner — the
-system invariants every experiment depends on."""
+system invariants every experiment depends on.
+
+Deterministic (no-hypothesis) partitioner tests live in
+``test_partition_basic.py`` so minimal installs still cover them."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis; the "
+                           "deterministic ones run in "
+                           "test_partition_basic.py")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.partition import (label_distribution, partition_80_20,
@@ -77,17 +85,3 @@ def test_iid_partition_label_distributions_close(args):
     assert np.abs(dist - glob).max() < 0.35
 
 
-def test_partition_80_20():
-    y = np.repeat(np.arange(10), 100)
-    parts = partition_80_20(y, 10, major=0.8, seed=0)
-    assert sum(len(p) for p in parts) == len(y)
-    dist = label_distribution(y, parts)
-    for k in range(10):
-        assert abs(dist[k, k] - 0.8) < 0.05
-        assert abs(dist[k, (k - 1) % 10] - 0.2) < 0.05
-
-
-def test_partition_by_region():
-    region = np.asarray([0, 1, 2, 0, 1, 2, 0])
-    parts = partition_by_region(region, 3)
-    assert [len(p) for p in parts] == [3, 2, 2]

@@ -1,0 +1,39 @@
+"""Deterministic partitioner tests — no hypothesis dependency, so they
+run on minimal installs (the property-based variants live in
+``test_partition.py`` behind ``pytest.importorskip``)."""
+import numpy as np
+
+from repro.core.partition import (label_distribution, partition_80_20,
+                                  partition_by_region, partition_label_skew,
+                                  skew_index)
+
+
+def test_partition_80_20():
+    y = np.repeat(np.arange(10), 100)
+    parts = partition_80_20(y, 10, major=0.8, seed=0)
+    assert sum(len(p) for p in parts) == len(y)
+    dist = label_distribution(y, parts)
+    for k in range(10):
+        assert abs(dist[k, k] - 0.8) < 0.05
+        assert abs(dist[k, (k - 1) % 10] - 0.2) < 0.05
+
+
+def test_partition_by_region():
+    region = np.asarray([0, 1, 2, 0, 1, 2, 0])
+    parts = partition_by_region(region, 3)
+    assert [len(p) for p in parts] == [3, 2, 2]
+
+
+def test_label_skew_exact_cover_and_monotone_skew():
+    rng = np.random.default_rng(0)
+    y = rng.integers(0, 10, size=1000)
+    y[:10] = np.arange(10)
+    vals = []
+    for s in (0.0, 0.5, 1.0):
+        parts = partition_label_skew(y, 5, s, seed=3)
+        all_idx = np.concatenate(parts)
+        assert len(all_idx) == len(y)
+        assert len(np.unique(all_idx)) == len(y)
+        vals.append(skew_index(y, parts))
+    assert vals[0] < vals[1] < vals[2]
+    assert vals[2] > 0.45

@@ -1,0 +1,325 @@
+"""Communication-fabric subsystem invariants: mixing matrices, D-Cliques
+label balance, the D-PSGD/BSP equivalence on the complete graph, the
+Pallas neighbor_mix kernel vs its dense oracle, and CommLedger
+conservation."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CommConfig
+from repro.core.algorithms.base import ModelFns, tree_size
+from repro.core.algorithms.bsp import BSP
+from repro.core.algorithms.dpsgd import DPSGD
+from repro.kernels import ops, ref
+from repro.topology import (LINK_PROFILES, CommLedger, build_topology,
+                            d_cliques, fully_connected, hierarchical,
+                            random_regular, ring, torus)
+
+K = 4
+DIM = 8
+
+
+# ---------------------------------------------------------------------------
+# graphs & mixing matrices
+# ---------------------------------------------------------------------------
+
+ALL_TOPOLOGIES = [fully_connected(5), ring(5), ring(2), torus(6), torus(9),
+                  random_regular(8, 3, seed=0), hierarchical(6),
+                  hierarchical(9, n_datacenters=3)]
+
+
+@pytest.mark.parametrize("topo", ALL_TOPOLOGIES, ids=lambda t: t.name)
+def test_mixing_matrix_doubly_stochastic_symmetric(topo):
+    W = topo.mixing
+    np.testing.assert_allclose(W, W.T, atol=1e-12)
+    np.testing.assert_allclose(W.sum(axis=0), 1.0, atol=1e-12)
+    np.testing.assert_allclose(W.sum(axis=1), 1.0, atol=1e-12)
+    assert (W >= -1e-12).all()
+    # supported only on edges + diagonal
+    edge_set = set(topo.edges)
+    for i in range(topo.n_nodes):
+        for j in range(i + 1, topo.n_nodes):
+            if (i, j) not in edge_set:
+                assert W[i, j] == 0.0
+
+
+@pytest.mark.parametrize("topo", ALL_TOPOLOGIES, ids=lambda t: t.name)
+def test_gossip_converges_to_consensus(topo):
+    """W^t x -> mean(x): doubly-stochastic + connected + positive gap."""
+    rng = np.random.default_rng(0)
+    x = rng.normal(size=topo.n_nodes)
+    y = np.linalg.matrix_power(topo.mixing, 200) @ x
+    np.testing.assert_allclose(y, x.mean(), atol=1e-6)
+    assert topo.spectral_gap() > 0.01
+
+
+def test_fully_connected_mixing_is_uniform():
+    topo = fully_connected(5)
+    np.testing.assert_allclose(topo.mixing, np.full((5, 5), 0.2), atol=1e-12)
+
+
+def test_neighbor_arrays_reconstruct_mixing():
+    topo = random_regular(8, 3, seed=1)
+    idx, w, sw = topo.neighbor_arrays()
+    K = topo.n_nodes
+    R = np.zeros((K, K))
+    for k in range(K):
+        R[k, k] += sw[k]
+        for d in range(idx.shape[1]):
+            R[k, idx[k, d]] += w[k, d]
+    np.testing.assert_allclose(R, topo.mixing, atol=1e-6)
+
+
+def test_hierarchical_marks_wan_edges():
+    topo = hierarchical(9, n_datacenters=3)
+    wan = topo.wan_edge_indices()
+    assert len(wan) == 3                      # gateway triangle
+    assert len(topo.cliques) == 3
+    lan = [e for e in range(len(topo.edges)) if e not in set(wan)]
+    # LAN edges stay inside one datacenter
+    groups = [set(c) for c in topo.cliques]
+    for e in lan:
+        i, j = topo.edges[e]
+        assert any(i in g and j in g for g in groups)
+
+
+def test_dcliques_label_histograms_near_uniform():
+    """Exclusive-label partition over 10 nodes / 5 classes: each greedy
+    clique should recover a (near-)uniform aggregate histogram."""
+    n_nodes, n_classes = 10, 5
+    hist = np.zeros((n_nodes, n_classes))
+    for k in range(n_nodes):
+        hist[k, k % n_classes] = 100
+    topo = d_cliques(hist, seed=0)
+    assert len(topo.cliques) >= 2
+    glob = hist.sum(0) / hist.sum()
+    for cq in topo.cliques:
+        s = hist[list(cq)].sum(0)
+        tv = 0.5 * np.abs(s / s.sum() - glob).sum()
+        assert tv < 0.11, (cq, s)
+    assert len(topo.wan_edge_indices()) >= 1   # inter-clique ring is WAN
+
+
+def test_build_topology_registry():
+    for name in ("full", "ring", "torus", "random", "geo-wan"):
+        topo = build_topology(name, 6)
+        assert topo.n_nodes == 6
+    with pytest.raises(ValueError):
+        build_topology("moebius", 6)
+    with pytest.raises(AssertionError):
+        build_topology("dcliques", 6)          # needs label_hist
+
+
+# ---------------------------------------------------------------------------
+# neighbor_mix kernel vs dense oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("topo", [ring(5), random_regular(8, 3, seed=1),
+                                  hierarchical(6), fully_connected(4)],
+                         ids=lambda t: t.name)
+@pytest.mark.parametrize("n", [37, 1000, 8192 + 13])
+def test_neighbor_mix_matches_dense_ref(topo, n):
+    x = jax.random.normal(jax.random.PRNGKey(0), (topo.n_nodes, n))
+    idx, w, sw = topo.neighbor_arrays()
+    out = ops.neighbor_mix(x, jnp.asarray(idx), jnp.asarray(w),
+                           jnp.asarray(sw))
+    expect = ref.neighbor_mix_ref(x, jnp.asarray(topo.mixing, jnp.float32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# D-PSGD semantics
+# ---------------------------------------------------------------------------
+
+def make_quadratic_fns():
+    def loss_and_grad(params, mstate, batch):
+        diff = params["w"] - batch["target"]
+        return 0.5 * jnp.sum(diff ** 2), {"w": diff}, mstate
+    return ModelFns(loss_and_grad=loss_and_grad)
+
+
+@pytest.fixture
+def setup():
+    fns = make_quadratic_fns()
+    params = {"w": jnp.zeros((DIM,))}
+    mstate = {"dummy": jnp.zeros((1,))}
+    targets = np.stack([np.full(DIM, float(k + 1)) for k in range(K)])
+    return fns, params, mstate, {"target": jnp.asarray(targets)}
+
+
+def test_dpsgd_complete_graph_equals_bsp(setup):
+    """Uniform mixing restores exact consensus every step, so the
+    trajectory coincides with BSP (momentum included)."""
+    fns, params, mstate, batch = setup
+    bsp = BSP(fns, K, momentum=0.9, weight_decay=0.0)
+    dp = DPSGD(fns, K, topology=fully_connected(K), momentum=0.9,
+               weight_decay=0.0)
+    sb, sd = bsp.init(params, mstate), dp.init(params, mstate)
+    for t in range(10):
+        sb, _ = bsp.step(sb, batch, jnp.float32(0.05), jnp.int32(t))
+        sd, m = dp.step(sd, batch, jnp.float32(0.05), jnp.int32(t))
+    wb = np.asarray(sb["params"]["w"])
+    wd = np.asarray(sd["params"]["w"])
+    np.testing.assert_allclose(wd, np.broadcast_to(wb, wd.shape), atol=1e-5)
+    assert float(m["consensus_delta"]) < 1e-6
+
+
+def test_dpsgd_two_node_ring_equals_bsp(setup):
+    """K=2 ring mixing is exact averaging — the synthetic 2-node
+    benchmark where dpsgd must reproduce BSP."""
+    fns, params, mstate, _ = setup
+    targets = np.stack([np.full(DIM, 1.0), np.full(DIM, 3.0)])
+    batch = {"target": jnp.asarray(targets)}
+    bsp = BSP(fns, 2, momentum=0.9, weight_decay=0.0)
+    dp = DPSGD(fns, 2, topology=ring(2), momentum=0.9, weight_decay=0.0)
+    sb, sd = bsp.init(params, mstate), dp.init(params, mstate)
+    for t in range(20):
+        sb, _ = bsp.step(sb, batch, jnp.float32(0.05), jnp.int32(t))
+        sd, _ = dp.step(sd, batch, jnp.float32(0.05), jnp.int32(t))
+    pb, _ = bsp.eval_params(sb)
+    pd, _ = dp.eval_params(sd)
+    np.testing.assert_allclose(np.asarray(pd["w"]), np.asarray(pb["w"]),
+                               atol=1e-5)
+
+
+def test_dpsgd_ring_reaches_consensus_on_mean_target(setup):
+    """Sparse-graph gossip settles in an O(lr)-neighborhood of the
+    global optimum (Lian et al. Thm 1) — shrink lr, shrink the error."""
+    fns, params, mstate, batch = setup
+    errs = {}
+    for lr in (0.05, 0.01):
+        dp = DPSGD(fns, K, topology=ring(K), momentum=0.0)
+        s = dp.init(params, mstate)
+        for t in range(1500):
+            s, m = dp.step(s, batch, jnp.float32(lr), jnp.int32(t))
+        w = np.asarray(s["params"]["w"])
+        mean_target = np.mean([k + 1 for k in range(K)])
+        errs[lr] = np.abs(w - mean_target).max()
+    assert errs[0.05] < 0.05 and errs[0.01] < 0.01, errs
+    assert errs[0.01] < errs[0.05]
+
+
+def test_dpsgd_comm_floats_scale_with_degree(setup):
+    fns, params, mstate, batch = setup
+    per_model = tree_size(params)
+    for topo in (ring(K), fully_connected(K)):
+        dp = DPSGD(fns, K, topology=topo, momentum=0.0)
+        s = dp.init(params, mstate)
+        _, m = dp.step(s, batch, jnp.float32(0.05), jnp.int32(0))
+        assert float(m["comm_floats"]) == pytest.approx(
+            topo.mean_degree * per_model)
+
+
+def test_dpsgd_kernel_and_dense_mix_agree(setup):
+    fns, params, mstate, batch = setup
+    topo = ring(K)
+    dp_k = DPSGD(fns, K, topology=topo, momentum=0.9, use_kernel=True)
+    dp_d = DPSGD(fns, K, topology=topo, momentum=0.9, use_kernel=False)
+    sk, sd = dp_k.init(params, mstate), dp_d.init(params, mstate)
+    for t in range(5):
+        sk, _ = dp_k.step(sk, batch, jnp.float32(0.05), jnp.int32(t))
+        sd, _ = dp_d.step(sd, batch, jnp.float32(0.05), jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(sk["params"]["w"]),
+                               np.asarray(sd["params"]["w"]), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# CommLedger
+# ---------------------------------------------------------------------------
+
+def test_ledger_exchange_conserves_floats():
+    topo = hierarchical(9, n_datacenters=3)
+    led = CommLedger(topo, LINK_PROFILES["geo-wan"])
+    led.record_exchange(1000.0)
+    # every node's floats land somewhere: total == K * c, split LAN/WAN
+    assert led.total_floats == pytest.approx(9 * 1000.0)
+    assert led.lan_floats > 0 and led.wan_floats > 0
+    assert led.total_floats == pytest.approx(
+        led.lan_floats + led.wan_floats)
+
+
+def test_ledger_gossip_traffic_per_edge():
+    topo = ring(5)
+    led = CommLedger(topo, LINK_PROFILES["uniform"])
+    led.record_gossip(100.0)
+    # each of the 5 edges carries the model both directions
+    assert led.total_floats == pytest.approx(5 * 2 * 100.0)
+    np.testing.assert_allclose(led.edge_traffic, 200.0)
+
+
+def test_ledger_wan_pricing_dominates_under_geo_profile():
+    topo = hierarchical(6)
+    prof = LINK_PROFILES["geo-wan"]
+    led = CommLedger(topo, prof)
+    led.record_gossip(1000.0)
+    wan_cost = led.wan_floats * prof.price_per_float("wan")
+    assert wan_cost / led.priced_cost() > 0.9   # WAN bytes dominate
+    # uniform profile: priced cost is proportional to raw floats
+    led_u = CommLedger(topo, LINK_PROFILES["uniform"])
+    led_u.record_gossip(1000.0)
+    assert led_u.priced_cost() == pytest.approx(
+        led_u.total_floats * LINK_PROFILES["uniform"].price_per_float("lan"))
+
+
+def test_ledger_sim_time_slowest_link():
+    topo = hierarchical(6)
+    prof = LINK_PROFILES["geo-wan"]
+    led = CommLedger(topo, prof)
+    led.record_gossip(1000.0)
+    expect = prof.wan_latency + 2000.0 / prof.wan_bandwidth
+    assert led.sim_time_s == pytest.approx(expect)
+
+
+def test_ledger_per_node_vector_exchange():
+    topo = ring(4)
+    led = CommLedger(topo, LINK_PROFILES["uniform"])
+    led.record_exchange([100.0, 0.0, 0.0, 0.0])
+    assert led.total_floats == pytest.approx(100.0)
+    # node 0 has two incident edges, 50 floats each
+    nz = led.edge_traffic[led.edge_traffic > 0]
+    np.testing.assert_allclose(nz, 50.0)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: dpsgd through the trainer (full topology == BSP quality)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_dpsgd_full_topology_matches_bsp_accuracy():
+    """Acceptance: dpsgd on a fully-connected topology reproduces BSP's
+    validation accuracy within 0.5pp on the synthetic 2-node benchmark."""
+    from repro.configs.cnn_zoo import CNN_ZOO
+    from repro.core.partition import partition_label_skew
+    from repro.core.trainer import train_decentralized
+    from repro.data.synthetic import synth_images
+    ds = synth_images(1500, seed=0, noise=0.8, class_sep=0.35)
+    val = synth_images(500, seed=99, noise=0.8, class_sep=0.35)
+    idx = partition_label_skew(ds.y, 2, 0.0, seed=1)
+    parts = [(ds.x[i], ds.y[i]) for i in idx]
+    kw = dict(steps=200, batch=20, lr=0.02, eval_every=200)
+    bsp = train_decentralized(CNN_ZOO["gn-lenet"], "bsp", parts,
+                              (val.x, val.y), **kw)
+    dp = train_decentralized(CNN_ZOO["gn-lenet"], "dpsgd", parts,
+                             (val.x, val.y),
+                             comm=CommConfig(strategy="dpsgd",
+                                             topology="full"), **kw)
+    assert abs(dp.val_acc - bsp.val_acc) < 0.005 + 1e-9, \
+        (dp.val_acc, bsp.val_acc)
+    assert dp.topology == "full"
+    assert dp.extras["ledger"]["total_floats"] > 0
+
+
+def test_trainer_rejects_invalid_eval_schedule():
+    from repro.configs.cnn_zoo import CNN_ZOO
+    from repro.core.trainer import train_decentralized
+    from repro.data.synthetic import synth_images
+    ds = synth_images(100, seed=0)
+    parts = [(ds.x[:50], ds.y[:50]), (ds.x[50:], ds.y[50:])]
+    with pytest.raises(ValueError, match="steps"):
+        train_decentralized(CNN_ZOO["gn-lenet"], "bsp", parts,
+                            (ds.x, ds.y), steps=0)
+    with pytest.raises(ValueError, match="eval_every"):
+        train_decentralized(CNN_ZOO["gn-lenet"], "bsp", parts,
+                            (ds.x, ds.y), steps=10, eval_every=0)
