@@ -1,4 +1,5 @@
-"""Topology x skew sweep for gossip (D-PSGD) training.
+"""Topology x skew sweep for gossip (D-PSGD) training, plus a schedule
+column at fixed full skew.
 
 The scenario-diversity unlock on top of the paper: the same algorithm on
 the same partitions, varying only *who talks to whom*.  Under label skew,
@@ -7,6 +8,12 @@ aware D-Cliques recover most of the gap at a fraction of the edges, and
 the geo-WAN hierarchy shows the LAN/WAN traffic split the flat
 ``comm_floats`` scalar could never express.  Link costs use the geo-wan
 profile so WAN bytes and the simulated step time diverge across graphs.
+
+The schedule column then varies *when* the edges exist: constant
+D-Cliques vs the one-peer-per-round time-varying variant vs EquiTopo
+random matchings, reporting WAN floats x final accuracy at full skew —
+the paper-level claim that a time-varying fabric keeps the mixing rate
+while shedding most per-round (and especially WAN) traffic.
 """
 from __future__ import annotations
 
@@ -28,16 +35,25 @@ N_CLASSES = 5          # < K so D-Cliques can span the label space
 DATA = dict(noise=1.2, class_sep=0.22, n_classes=N_CLASSES)
 LR = 0.05
 TOPOLOGIES = ("ring", "full", "dcliques", "geo-wan")
+# schedule column: same greedy cliques, different *per-round* edges.
+# 3 classes over 9 nodes => 3 cliques, so constant D-Cliques keeps 3 WAN
+# edges live every round while the time-varying variant rotates one; a
+# 2-clique split would hide the WAN win (both fabrics would have 1 WAN
+# edge).  One-peer-per-round mixes less per step, so the column runs at
+# a gentler lr than the dense-graph sweep.
+SCHED_K, SCHED_CLASSES, SCHED_LR = 9, 3, 0.02
+SCHED_DATA = dict(noise=0.8, class_sep=0.35, n_classes=SCHED_CLASSES)
+SCHEDULES = ("dcliques", "tv-dcliques", "random-matching")
 
 
-def _exclusive_parts(ds):
+def _exclusive_parts(ds, n_nodes=K, n_classes=N_CLASSES):
     """Full label skew with K > n_classes: node k sees only class
     k % C; each class is sharded over the K/C nodes that hold it."""
-    per = K // N_CLASSES
+    per = n_nodes // n_classes
     parts = []
-    for k in range(K):
-        cls_idx = np.where(ds.y == k % N_CLASSES)[0]
-        idx = cls_idx[k // N_CLASSES::per]
+    for k in range(n_nodes):
+        cls_idx = np.where(ds.y == k % n_classes)[0]
+        idx = cls_idx[k // n_classes::per]
         parts.append((ds.x[idx], ds.y[idx]))
     return parts
 
@@ -61,7 +77,8 @@ def run(quick: bool = False):
                 comm=comm, steps=steps, batch=20, lr=LR,
                 eval_every=steps)
             rows.append(dict(
-                topology=topo, skew=skew, val_acc=r.val_acc,
+                schedule="constant", topology=topo, skew=skew,
+                val_acc=r.val_acc,
                 wan_mfloats=r.comm_wan_floats / 1e6,
                 lan_mfloats=r.comm_lan_floats / 1e6,
                 sim_time_s=r.sim_time_s,
@@ -71,6 +88,35 @@ def run(quick: bool = False):
                   f"lan={r.comm_lan_floats/1e6:.1f}M "
                   f"t_sim={r.sim_time_s:.1f}s "
                   f"gap={r.extras['spectral_gap']:.3f}", flush=True)
+
+    # schedule column: fixed full skew, constant vs time-varying fabrics;
+    # WAN floats x accuracy is the trade the schedules exist to win
+    sds = synth_images(1800 if quick else 3600, seed=0, **SCHED_DATA)
+    sval = synth_images(600 if quick else 1000, seed=99, **SCHED_DATA)
+    parts = _exclusive_parts(sds, SCHED_K, SCHED_CLASSES)
+    for name in SCHEDULES:
+        comm = CommConfig(strategy="dpsgd", topology=name,
+                          link_profile="geo-wan", rewire_floats=64.0)
+        r = train_decentralized(
+            CNN_ZOO["gn-lenet"], "dpsgd", parts, (sval.x, sval.y),
+            comm=comm, steps=steps, batch=20, lr=SCHED_LR,
+            eval_every=steps)
+        led = r.extras["ledger"]
+        rows.append(dict(
+            schedule=name, topology=r.topology, skew=1.0,
+            val_acc=r.val_acc,
+            wan_mfloats=r.comm_wan_floats / 1e6,
+            lan_mfloats=r.comm_lan_floats / 1e6,
+            wan_mfloats_per_round=r.comm_wan_floats / 1e6 / steps,
+            rewire_mfloats=led["rewire_floats"] / 1e6,
+            sim_time_s=r.sim_time_s,
+            schedule_period=r.extras["schedule_period"],
+            spectral_gap=r.extras["spectral_gap"]))
+        print(f"[fig_topology] sched {name:16s}: acc={r.val_acc:.3f} "
+              f"wan/round={r.comm_wan_floats/1e6/steps:.2f}M "
+              f"rewire={led['rewire_floats']/1e6:.2f}M "
+              f"period={r.extras['schedule_period']} "
+              f"gap={r.extras['spectral_gap']:.3f}", flush=True)
     save_rows("fig_topology", rows)
     return rows
 

@@ -243,10 +243,17 @@ INPUT_SHAPES = {
 class CommConfig:
     """The paper's technique as a first-class trainer feature."""
     strategy: str = "bsp"             # bsp | gaia | fedavg | dgc | dpsgd
-    # communication fabric (repro.topology): who talks to whom + link cost
+    # communication fabric (repro.topology): who talks to whom, when, and
+    # at what link cost.  Static graphs become constant schedules;
+    # tv-dcliques / random-matching are genuinely time-varying.
     topology: str = "full"            # full | ring | torus | random |
-    #                                   geo-wan | dcliques
+    #                                   geo-wan | dcliques | tv-dcliques |
+    #                                   random-matching
     link_profile: str = "uniform"     # uniform | datacenter | geo-wan
+    # online re-wiring: control-plane floats charged per newly-activated
+    # link whenever the active edge set changes (schedule rotation or a
+    # SkewScout topology-rung switch); 0 keeps re-wiring free
+    rewire_floats: float = 0.0
     # Gaia
     gaia_t0: float = 0.10
     # FedAvg

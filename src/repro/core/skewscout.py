@@ -19,6 +19,15 @@ With the uniform profile this reduces exactly to the flat float ratio.
 
 SkewScout is algorithm-agnostic: anything exposing a dynamic θ knob
 (Gaia t0, FedAvg iter_local, DGC sparsity) plugs in via ``theta_ladder``.
+
+Topology as a rung: for gossip (D-PSGD) the θ ladder is a list of
+:class:`~repro.topology.graphs.TopologySchedule` rungs (densest first —
+see ``topology_ladder``), so the controller trades *edges*, not just
+floats, against accuracy loss.  Switching rungs re-wires links, and the
+ledger books that re-wiring traffic into ``priced_cost`` — so C(θ)
+charges a rung-flapping controller for link churn, and CM is pinned at
+construction (one full-model exchange on the densest fabric) so the
+ratio stays comparable across rungs.
 """
 from __future__ import annotations
 
@@ -52,15 +61,24 @@ class TravelReport:
 class SkewScout:
     def __init__(self, comm: CommConfig, algo_name: str, model_floats: int,
                  eval_acc_fn: Callable, *, start_index: Optional[int] = None,
-                 seed: int = 0, ledger=None, warmup_travels: int = 1):
+                 seed: int = 0, ledger=None, warmup_travels: int = 1,
+                 ladder: Optional[List] = None,
+                 cm_ref: Optional[float] = None):
         """eval_acc_fn(params, mstate, x, y) -> accuracy in [0,1].
         ``ledger``: optional CommLedger; when given, C(θ)/CM is computed
         from bandwidth-priced link traffic instead of raw floats.
         ``warmup_travels``: initial probes that measure but do not move θ —
         the first window's communication reflects the init transient
         (updates are large at t=0 whatever θ is), so attributing it to the
-        current rung sends the hill climber the wrong way."""
-        ladder = THETA_LADDERS[algo_name]
+        current rung sends the hill climber the wrong way.
+        ``ladder``: override THETA_LADDERS — for topology mode, a list of
+        TopologySchedule rungs ordered densest first.
+        ``cm_ref``: pin the CM denominator (seconds for one full-model
+        exchange) instead of re-deriving it from the ledger's current
+        fabric each probe — required when rung switches change the fabric
+        mid-run, or C(θ)/CM would be renormalized under the controller."""
+        if ladder is None:
+            ladder = THETA_LADDERS[algo_name]
         kw = {} if comm.tuner == "hill" else {"seed": seed}
         self.tuner = make_tuner(comm.tuner, ladder, start_index=start_index,
                                 **kw)
@@ -69,6 +87,7 @@ class SkewScout:
         self.eval_acc = eval_acc_fn
         self.ledger = ledger
         self.warmup_travels = warmup_travels
+        self._cm_ref = cm_ref
         self._cost_mark = ledger.priced_cost() if ledger else 0.0
         self._comm_since = 0.0
         self._steps_since = 0
@@ -102,8 +121,9 @@ class SkewScout:
         if self.ledger is not None:
             # link-priced window cost vs. one full-model exchange (CM)
             window = self.ledger.priced_cost() - self._cost_mark
-            c_ratio = (window / max(self._steps_since, 1)
-                       ) / self.ledger.full_exchange_cost(self.model_floats)
+            cm = (self._cm_ref if self._cm_ref is not None
+                  else self.ledger.full_exchange_cost(self.model_floats))
+            c_ratio = (window / max(self._steps_since, 1)) / cm
         else:
             c_ratio = (self._comm_since / max(self._steps_since, 1)
                        ) / self.model_floats

@@ -24,8 +24,9 @@ from repro.core.algorithms.gaia import Gaia
 from repro.core.skewscout import SkewScout
 from repro.data.pipeline import DecentralizedLoader
 from repro.models.cnn import cnn_apply, init_cnn
-from repro.topology import (LINK_PROFILES, CommLedger, Topology,
-                            build_topology)
+from repro.topology import (LABEL_AWARE_TOPOLOGIES, LINK_PROFILES,
+                            CommLedger, Topology, TopologySchedule,
+                            as_schedule, build_schedule, topology_ladder)
 
 
 # ---------------------------------------------------------------------------
@@ -66,7 +67,8 @@ def make_cnn_fns(cfg: CNNConfig) -> Tuple[ModelFns, Callable]:
 def make_algorithm(name: str, fns: ModelFns, n_nodes: int,
                    comm: CommConfig, *, momentum: float = 0.9,
                    weight_decay: float = 5e-4, lr0: Optional[float] = None,
-                   topology: Optional[Topology] = None, seed: int = 0):
+                   topology: Optional[Topology | TopologySchedule] = None,
+                   seed: int = 0, pad_degree: Optional[int] = None):
     if name == "bsp":
         return BSP(fns, n_nodes, momentum=momentum, weight_decay=weight_decay)
     if name == "gaia":
@@ -80,13 +82,20 @@ def make_algorithm(name: str, fns: ModelFns, n_nodes: int,
                    weight_decay=weight_decay, clip=comm.dgc_clip,
                    sparsity=comm.dgc_sparsity)
     if name == "dpsgd":
-        # standalone fallback; label-aware topologies (dcliques) need the
-        # label histograms only train_decentralized can supply, so pass
-        # ``topology`` explicitly for those
-        topology = topology or build_topology(comm.topology, n_nodes,
-                                              seed=seed)
+        if topology is None:
+            # standalone fallback; label-aware topologies need the label
+            # histograms only train_decentralized can supply — refuse to
+            # silently build a label-blind graph in their place
+            if comm.topology in LABEL_AWARE_TOPOLOGIES:
+                raise ValueError(
+                    f"comm.topology={comm.topology!r} is label-aware: it "
+                    "needs per-node label histograms to assemble cliques. "
+                    "Build it with build_schedule(..., label_hist=...) and "
+                    "pass topology= explicitly (train_decentralized does "
+                    "this from the partitions)")
+            topology = build_schedule(comm.topology, n_nodes, seed=seed)
         return DPSGD(fns, n_nodes, topology=topology, momentum=momentum,
-                     weight_decay=weight_decay)
+                     weight_decay=weight_decay, pad_degree=pad_degree)
     raise ValueError(name)
 
 
@@ -128,31 +137,75 @@ def train_decentralized(cnn_cfg: CNNConfig, algo_name: str,
     fns, eval_acc = make_cnn_fns(cnn_cfg)
     params, mstate = init_cnn(jax.random.PRNGKey(seed), cnn_cfg)
 
-    # communication fabric: graph + link-level cost accounting
+    # communication fabric: per-round graph schedule + link-level cost.
+    # Label histograms feed the label-aware builders — needed for a
+    # dcliques-family topology, and for the SkewScout topology ladder
+    # (whatever fabric the run starts on, the controller must be able to
+    # climb to the label-aware rung)
     label_hist = None
-    if comm.topology in ("dcliques", "d-cliques"):
+    if comm.topology in LABEL_AWARE_TOPOLOGIES or \
+            (comm.skewscout and algo_name == "dpsgd"):
         n_classes = int(max(int(y.max()) for _, y in parts)) + 1
         label_hist = np.stack([np.bincount(np.asarray(y, np.int64),
                                            minlength=n_classes)
                                for _, y in parts])
-    topo = build_topology(comm.topology, K, label_hist=label_hist,
-                          seed=seed)
-    ledger = CommLedger(topo, LINK_PROFILES[comm.link_profile])
+    sched = build_schedule(comm.topology, K, label_hist=label_hist,
+                           seed=seed)
+
+    # topology as a SkewScout rung (gossip only): the theta ladder is a
+    # list of schedules ordered densest first; training starts on the
+    # rung matching the configured topology when there is one, and the
+    # neighbor operands are padded to the ladder-wide max degree so rung
+    # switches never retrace the step
+    ladder = None
+    pad_degree = None
+    start_index = theta_start_index
+    if comm.skewscout and algo_name == "dpsgd":
+        ladder = topology_ladder(K, label_hist=label_hist, seed=seed)
+        # the configured fabric is always a rung: replace the same-named
+        # rung with the exact built schedule, or insert it, then re-sort
+        # densest-first (hill climbing needs the ladder monotone in cost)
+        names = [s.name for s in ladder]
+        if sched.name in names:
+            ladder[names.index(sched.name)] = sched
+        else:
+            ladder.append(sched)
+        ladder.sort(key=TopologySchedule.mean_round_edges, reverse=True)
+        if start_index is None:
+            start_index = ladder.index(sched)
+        elif not 0 <= start_index < len(ladder):
+            raise ValueError(
+                f"theta_start_index={start_index} out of range for the "
+                f"{len(ladder)}-rung topology ladder "
+                f"({[s.name for s in ladder]})")
+        sched = ladder[start_index]
+        pad_degree = max(s.max_degree for s in ladder)
+
+    ledger = CommLedger(sched, LINK_PROFILES[comm.link_profile],
+                        rewire_floats_per_edge=comm.rewire_floats)
 
     algo = make_algorithm(algo_name, fns, K, comm, momentum=momentum,
-                          weight_decay=weight_decay, lr0=lr, topology=topo,
-                          seed=seed)
+                          weight_decay=weight_decay, lr0=lr, topology=sched,
+                          seed=seed, pad_degree=pad_degree)
     state = algo.init(params, mstate)
     loader = DecentralizedLoader(parts, batch, seed=seed)
     lr_fn = lr_schedule or (lambda s: lr)
 
     scout = None
-    if comm.skewscout and algo_name not in ("bsp", "dpsgd"):
+    if comm.skewscout and algo_name == "dpsgd":
+        # CM is pinned to one full-model exchange on the densest rung so
+        # C(theta)/CM stays comparable as the controller changes fabrics
+        cm_ref = CommLedger(ladder[0], LINK_PROFILES[comm.link_profile]
+                            ).full_exchange_cost(float(tree_size(params)))
+        scout = SkewScout(comm, algo_name, tree_size(params), eval_acc,
+                          start_index=start_index, seed=seed,
+                          ledger=ledger, ladder=ladder, cm_ref=cm_ref)
+    elif comm.skewscout and algo_name != "bsp":
         scout = SkewScout(comm, algo_name, tree_size(params), eval_acc,
                           start_index=theta_start_index, seed=seed,
                           ledger=ledger)
 
-    loss_curve, acc_curve = [], []
+    loss_curve, acc_curve, gap_curve = [], [], []
     comm_total = 0.0
     steps_per_epoch = loader.steps_per_epoch
 
@@ -177,7 +230,10 @@ def train_decentralized(cnn_cfg: CNNConfig, algo_name: str,
         cf = float(metrics["comm_floats"])
         comm_total += cf
         if algo_name == "dpsgd":
-            ledger.record_gossip(float(tree_size(params)))
+            # round t's active edge set prices this gossip exchange
+            ledger.record_gossip(float(tree_size(params)), t=t)
+            gap_curve.append(
+                (t, float(algo.schedule.round_spectral_gap(t))))
         elif cf > 0:
             ledger.record_exchange(cf)
         if scout:
@@ -190,6 +246,12 @@ def train_decentralized(cnn_cfg: CNNConfig, algo_name: str,
                 # one model total crosses the fabric per probe: M/K per node
                 ledger.record_exchange(float(tree_size(params)) / K)
                 scout.rebase_cost_mark()  # keep probe cost out of C(θ)
+                if algo_name == "dpsgd" and rep.new_theta is not rep.theta:
+                    # topology rung switch: re-wiring is charged by the
+                    # ledger on the next gossip round, inside the new
+                    # rung's C(θ) window
+                    algo.set_schedule(rep.new_theta)
+                    ledger.switch_schedule(rep.new_theta)
         if (t + 1) % eval_every == 0 or t == steps - 1:
             p, s = algo.eval_params(state)
             acc = eval_acc(p, s, val[0], val[1])
@@ -201,6 +263,9 @@ def train_decentralized(cnn_cfg: CNNConfig, algo_name: str,
             f"no evaluation happened in {steps} steps (eval_every="
             f"{eval_every}); acc_curve is empty — check the schedule")
     bsp_equiv = float(tree_size(params)) * steps
+    # the fabric the run *ended* on (rung switches may have moved it)
+    final_sched = as_schedule(algo.schedule) if algo_name == "dpsgd" \
+        else sched
     return RunResult(
         name=f"{cnn_cfg.name}/{algo_name}",
         val_acc=acc_curve[-1][1],
@@ -211,8 +276,12 @@ def train_decentralized(cnn_cfg: CNNConfig, algo_name: str,
         comm_savings=bsp_equiv / max(comm_total, 1.0),
         skewscout_history=list(scout.history) if scout else [],
         extras={"ledger": ledger.summary(),
-                "spectral_gap": topo.spectral_gap()},
-        topology=topo.name,
+                "spectral_gap": final_sched.spectral_gap(),
+                "spectral_gap_curve": gap_curve,
+                "schedule_period": final_sched.period,
+                **({"topology_ladder": [s.name for s in ladder]}
+                   if ladder is not None else {})},
+        topology=final_sched.name,
         comm_lan_floats=ledger.lan_floats,
         comm_wan_floats=ledger.wan_floats,
         sim_time_s=ledger.sim_time_s,

@@ -13,6 +13,15 @@ Neighbor structure comes in kernel-friendly padded form (see
 ``Topology.neighbor_arrays``): ``nbr_idx`` (K, D) int32 padded with the
 node's own index and ``nbr_w`` (K, D) float32 padded with zeros, so
 padding rows contribute ``0 * x[k]`` and no branching is needed.
+
+``nbr_idx``/``nbr_w`` are *runtime operands*, not trace-time constants:
+only their (K, D) shape is baked into the compiled kernel (the k/d loops
+unroll over it), while the index values are gathered with
+``dynamic_index_in_dim`` at run time.  A :class:`TopologySchedule` that
+changes the neighbor set every round therefore reuses one compilation,
+provided every round pads to the schedule-wide max degree
+(``TopologySchedule.neighbor_arrays`` does) — that compile-once contract
+is what ``DPSGD.trace_count`` asserts in the tests.
 """
 from __future__ import annotations
 

@@ -1,37 +1,58 @@
-"""Communication-fabric subsystem: who talks to whom, and what it costs.
+"""Communication-fabric subsystem: who talks to whom, when, and at what
+cost.
 
 Module map
 ----------
 ``graphs.py``
     :class:`Topology` (edge list + symmetric doubly-stochastic mixing
-    matrix + per-edge LAN/WAN class) and the builders: ``fully_connected``,
-    ``ring``, ``torus``, ``random_regular`` (expander), ``hierarchical``
-    (geo-WAN datacenters), ``d_cliques`` (label-aware cliques from
-    partition label histograms).  ``build_topology`` is the registry keyed
-    by ``CommConfig.topology``.
+    matrix + per-edge LAN/WAN class + cached adjacency) and the static
+    builders: ``fully_connected``, ``ring``, ``torus``,
+    ``random_regular`` (expander), ``hierarchical`` (geo-WAN
+    datacenters), ``d_cliques`` (label-aware cliques from partition
+    label histograms).  :class:`TopologySchedule` generalizes the fabric
+    to one graph *per round*: ``constant_schedule`` wraps any static
+    graph, ``time_varying_d_cliques`` is Bellet et al.'s
+    one-peer-per-round variant, ``random_matching_schedule`` is the
+    EquiTopo-style i.i.d. matching fabric, and ``topology_ladder``
+    builds SkewScout's rungs (full -> hierarchical -> dcliques -> ring).
+    ``build_topology`` / ``build_schedule`` are the registries keyed by
+    ``CommConfig.topology``.
 
 ``costs.py``
     :class:`LinkProfile` (per-class bandwidth/latency presets in
     ``LINK_PROFILES``: uniform | datacenter | geo-wan) and
-    :class:`CommLedger`, which turns each algorithm's exchanged floats
-    into per-link traffic, LAN/WAN totals, and a simulated wall-clock
-    step time.  The ledger is threaded through ``core/trainer.py`` and
-    prices SkewScout's ``C(theta)/CM`` objective in WAN-weighted cost.
+    :class:`CommLedger`, which prices each algorithm's exchanged floats
+    against the *active edge set of the round's graph*, tracks LAN/WAN
+    totals and a simulated wall-clock step time, and charges an explicit
+    online re-wiring cost whenever the active edge set changes (schedule
+    rotation or a SkewScout rung switch via ``switch_schedule``).  The
+    ledger is threaded through ``core/trainer.py`` and prices
+    SkewScout's ``C(theta)/CM`` objective in WAN-weighted cost.
 
 Downstream consumers
 --------------------
-``core/algorithms/dpsgd.py`` (gossip averaging = ``W @ params`` on graph
-edges, via the ``kernels/neighbor_mix.py`` Pallas kernel),
-``benchmarks/fig_topology.py`` (topology x skew sweep), and
+``core/algorithms/dpsgd.py`` (gossip averaging = ``W_t @ params`` on the
+round's edges, per-round neighbor operands through the
+``kernels/neighbor_mix.py`` Pallas kernel — one compilation per run),
+``core/skewscout.py`` (topology as a ladder rung),
+``benchmarks/fig_topology.py`` (topology x skew x schedule sweep), and
 ``examples/train_topology.py`` (the geo-WAN scenario end-to-end).
 """
 from repro.topology.costs import LINK_PROFILES, CommLedger, LinkProfile
-from repro.topology.graphs import (Topology, build_topology, d_cliques,
+from repro.topology.graphs import (LABEL_AWARE_TOPOLOGIES, Topology,
+                                   TopologySchedule, as_schedule,
+                                   build_schedule, build_topology,
+                                   constant_schedule, d_cliques,
                                    fully_connected, hierarchical,
-                                   metropolis_weights, random_regular,
-                                   ring, torus)
+                                   metropolis_weights,
+                                   random_matching_schedule, random_regular,
+                                   ring, topology_ladder, torus,
+                                   time_varying_d_cliques)
 
 __all__ = ["LINK_PROFILES", "CommLedger", "LinkProfile", "Topology",
-           "build_topology", "d_cliques", "fully_connected",
-           "hierarchical", "metropolis_weights", "random_regular",
-           "ring", "torus"]
+           "TopologySchedule", "LABEL_AWARE_TOPOLOGIES",
+           "as_schedule", "build_schedule", "build_topology",
+           "constant_schedule", "d_cliques", "fully_connected",
+           "hierarchical", "metropolis_weights",
+           "random_matching_schedule", "random_regular", "ring",
+           "topology_ladder", "torus", "time_varying_d_cliques"]

@@ -1,9 +1,20 @@
 """Link-level communication cost accounting.
 
 Replaces the flat ``comm_floats`` scalar with per-link traffic: every
-exchange is attributed to the edges of the run's :class:`Topology`, split
-into LAN vs WAN totals, and priced into a simulated wall-clock step time
+exchange is attributed to the edges of the run's fabric, split into LAN
+vs WAN totals, and priced into a simulated wall-clock step time
 (synchronous rounds: a step costs the slowest link's latency + transfer).
+
+The fabric is a :class:`~repro.topology.graphs.TopologySchedule` (a bare
+:class:`Topology` is wrapped into its constant schedule): gossip rounds
+are priced against the *active edge set of that round's graph*, not one
+frozen graph.  When the active edge set changes — a time-varying
+schedule rotating its matchings, or SkewScout switching topology rungs
+mid-run — each newly-activated link is charged an explicit online
+re-wiring cost (``rewire_floats_per_edge`` control-plane floats plus the
+link's latency for the handshake).  Re-wiring traffic is booked on the
+links it crosses, so the LAN/WAN split still covers every priced float
+and SkewScout's C(θ)/CM objective sees schedule switches as real cost.
 
 Units: traffic in *floats* (the repo's communication currency, 4 bytes
 each); bandwidth in floats/second; latency in seconds.
@@ -15,7 +26,8 @@ from typing import Dict, Optional, Sequence, Union
 
 import numpy as np
 
-from repro.topology.graphs import Topology
+from repro.topology.graphs import (Edge, Topology, TopologySchedule,
+                                   as_schedule)
 
 
 @dataclass(frozen=True)
@@ -48,65 +60,179 @@ LINK_PROFILES: Dict[str, LinkProfile] = {
 }
 
 
+class _GraphPricing:
+    """Cached per-edge pricing arrays + a vectorized traffic accumulator
+    for one graph of the schedule (the per-step hot path stays numpy;
+    the per-edge dict is only materialized in cold accessors)."""
+
+    def __init__(self, graph: Topology, profile: LinkProfile):
+        self.graph = graph
+        self.deg = graph.degrees().astype(np.float64)
+        self.bw = np.asarray([profile.bandwidth(c)
+                              for c in graph.edge_class])
+        self.lat = np.asarray([profile.latency(c)
+                               for c in graph.edge_class])
+        self.is_wan = np.asarray([c == "wan" for c in graph.edge_class],
+                                 bool)
+        self.active = frozenset(graph.edges)
+        self.edge_index = {e: n for n, e in enumerate(graph.edges)}
+        # edge endpoint arrays for vectorized per-node routing
+        self.ei = np.asarray([i for i, _ in graph.edges], np.int64)
+        self.ej = np.asarray([j for _, j in graph.edges], np.int64)
+        self.traffic = np.zeros(len(graph.edges))
+
+    def flush_into(self, traffic: Dict[Edge, float]) -> None:
+        for e, f in zip(self.graph.edges, self.traffic):
+            if f:
+                traffic[e] = traffic.get(e, 0.0) + float(f)
+        self.traffic[:] = 0.0
+
+
 class CommLedger:
     """Accumulates per-edge traffic and simulated time for one run.
 
     ``record_exchange(c)``: all-to-all style — each node's ``c`` exchanged
     floats are spread uniformly over its incident edges (the sum over
-    edges conserves ``K * c``).  ``record_gossip(m)``: D-PSGD style — every
-    edge carries the full model once per direction (``2m`` per edge).
+    edges conserves ``K * c``); priced on the schedule's union graph
+    (parameter-server-style traffic has no per-round edge set).
+    ``record_gossip(m, t)``: D-PSGD style — every edge *active in round
+    t's graph* carries the full model once per direction (``2m`` per
+    active edge).
     """
 
-    def __init__(self, topology: Topology, profile: LinkProfile):
-        self.topology = topology
+    def __init__(self, fabric: Union[Topology, TopologySchedule],
+                 profile: LinkProfile, *,
+                 rewire_floats_per_edge: float = 0.0):
         self.profile = profile
-        E = len(topology.edges)
-        self.edge_traffic = np.zeros(E)
-        self._deg = topology.degrees().astype(np.float64)
-        self._edge_bw = np.asarray(
-            [profile.bandwidth(c) for c in topology.edge_class])
-        self._edge_lat = np.asarray(
-            [profile.latency(c) for c in topology.edge_class])
-        self._is_wan = np.asarray(
-            [c == "wan" for c in topology.edge_class], bool)
+        self.rewire_floats_per_edge = float(rewire_floats_per_edge)
+        # source of truth for per-edge traffic survives schedule switches
+        self._traffic: Dict[Edge, float] = {}
         self.lan_floats = 0.0
         self.wan_floats = 0.0
         self.sim_time_s = 0.0
+        # online re-wiring accounting (also included in lan/wan totals)
+        self.rewire_lan_floats = 0.0
+        self.rewire_wan_floats = 0.0
+        self.rewire_events = 0
         # communication rounds recorded — includes probe/overhead
         # exchanges, so this is NOT the trainer's step count
         self.rounds = 0
+        self._last_active: Optional[frozenset] = None
+        self._pricing: Dict[int, _GraphPricing] = {}
+        self._attach(as_schedule(fabric))
+
+    def _attach(self, schedule: TopologySchedule) -> None:
+        self.schedule = schedule
+        self.topology = schedule.union()
+        self._union_pricing = _GraphPricing(self.topology, self.profile)
+
+    def _graph_pricing(self, graph: Topology) -> _GraphPricing:
+        p = self._pricing.get(id(graph))
+        if p is None:
+            p = self._pricing[id(graph)] = _GraphPricing(graph,
+                                                         self.profile)
+        return p
 
     # ---- recording ----
-    def _add(self, per_edge: np.ndarray) -> None:
-        self.edge_traffic += per_edge
-        self.lan_floats += float(per_edge[~self._is_wan].sum())
-        self.wan_floats += float(per_edge[self._is_wan].sum())
+    def _book(self, pricing: _GraphPricing, per_edge: np.ndarray) -> None:
+        """Attribute ``per_edge`` floats (aligned with ``pricing.graph``'s
+        edge list) to links, totals, and simulated time — all vectorized;
+        the per-edge dict only materializes in the cold accessors."""
+        pricing.traffic += per_edge
+        self.lan_floats += float(per_edge[~pricing.is_wan].sum())
+        self.wan_floats += float(per_edge[pricing.is_wan].sum())
         active = per_edge > 0
         if active.any():
             self.sim_time_s += float(np.max(
                 np.where(active,
-                         self._edge_lat + per_edge / self._edge_bw, 0.0)))
-        self.rounds += 1
+                         pricing.lat + per_edge / pricing.bw, 0.0)))
+
+    def _rewire(self, pricing: _GraphPricing) -> None:
+        """Charge the online re-wiring cost for links that were not
+        active in the previous gossip round: a control-plane handshake
+        of ``rewire_floats_per_edge`` floats per new link, priced at
+        that link's class.  Booked into the LAN/WAN totals too, so
+        ``lan_floats + wan_floats`` still covers every priced float.
+        Only gossip rounds carry an active edge set — union-routed
+        exchanges (probes) never re-wire and never reset the tracking."""
+        if self._last_active is None or \
+                pricing.active == self._last_active:
+            self._last_active = pricing.active
+            return
+        new = pricing.active - self._last_active
+        self._last_active = pricing.active
+        if not new or self.rewire_floats_per_edge <= 0.0:
+            return
+        per_edge = np.zeros(len(pricing.graph.edges))
+        for e in new:
+            per_edge[pricing.edge_index[e]] = self.rewire_floats_per_edge
+        self._book(pricing, per_edge)
+        self.rewire_lan_floats += float(per_edge[~pricing.is_wan].sum())
+        self.rewire_wan_floats += float(per_edge[pricing.is_wan].sum())
+        self.rewire_events += len(new)
 
     def record_exchange(self,
                         floats_per_node: Union[float, Sequence[float]]
                         ) -> None:
         """All-to-all exchange of ``floats_per_node`` floats per node,
-        routed uniformly over each node's incident edges."""
+        routed uniformly over each node's incident edges of the union
+        fabric.  Union routing has no per-round active edge set, so it
+        neither pays nor resets re-wiring."""
+        pricing = self._union_pricing
         K = self.topology.n_nodes
         c = np.broadcast_to(np.asarray(floats_per_node, np.float64), (K,))
-        per_edge = np.zeros(len(self.topology.edges))
-        share = np.where(self._deg > 0, c / np.maximum(self._deg, 1), 0.0)
-        for e, (i, j) in enumerate(self.topology.edges):
-            per_edge[e] = share[i] + share[j]
-        self._add(per_edge)
+        share = np.where(pricing.deg > 0,
+                         c / np.maximum(pricing.deg, 1), 0.0)
+        self._book(pricing, share[pricing.ei] + share[pricing.ej])
+        self.rounds += 1
 
-    def record_gossip(self, model_floats: float) -> None:
-        """One gossip round: the full model crosses every edge, both
-        directions."""
-        self._add(np.full(len(self.topology.edges), 2.0 * model_floats))
+    def record_gossip(self, model_floats: float,
+                      t: Optional[int] = None) -> None:
+        """One gossip round at round index ``t``: the full model crosses
+        every edge active in ``schedule.at(t)``, both directions.
+        ``t=None`` keeps the legacy one-graph behaviour (round 0)."""
+        graph = self.schedule.at(0 if t is None else t)
+        pricing = self._graph_pricing(graph)
+        self._rewire(pricing)
+        self._book(pricing,
+                   np.full(len(graph.edges), 2.0 * model_floats))
+        self.rounds += 1
+
+    def switch_schedule(self, fabric: Union[Topology, TopologySchedule]
+                        ) -> None:
+        """Swap the fabric mid-run (SkewScout climbing a topology rung).
+        Accumulated traffic is preserved (see ``traffic_by_edge``); the
+        first gossip round on the new schedule pays re-wiring for every
+        link the old round's active set did not have."""
+        self._flush_traffic()
+        self._attach(as_schedule(fabric))
+        self._pricing.clear()
+
+    def _flush_traffic(self) -> None:
+        """Fold the vectorized per-graph accumulators into the canonical
+        per-edge dict (cold path: accessors and schedule switches)."""
+        self._union_pricing.flush_into(self._traffic)
+        for p in self._pricing.values():
+            p.flush_into(self._traffic)
 
     # ---- pricing ----
+    def traffic_by_edge(self) -> Dict[Edge, float]:
+        """Every float ever booked, keyed by canonical edge — survives
+        schedule switches (``sum(...) == total_floats`` always)."""
+        self._flush_traffic()
+        return dict(self._traffic)
+
+    @property
+    def edge_traffic(self) -> np.ndarray:
+        """Per-edge floats, aligned with ``self.topology.edges`` — a
+        *view* onto the current schedule's union graph.  After a
+        ``switch_schedule`` to a sparser fabric, traffic booked on links
+        the new union lacks is not shown here (use ``traffic_by_edge``
+        for the lossless history)."""
+        self._flush_traffic()
+        return np.asarray([self._traffic.get(e, 0.0)
+                           for e in self.topology.edges])
+
     @property
     def total_floats(self) -> float:
         return self.lan_floats + self.wan_floats
@@ -114,15 +240,29 @@ class CommLedger:
     def priced_cost(self) -> float:
         """Cumulative bandwidth-weighted cost (seconds of link time);
         WAN floats dominate under the geo-wan profile, matching the
-        paper's Gaia objective of pricing scarce WAN bytes."""
+        paper's Gaia objective of pricing scarce WAN bytes.  Includes
+        re-wiring traffic, so a controller that flaps between schedules
+        pays for it in C(θ)."""
         return (self.lan_floats * self.profile.price_per_float("lan")
                 + self.wan_floats * self.profile.price_per_float("wan"))
 
+    @property
+    def rewire_floats(self) -> float:
+        return self.rewire_lan_floats + self.rewire_wan_floats
+
+    def rewiring_cost(self) -> float:
+        """Priced cost of the re-wiring traffic alone — the component of
+        ``priced_cost`` a schedule-flapping controller is paying for
+        link churn."""
+        return (self.rewire_lan_floats * self.profile.price_per_float("lan")
+                + self.rewire_wan_floats
+                * self.profile.price_per_float("wan"))
+
     def full_exchange_cost(self, model_floats: float) -> float:
-        """Priced cost of one BSP-style full-model exchange on this
-        topology — SkewScout's CM denominator."""
-        K = self.topology.n_nodes
-        share = model_floats / np.maximum(self._deg, 1)
+        """Priced cost of one BSP-style full-model exchange on the union
+        fabric — SkewScout's CM denominator."""
+        pricing = self._union_pricing
+        share = model_floats / np.maximum(pricing.deg, 1)
         cost = 0.0
         for e, (i, j) in enumerate(self.topology.edges):
             cls = self.topology.edge_class[e]
@@ -133,4 +273,6 @@ class CommLedger:
         return dict(lan_floats=self.lan_floats, wan_floats=self.wan_floats,
                     total_floats=self.total_floats,
                     sim_time_s=self.sim_time_s,
-                    priced_cost=self.priced_cost(), rounds=self.rounds)
+                    priced_cost=self.priced_cost(), rounds=self.rounds,
+                    rewire_floats=self.rewire_floats,
+                    rewire_events=self.rewire_events)

@@ -16,11 +16,30 @@ Builders:
   d_cliques         label-aware cliques (Bellet et al., 2021): greedy
                     clique assembly so each clique's aggregate label
                     histogram is near-uniform; inter-clique ring over WAN
+
+Schedules (:class:`TopologySchedule`): the fabric is a *sequence* of
+graphs, one per gossip round, all over the same node set.  A single
+frozen graph is the trivial constant schedule, so every consumer
+(ledger, D-PSGD, SkewScout) speaks schedules and the one-graph-per-run
+path keeps working unchanged.  Time-varying builders:
+  constant_schedule          wrap any Topology
+  time_varying_d_cliques     Bellet et al.'s one-peer-per-round variant:
+                             round-robin matchings inside each label-
+                             balanced clique + a single rotating WAN
+                             inter-clique edge per round
+  random_matching_schedule   EquiTopo-style i.i.d. random near-perfect
+                             matchings (degree <= 1 per round)
+  topology_ladder            SkewScout rungs, densest first:
+                             full -> hierarchical -> (tv-)dcliques -> ring
+``build_schedule`` is the registry keyed by ``CommConfig.topology``;
+per-round graphs need not be connected — only the union over one period
+must be (consensus still mixes across rounds).
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
@@ -49,19 +68,23 @@ class Topology:
             object.__setattr__(self, "edge_class",
                                ("lan",) * len(self.edges))
         assert len(self.edge_class) == len(self.edges)
+        # adjacency cache: schedules rebuild neighbor sets every round, so
+        # neighbors() must be O(deg), not an O(E) edge-list scan per call
+        adj: List[List[int]] = [[] for _ in range(self.n_nodes)]
+        for i, j in self.edges:
+            adj[i].append(j)
+            adj[j].append(i)
+        object.__setattr__(self, "_adj",
+                           tuple(tuple(sorted(a)) for a in adj))
+        object.__setattr__(self, "_deg",
+                           np.asarray([len(a) for a in adj], np.int64))
 
     # ---- structure ----
     def neighbors(self, k: int) -> List[int]:
-        out = [j for i, j in self.edges if i == k]
-        out += [i for i, j in self.edges if j == k]
-        return sorted(out)
+        return list(self._adj[k])
 
     def degrees(self) -> np.ndarray:
-        deg = np.zeros(self.n_nodes, np.int64)
-        for i, j in self.edges:
-            deg[i] += 1
-            deg[j] += 1
-        return deg
+        return self._deg.copy()
 
     @property
     def max_degree(self) -> int:
@@ -82,11 +105,18 @@ class Topology:
         return float(1.0 - ev[-2]) if len(ev) > 1 else 1.0
 
     # ---- kernel-facing layout ----
-    def neighbor_arrays(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    def neighbor_arrays(self, pad_degree: Optional[int] = None
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Padded (idx, weight, self_weight) arrays for the neighbor_mix
         kernel: idx (K, D) int32 padded with the node's own index, weight
-        (K, D) float32 padded with 0, self_w (K,) float32 = diag(W)."""
-        K, D = self.n_nodes, max(self.max_degree, 1)
+        (K, D) float32 padded with 0, self_w (K,) float32 = diag(W).
+
+        ``pad_degree`` widens D beyond this graph's max degree so every
+        round of a schedule (and every rung of a topology ladder) shares
+        one operand shape — the jitted step never retraces."""
+        K = self.n_nodes
+        D = max(self.max_degree if pad_degree is None else pad_degree, 1)
+        assert D >= self.max_degree, (D, self.max_degree)
         idx = np.tile(np.arange(K, dtype=np.int32)[:, None], (1, D))
         w = np.zeros((K, D), np.float32)
         fill = np.zeros(K, np.int64)
@@ -133,9 +163,13 @@ def _connected(n_nodes: int, edges: Sequence[Edge]) -> bool:
 
 def _build(name: str, n_nodes: int, edges: Sequence[Edge],
            edge_class: Sequence[str] = (),
-           cliques: Sequence[Tuple[int, ...]] = ()) -> Topology:
+           cliques: Sequence[Tuple[int, ...]] = (),
+           require_connected: bool = True) -> Topology:
+    """``require_connected=False`` is for the per-round graphs of a
+    time-varying schedule (matchings are never connected on their own —
+    only the union over a period must be)."""
     edges = _canonical(edges)
-    if n_nodes > 1:
+    if n_nodes > 1 and require_connected:
         assert _connected(n_nodes, edges), f"{name}: graph not connected"
     return Topology(name, n_nodes, tuple(edges),
                     metropolis_weights(n_nodes, edges),
@@ -225,16 +259,13 @@ def hierarchical(n_nodes: int, n_datacenters: Optional[int] = None
                   cliques=groups)
 
 
-def d_cliques(label_hist: np.ndarray, clique_size: Optional[int] = None,
-              seed: int = 0) -> Topology:
-    """Label-aware D-Cliques (Bellet et al., 2021).
-
-    ``label_hist``: (K, C) per-node label counts.  Nodes are greedily
-    grouped into cliques of ~``clique_size`` so each clique's aggregate
-    label distribution tracks the global one (skew cancels *inside* the
-    clique); cliques are LAN-connected internally and joined by a WAN
-    ring of inter-clique edges.
-    """
+def _greedy_cliques(label_hist: np.ndarray,
+                    clique_size: Optional[int] = None,
+                    seed: int = 0) -> List[List[int]]:
+    """Greedy label-balanced clique assignment shared by the constant and
+    time-varying D-Cliques builders: repeatedly absorb the node that most
+    reduces the clique's TV distance to the global label distribution,
+    so skew cancels *inside* each clique."""
     K, C = label_hist.shape
     if clique_size is None:
         # one clique should be able to span the label space: with
@@ -250,9 +281,6 @@ def d_cliques(label_hist: np.ndarray, clique_size: Optional[int] = None,
              for c in range(n_cliques)]
     remaining = list(rng.permutation(K))
     cliques: List[List[int]] = []
-    # greedy, one clique at a time: repeatedly absorb the node that most
-    # reduces the clique's TV distance to the global label distribution,
-    # so skew cancels inside each clique
     for size in sizes:
         cq: List[int] = []
         s = np.zeros(C)
@@ -266,6 +294,20 @@ def d_cliques(label_hist: np.ndarray, clique_size: Optional[int] = None,
             remaining.remove(k)
         if cq:
             cliques.append(sorted(int(k) for k in cq))
+    return cliques
+
+
+def d_cliques(label_hist: np.ndarray, clique_size: Optional[int] = None,
+              seed: int = 0) -> Topology:
+    """Label-aware D-Cliques (Bellet et al., 2021).
+
+    ``label_hist``: (K, C) per-node label counts.  Nodes are greedily
+    grouped into cliques of ~``clique_size`` so each clique's aggregate
+    label distribution tracks the global one; cliques are LAN-connected
+    internally and joined by a WAN ring of inter-clique edges.
+    """
+    K = label_hist.shape[0]
+    cliques = _greedy_cliques(label_hist, clique_size, seed)
 
     edges, cls = [], []
     for cq in cliques:
@@ -282,6 +324,270 @@ def d_cliques(label_hist: np.ndarray, clique_size: Optional[int] = None,
     edges = _canonical(edges)
     return _build("dcliques", K, edges, [ec[e] for e in edges],
                   cliques=cliques)
+
+
+# ---------------------------------------------------------------------------
+# schedules: one graph per round
+# ---------------------------------------------------------------------------
+
+class TopologySchedule:
+    """A periodic sequence of communication graphs over one node set.
+
+    ``at(t)`` is round ``t``'s graph; gossip, the ledger, and SkewScout
+    all consume schedules, with a single frozen graph as the trivial
+    constant schedule.  Per-round graphs may be disconnected (matchings
+    usually are) — consensus only needs the *union* over one period to
+    be connected, which is asserted here.
+    """
+
+    def __init__(self, name: str, graphs: Sequence[Topology]):
+        assert graphs, "schedule needs at least one graph"
+        K = graphs[0].n_nodes
+        assert all(g.n_nodes == K for g in graphs), \
+            "all graphs in a schedule must share the node set"
+        self.name = name
+        self._graphs = tuple(graphs)
+        self._union: Optional[Topology] = None
+        self._round_gaps: Dict[int, float] = {}
+        if K > 1:
+            union_edges = sorted({e for g in graphs for e in g.edges})
+            assert _connected(K, union_edges), \
+                f"{name}: union over one period is not connected"
+
+    # ---- structure ----
+    @property
+    def n_nodes(self) -> int:
+        return self._graphs[0].n_nodes
+
+    @property
+    def period(self) -> int:
+        return len(self._graphs)
+
+    @property
+    def is_constant(self) -> bool:
+        return len(self._graphs) == 1
+
+    def at(self, t: int) -> Topology:
+        return self._graphs[int(t) % len(self._graphs)]
+
+    def graphs(self) -> Tuple[Topology, ...]:
+        """The unique per-round graphs of one period."""
+        return self._graphs
+
+    @property
+    def max_degree(self) -> int:
+        """Max degree over the whole period — the kernel padding width
+        that keeps every round's operands one shape."""
+        return max(g.max_degree for g in self._graphs)
+
+    def mean_round_edges(self) -> float:
+        """Mean active edges per round — the communication-cost metric
+        that orders SkewScout's topology ladder (densest first)."""
+        return float(np.mean([len(g.edges) for g in self._graphs]))
+
+    def union(self) -> Topology:
+        """Union graph over one period: the set of links that exist at
+        all.  The ledger prices re-wiring against it and SkewScout's CM
+        (one full-model exchange) is defined on it.  An edge is WAN if
+        any round classifies it WAN."""
+        if self._union is None:
+            cls: Dict[Edge, str] = {}
+            cliques: Tuple[Tuple[int, ...], ...] = ()
+            for g in self._graphs:
+                if g.cliques and not cliques:
+                    cliques = g.cliques
+                for e, c in zip(g.edges, g.edge_class):
+                    if c == "wan" or e not in cls:
+                        cls[e] = c
+            edges = sorted(cls)
+            self._union = _build(f"{self.name}:union", self.n_nodes,
+                                 edges, [cls[e] for e in edges],
+                                 cliques=cliques,
+                                 require_connected=self.n_nodes > 1)
+        return self._union
+
+    # ---- kernel-facing layout ----
+    def neighbor_arrays(self, t: int, pad_degree: Optional[int] = None
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Round ``t``'s padded neighbor operands, padded to the
+        schedule-wide max degree by default (one shape, no retrace)."""
+        pad = self.max_degree if pad_degree is None else pad_degree
+        return self.at(t).neighbor_arrays(pad_degree=pad)
+
+    # ---- spectral ----
+    def round_spectral_gap(self, t: int) -> float:
+        """Spectral gap of round ``t``'s graph alone (0 for matchings —
+        a single disconnected round does not mix to consensus)."""
+        i = int(t) % len(self._graphs)
+        if i not in self._round_gaps:
+            self._round_gaps[i] = self._graphs[i].spectral_gap()
+        return self._round_gaps[i]
+
+    def spectral_gap(self) -> float:
+        """Effective per-round gap of one period: the consensus error
+        contracts by the spectral radius of ``prod_t (W_t - J)`` per
+        period (J = 11^T/K), so the per-round rate is its period-th
+        root.  Reduces exactly to ``1 - |lambda_2(W)|`` for a constant
+        schedule."""
+        K = self.n_nodes
+        if K == 1:
+            return 1.0
+        J = np.full((K, K), 1.0 / K)
+        M = np.eye(K)
+        for g in self._graphs:
+            M = (g.mixing - J) @ M
+        rate = float(np.max(np.abs(np.linalg.eigvals(M))))
+        return 1.0 - rate ** (1.0 / self.period)
+
+
+def constant_schedule(topology: Topology) -> TopologySchedule:
+    """The one-graph-per-run path, expressed as a schedule."""
+    return TopologySchedule(topology.name, [topology])
+
+
+def as_schedule(fabric: Union[Topology, TopologySchedule]
+                ) -> TopologySchedule:
+    if isinstance(fabric, TopologySchedule):
+        return fabric
+    assert isinstance(fabric, Topology), type(fabric)
+    return constant_schedule(fabric)
+
+
+def _round_robin_matching(members: Sequence[int], r: int
+                          ) -> List[Edge]:
+    """Round ``r`` of the circle-method round robin over ``members``:
+    a (near-)perfect matching; over ``m-1`` rounds (m even, one bye
+    added when odd) every pair meets exactly once."""
+    m = list(members)
+    if len(m) % 2:
+        m.append(-1)                      # bye
+    n = len(m)
+    if n < 2:
+        return []
+    k = r % (n - 1)
+    rest = m[1:]
+    arr = [m[0]] + rest[k:] + rest[:k]
+    return [(arr[i], arr[n - 1 - i]) for i in range(n // 2)
+            if arr[i] >= 0 and arr[n - 1 - i] >= 0]
+
+
+def time_varying_d_cliques(label_hist: np.ndarray,
+                           clique_size: Optional[int] = None,
+                           seed: int = 0) -> TopologySchedule:
+    """One-peer-per-round D-Cliques (Bellet et al., 2021, §time-varying).
+
+    Same greedy label-balanced cliques as :func:`d_cliques`, but each
+    round every node talks to *one* clique peer (round-robin matching
+    inside the clique) and a *single* rotating WAN edge joins
+    consecutive cliques — instead of the constant variant's full
+    intra-clique mesh plus one WAN edge per clique, every round.  Over
+    one period the union covers the whole constant graph, so the mixing
+    rate survives while per-round traffic (and especially per-round WAN
+    traffic) drops by the clique size.
+    """
+    K = label_hist.shape[0]
+    cliques = _greedy_cliques(label_hist, clique_size, seed)
+    n_cl = len(cliques)
+    # period: lcm of the per-clique round-robin cycles and the WAN ring
+    # rotation, so the union over one period is the full constant graph
+    period = 1
+    for cq in cliques:
+        m = len(cq) + (len(cq) % 2)
+        period = math.lcm(period, max(m - 1, 1))
+    if n_cl > 1:
+        period = math.lcm(period, n_cl)
+    graphs = []
+    for r in range(period):
+        edges: List[Edge] = []
+        cls: List[str] = []
+        for cq in cliques:
+            for a, b in _round_robin_matching(cq, r):
+                edges.append((a, b))
+                cls.append("lan")
+        if n_cl > 1:
+            c = r % n_cl
+            nxt = cliques[(c + 1) % n_cl]
+            edges.append((cliques[c][0], nxt[0]))
+            cls.append("wan")
+        ec = {(min(i, j), max(i, j)): c for (i, j), c in zip(edges, cls)}
+        edges = _canonical(edges)
+        graphs.append(_build(f"tv-dcliques[{r}]", K, edges,
+                             [ec[e] for e in edges], cliques=cliques,
+                             require_connected=False))
+    return TopologySchedule("tv-dcliques", graphs)
+
+
+def random_matching_schedule(n_nodes: int, period: Optional[int] = None,
+                             seed: int = 0,
+                             n_sites: Optional[int] = None
+                             ) -> TopologySchedule:
+    """EquiTopo-style schedule: an independent random (near-)perfect
+    matching each round — degree <= 1 per round, expander-grade mixing
+    from the randomness across rounds.  The period is resampled until
+    the union is connected (whp after O(log K) matchings).
+
+    ``n_sites``: nodes live in datacenters (the same ``d::n_sites``
+    grouping and sqrt-K default as :func:`hierarchical`), and an edge
+    crossing sites is WAN.  Random matchings are placement-blind, so
+    most of their edges cross sites — the honest geo-WAN price of the
+    fabric, and exactly what locality-aware D-Cliques avoid.  Pass
+    ``n_sites=1`` for a single-LAN cluster."""
+    if period is None:
+        period = max(4, 2 * int(np.ceil(np.log2(max(n_nodes, 2)))))
+    if n_sites is None:
+        n_sites = min(max(2, int(round(np.sqrt(n_nodes)))), n_nodes)
+    site = {k: k % n_sites for k in range(n_nodes)}
+
+    def build_round(r, edges):
+        cls = ["wan" if site[i] != site[j] else "lan" for i, j in edges]
+        return _build(f"random-matching[{r}]", n_nodes, edges, cls,
+                      require_connected=False)
+
+    rng = np.random.default_rng(seed)
+    for _ in range(200):
+        graphs = []
+        for r in range(period):
+            perm = rng.permutation(n_nodes)
+            edges = _canonical([(int(perm[2 * i]), int(perm[2 * i + 1]))
+                                for i in range(n_nodes // 2)])
+            graphs.append(build_round(r, edges))
+        union = sorted({e for g in graphs for e in g.edges})
+        if n_nodes == 1 or _connected(n_nodes, union):
+            return TopologySchedule("random-matching", graphs)
+    # degenerate tiny-K case: splice in a ring round to force connectivity
+    graphs[-1] = build_round(period - 1,
+                             _canonical(ring(n_nodes).edges))
+    return TopologySchedule("random-matching", graphs)
+
+
+def topology_ladder(n_nodes: int, label_hist: Optional[np.ndarray] = None,
+                    seed: int = 0, time_varying: bool = True
+                    ) -> List[TopologySchedule]:
+    """SkewScout's topology rungs: full, hierarchical, (tv-)dcliques,
+    ring — *sorted* most-communication-heavy -> most relaxed by mean
+    per-round edge count (the THETA_LADDERS convention).  Sorting
+    matters: hill climbing needs the ladder monotone in cost, and a
+    time-varying D-Cliques rung is cheaper per round than a ring, not
+    between hierarchical and ring.  Without label histograms the
+    label-aware rung degrades to a torus."""
+    rungs = [constant_schedule(fully_connected(n_nodes)),
+             constant_schedule(hierarchical(n_nodes))]
+    if label_hist is not None:
+        rungs.append(time_varying_d_cliques(label_hist, seed=seed)
+                     if time_varying
+                     else constant_schedule(d_cliques(label_hist,
+                                                      seed=seed)))
+    else:
+        rungs.append(constant_schedule(torus(n_nodes)))
+    rungs.append(constant_schedule(ring(n_nodes)))
+    rungs.sort(key=TopologySchedule.mean_round_edges, reverse=True)
+    # small-K builders can collapse (torus(<4) is a ring): drop duplicates
+    seen, out = set(), []
+    for s in rungs:
+        if s.name not in seen:
+            seen.add(s.name)
+            out.append(s)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -310,3 +616,25 @@ def build_topology(name: str, n_nodes: int, *,
             "dcliques topology needs per-node label histograms"
         return d_cliques(label_hist, seed=seed, **kw)
     raise ValueError(f"unknown topology {name!r}")
+
+
+#: topology names that require per-node label histograms to build
+LABEL_AWARE_TOPOLOGIES = ("dcliques", "d-cliques", "tv-dcliques",
+                          "time-varying-dcliques")
+
+
+def build_schedule(name: str, n_nodes: int, *,
+                   label_hist: Optional[np.ndarray] = None,
+                   seed: int = 0, **kw) -> TopologySchedule:
+    """Schedule factory keyed by ``CommConfig.topology``: every static
+    topology name becomes its constant schedule; ``tv-dcliques`` and
+    ``random-matching`` are the time-varying builders."""
+    if name in ("tv-dcliques", "time-varying-dcliques"):
+        assert label_hist is not None, \
+            "tv-dcliques schedule needs per-node label histograms"
+        return time_varying_d_cliques(label_hist, seed=seed, **kw)
+    if name in ("random-matching", "equitopo"):
+        return random_matching_schedule(n_nodes, seed=seed, **kw)
+    return constant_schedule(build_topology(name, n_nodes,
+                                            label_hist=label_hist,
+                                            seed=seed, **kw))

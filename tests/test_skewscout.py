@@ -105,6 +105,48 @@ def test_skewscout_tightens_under_high_loss_and_relaxes_under_low():
             assert final >= 5, (landscape, final)      # relaxed comm
 
 
+def test_skewscout_topology_rung_trades_edges():
+    """Topology as a theta rung: under a steep accuracy-loss landscape
+    (sparser fabric -> more divergence) the controller climbs toward the
+    dense end; when skew costs nothing it relaxes toward the sparse end,
+    trading edges for bandwidth."""
+    from repro.topology import topology_ladder
+
+    ladder = topology_ladder(6)             # full -> ... -> ring
+    n = len(ladder)
+    comm = CommConfig(skewscout=True, travel_every=1, sigma_al=0.05,
+                      lambda_al=50.0, lambda_c=1.0)
+
+    class A:
+        K = 2
+        def node_params(self, state, k):
+            return None, None
+
+    for landscape, expect_dense in (("steep", True), ("flat", False)):
+        scout = SkewScout(comm, "dpsgd", model_floats=1000,
+                          eval_acc_fn=lambda p, s, x, y: 0.9,
+                          start_index=n // 2, ladder=ladder)
+        for step in range(30):
+            sched = scout.theta             # a TopologySchedule rung
+            edges = np.mean([len(sched.at(r).edges)
+                             for r in range(sched.period)])
+            scout.record_step(comm_floats=100.0 * edges)
+            calls = {"n": 0}
+            def eval2(params, mstate, x, y, _i=scout.tuner.i):
+                calls["n"] += 1
+                home = calls["n"] % 2 == 1
+                gap = (0.6 * _i / (n - 1)) if landscape == "steep" else 0.0
+                return 0.9 if home else 0.9 - gap
+            scout.eval_acc = eval2
+            scout.maybe_travel(step, A(), None, lambda node: ("x", "y"))
+        if expect_dense:
+            assert scout.tuner.i == 0, (landscape, scout.tuner.i)
+            assert scout.theta.at(0).name == "full"
+        else:
+            assert scout.tuner.i == n - 1, (landscape, scout.tuner.i)
+            assert scout.theta.at(0).name == "ring"
+
+
 def test_travel_report_fields():
     comm = CommConfig(skewscout=True, travel_every=2)
     scout = SkewScout(comm, "fedavg", model_floats=100,
