@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test test-fast bench-smoke lint
+.PHONY: test test-fast bench-smoke bench-smoke-async lint
 
 # tier-1 verify: the full test suite
 test:
@@ -14,6 +14,11 @@ test-fast:
 # kernel microbenchmarks + the cheapest experiment benches
 bench-smoke:
 	$(PYTHON) -m benchmarks.run --only kernels,fig4
+
+# asynchronous-gossip backend smoke: sync D-PSGD vs AD-PSGD on the
+# geo-wan fabric; asserts the async ledger strictly beats sync wall-clock
+bench-smoke-async:
+	$(PYTHON) -m benchmarks.fig_topology --smoke-async
 
 # pyflakes-level check: every module compiles
 lint:

@@ -242,7 +242,8 @@ INPUT_SHAPES = {
 @dataclass(frozen=True)
 class CommConfig:
     """The paper's technique as a first-class trainer feature."""
-    strategy: str = "bsp"             # bsp | gaia | fedavg | dgc | dpsgd
+    strategy: str = "bsp"             # bsp | gaia | fedavg | dgc | dpsgd |
+    #                                   adpsgd
     # communication fabric (repro.topology): who talks to whom, when, and
     # at what link cost.  Static graphs become constant schedules;
     # tv-dcliques / random-matching are genuinely time-varying.
@@ -252,8 +253,16 @@ class CommConfig:
     link_profile: str = "uniform"     # uniform | datacenter | geo-wan
     # online re-wiring: control-plane floats charged per newly-activated
     # link whenever the active edge set changes (schedule rotation or a
-    # SkewScout topology-rung switch); 0 keeps re-wiring free
+    # SkewScout topology-rung switch); 0 keeps re-wiring free (the
+    # per-class handshake latency is still priced into simulated time)
     rewire_floats: float = 0.0
+    # asynchronous gossip (AD-PSGD): the ledger prices rounds on
+    # per-edge virtual clocks (links never wait for each other) instead
+    # of the synchronous slowest-link rule
+    async_gossip: bool = False
+    # snapshot-buffer depth for adpsgd: neighbor reads may be up to this
+    # many rounds stale (also the top of the SkewScout staleness ladder)
+    max_staleness: int = 2
     # Gaia
     gaia_t0: float = 0.10
     # FedAvg

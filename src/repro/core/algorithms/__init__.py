@@ -1,3 +1,4 @@
+from repro.core.algorithms.adpsgd import ADPSGD
 from repro.core.algorithms.base import ModelFns, tree_size
 from repro.core.algorithms.bsp import BSP
 from repro.core.algorithms.dgc import DGC, WARMUP_SPARSITIES, warmup_sparsity
@@ -5,5 +6,6 @@ from repro.core.algorithms.dpsgd import DPSGD
 from repro.core.algorithms.fedavg import FedAvg
 from repro.core.algorithms.gaia import Gaia
 
-__all__ = ["ModelFns", "tree_size", "BSP", "DGC", "WARMUP_SPARSITIES",
-           "warmup_sparsity", "DPSGD", "FedAvg", "Gaia"]
+__all__ = ["ADPSGD", "ModelFns", "tree_size", "BSP", "DGC",
+           "WARMUP_SPARSITIES", "warmup_sparsity", "DPSGD", "FedAvg",
+           "Gaia"]

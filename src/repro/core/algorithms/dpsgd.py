@@ -110,13 +110,27 @@ class DPSGD:
                         params),
         }
 
-    def _mix(self, stacked: Params, nbr_idx, nbr_w, self_w) -> Params:
-        """Gossip-average every leaf: flatten the per-node model stack to
-        one (K, N) matrix, mix once, split back."""
+    def _flatten(self, stacked: Params):
+        """Per-node model stack -> one (K, N) float32 matrix (+ the
+        structure needed to split back)."""
         leaves, treedef = jax.tree_util.tree_flatten(stacked)
         flat = jnp.concatenate(
             [l.reshape(self.K, -1).astype(jnp.float32) for l in leaves],
             axis=1)
+        return flat, treedef, leaves
+
+    def _unflatten(self, mixed: jnp.ndarray, treedef, leaves) -> Params:
+        out, off = [], 0
+        for l in leaves:
+            n = l[0].size
+            out.append(mixed[:, off:off + n].reshape(l.shape).astype(l.dtype))
+            off += n
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def _mix(self, stacked: Params, nbr_idx, nbr_w, self_w) -> Params:
+        """Gossip-average every leaf: flatten the per-node model stack to
+        one (K, N) matrix, mix once, split back."""
+        flat, treedef, leaves = self._flatten(stacked)
         if self.use_kernel:
             mixed = ops.neighbor_mix(flat, nbr_idx, nbr_w, self_w)
         else:
@@ -127,12 +141,7 @@ class DPSGD:
                 jnp.arange(K)[:, None], nbr_idx].add(nbr_w)
             W = W + jnp.diag(self_w)
             mixed = jnp.matmul(W, flat)
-        out, off = [], 0
-        for l in leaves:
-            n = l[0].size
-            out.append(mixed[:, off:off + n].reshape(l.shape).astype(l.dtype))
-            off += n
-        return jax.tree_util.tree_unflatten(treedef, out)
+        return self._unflatten(mixed, treedef, leaves)
 
     def step(self, state, batch, lr, step_idx) -> Tuple[Dict, Dict]:
         """One local step + gossip round.  ``step_idx`` selects the
@@ -143,18 +152,17 @@ class DPSGD:
         return self._step(state, batch, lr, step_idx,
                           nbr_idx, nbr_w, self_w)
 
-    @partial(jax.jit, static_argnums=0)
-    def _step(self, state, batch, lr, step_idx, nbr_idx, nbr_w, self_w
-              ) -> Tuple[Dict, Dict]:
-        self.trace_count += 1          # Python side effect: trace-time only
+    def _local_update(self, state, batch, lr):
+        """Per-node momentum-SGD step (pre-gossip), shared with ADPSGD."""
         losses, grads, new_ms = pernode_grads(
             self.fns, state["params"], state["mstate"], batch,
             params_stacked=True)
         vel = tmap(lambda w, g, u: self.m * u - lr * (g + self.wd * w),
                    state["params"], grads, state["vel"])
         params = tmap(lambda w, u: w + u, state["params"], vel)
-        params = self._mix(params, nbr_idx, nbr_w, self_w)
+        return losses, new_ms, vel, params
 
+    def _gossip_metrics(self, losses, params, nbr_w) -> Dict:
         # per-node price: ship the model once to each active neighbor
         # this round (padding entries carry weight 0, so counting
         # positive weights recovers the round graph's mean degree)
@@ -168,8 +176,16 @@ class DPSGD:
                                   jax.tree_util.tree_leaves(avg)))
         den = sum(jnp.sum(jnp.abs(a)) * self.K
                   for a in jax.tree_util.tree_leaves(avg))
-        metrics = {"loss": jnp.mean(losses), "comm_floats": comm,
-                   "consensus_delta": num / jnp.maximum(den, 1e-12)}
+        return {"loss": jnp.mean(losses), "comm_floats": comm,
+                "consensus_delta": num / jnp.maximum(den, 1e-12)}
+
+    @partial(jax.jit, static_argnums=0)
+    def _step(self, state, batch, lr, step_idx, nbr_idx, nbr_w, self_w
+              ) -> Tuple[Dict, Dict]:
+        self.trace_count += 1          # Python side effect: trace-time only
+        losses, new_ms, vel, params = self._local_update(state, batch, lr)
+        params = self._mix(params, nbr_idx, nbr_w, self_w)
+        metrics = self._gossip_metrics(losses, params, nbr_w)
         return ({"params": params, "mstate": new_ms, "vel": vel}, metrics)
 
     def eval_params(self, state):

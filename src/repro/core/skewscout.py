@@ -11,11 +11,24 @@ Periodically (every ``travel_every`` minibatches):
     default), where C(θ) is the measured per-step communication since the
     last travel and CM is the full-model cost (BSP's per-step price).
 
-When a :class:`~repro.topology.CommLedger` is attached, C(θ)/CM is priced
-at the *link level*: floats are weighted by the inverse bandwidth of the
-links they crossed, so under the geo-wan profile scarce WAN bytes dominate
-the objective — the paper's Gaia setting, where only WAN traffic matters.
-With the uniform profile this reduces exactly to the flat float ratio.
+Probes ride the fabric: each node's model travels along one of the
+round's *active* edges (falling back to the union graph's neighbors when
+a sparse round leaves the node isolated, and to the legacy ring only
+when there is no fabric at all), so probes measure peers the node can
+actually reach.  When a :class:`~repro.topology.CommLedger` is attached,
+every probe's model shipment is **booked on the edge it traverses** —
+probe traffic is priced into C(θ) like any other traffic, instead of
+being tallied off-ledger.
+
+C(θ)/CM pricing: with a synchronous ledger, floats are weighted by the
+inverse bandwidth of the links they crossed, so under the geo-wan
+profile scarce WAN bytes dominate the objective — the paper's Gaia
+setting.  With an **async** ledger (AD-PSGD), C(θ) is the simulated
+wall-clock the window actually cost (per-edge clocks, latency amortized
+by staleness) over the wall-clock of one full-model exchange — so θ
+rungs that change *when* links block (staleness) are priced, not just
+rungs that change how many floats move.  With the uniform profile the
+sync path reduces exactly to the flat float ratio.
 
 SkewScout is algorithm-agnostic: anything exposing a dynamic θ knob
 (Gaia t0, FedAvg iter_local, DGC sparsity) plugs in via ``theta_ladder``.
@@ -28,17 +41,22 @@ ledger books that re-wiring traffic into ``priced_cost`` — so C(θ)
 charges a rung-flapping controller for link churn, and CM is pinned at
 construction (one full-model exchange on the densest fabric) so the
 ratio stays comparable across rungs.
+
+Staleness as a rung: for asynchronous gossip (AD-PSGD) the θ ladder is
+``[0, 1, ..., max_staleness]`` (most synchronous = most expensive
+first), priced by the async ledger's wall-clock — the controller trades
+*freshness* against accuracy loss on a fixed fabric.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, List, Optional, Tuple
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import CommConfig
 from repro.core.tuners import make_tuner
+from repro.topology.graphs import as_schedule
 
 # θ ladders, ordered most-communication-heavy -> most-relaxed (paper §4.4)
 THETA_LADDERS = {
@@ -56,6 +74,10 @@ class TravelReport:
     comm_ratio: float          # C(θ)/CM since last travel (per step)
     objective: float
     new_theta: Any
+    # model-traveling traffic this probe event shipped (K models, one
+    # per node) and the union-fabric edges it crossed
+    probe_floats: float = 0.0
+    probe_edges: Tuple = ()
 
 
 class SkewScout:
@@ -66,13 +88,16 @@ class SkewScout:
                  cm_ref: Optional[float] = None):
         """eval_acc_fn(params, mstate, x, y) -> accuracy in [0,1].
         ``ledger``: optional CommLedger; when given, C(θ)/CM is computed
-        from bandwidth-priced link traffic instead of raw floats.
+        from bandwidth-priced link traffic (sync) or simulated
+        wall-clock (async), and probe shipments are booked on the edges
+        they traverse.
         ``warmup_travels``: initial probes that measure but do not move θ —
         the first window's communication reflects the init transient
         (updates are large at t=0 whatever θ is), so attributing it to the
         current rung sends the hill climber the wrong way.
         ``ladder``: override THETA_LADDERS — for topology mode, a list of
-        TopologySchedule rungs ordered densest first.
+        TopologySchedule rungs ordered densest first; for staleness mode,
+        ints ordered most-synchronous first.
         ``cm_ref``: pin the CM denominator (seconds for one full-model
         exchange) instead of re-deriving it from the ledger's current
         fabric each probe — required when rung switches change the fabric
@@ -88,7 +113,7 @@ class SkewScout:
         self.ledger = ledger
         self.warmup_travels = warmup_travels
         self._cm_ref = cm_ref
-        self._cost_mark = ledger.priced_cost() if ledger else 0.0
+        self._cost_mark = self._ledger_cost()
         self._comm_since = 0.0
         self._steps_since = 0
         self.history: List[TravelReport] = []
@@ -97,33 +122,77 @@ class SkewScout:
     def theta(self):
         return self.tuner.theta
 
+    def _ledger_cost(self) -> float:
+        """The running cost counter C(θ) windows are cut from: priced
+        link traffic (bandwidth-seconds) for a sync ledger, simulated
+        wall-clock for an async one."""
+        if self.ledger is None:
+            return 0.0
+        if getattr(self.ledger, "async_mode", False):
+            return self.ledger.sim_time_s
+        return self.ledger.priced_cost()
+
+    def _cm(self) -> float:
+        if self._cm_ref is not None:
+            return self._cm_ref
+        if getattr(self.ledger, "async_mode", False):
+            return self.ledger.full_exchange_time(self.model_floats)
+        return self.ledger.full_exchange_cost(self.model_floats)
+
     def record_step(self, comm_floats: float) -> None:
         self._comm_since += float(comm_floats)
         self._steps_since += 1
+
+    def _probe_route(self, algo, step: int) -> List[Tuple[int, int]]:
+        """One probe target per node, along the round's active edges.
+        Isolated nodes (sparse rounds) fall back to the union graph;
+        algorithms with no fabric at all (Gaia/FedAvg/DGC without a
+        ledger) keep the legacy ring.  Successive travels rotate through
+        each node's neighbor list so repeated probes cover the fabric."""
+        K = algo.K
+        sched = getattr(algo, "schedule", None)
+        graph = union = None
+        if sched is not None:
+            sched = as_schedule(sched)
+            graph, union = sched.at(step), sched.union()
+        elif self.ledger is not None:
+            union = self.ledger.topology      # route on the priced fabric
+        route = []
+        for k in range(K):
+            nbrs = graph.neighbors(k) if graph is not None else []
+            if not nbrs and union is not None:
+                nbrs = union.neighbors(k)
+            j = nbrs[len(self.history) % len(nbrs)] if nbrs \
+                else (k + 1) % K
+            route.append((k, j))
+        return route
 
     def maybe_travel(self, step: int, algo, state,
                      sample_subset: Callable) -> Optional[TravelReport]:
         """sample_subset(node) -> (x, y) training subset of that node."""
         if self._steps_since < self.comm.travel_every:
             return None
-        K = algo.K
+        route = self._probe_route(algo, step)
         # model traveling: each node's model scored at home vs. away
         losses = []
-        for k in range(K):
+        for k, j in route:
             pk, sk = algo.node_params(state, k)
             x_home, y_home = sample_subset(k)
             acc_home = float(self.eval_acc(pk, sk, x_home, y_home))
-            j = (k + 1) % K                      # ring travel (1 hop/probe)
             x_away, y_away = sample_subset(j)
             acc_away = float(self.eval_acc(pk, sk, x_away, y_away))
             losses.append(max(0.0, acc_home - acc_away))
         al = float(np.mean(losses))
+        probe_edges = tuple((min(k, j), max(k, j)) for k, j in route
+                            if k != j)
+        probe_floats = self.model_floats * len(probe_edges)
         if self.ledger is not None:
-            # link-priced window cost vs. one full-model exchange (CM)
-            window = self.ledger.priced_cost() - self._cost_mark
-            cm = (self._cm_ref if self._cm_ref is not None
-                  else self.ledger.full_exchange_cost(self.model_floats))
-            c_ratio = (window / max(self._steps_since, 1)) / cm
+            # book the probes' model shipments on the links they crossed
+            # *before* closing the window: each window's C(θ) includes
+            # the probe cost the controller itself incurred under that θ
+            self.ledger.record_probe(probe_edges, self.model_floats)
+            window = self._ledger_cost() - self._cost_mark
+            c_ratio = (window / max(self._steps_since, 1)) / self._cm()
         else:
             c_ratio = (self._comm_since / max(self._steps_since, 1)
                        ) / self.model_floats
@@ -134,22 +203,19 @@ class SkewScout:
             new = old                     # measure-only warm-up probe
         else:
             new = self.tuner.step(obj)
-        rep = TravelReport(step, old, al, c_ratio, obj, new)
+        rep = TravelReport(step, old, al, c_ratio, obj, new,
+                           probe_floats=probe_floats,
+                           probe_edges=probe_edges)
         self.history.append(rep)
         self._comm_since = 0.0
         self._steps_since = 0
-        if self.ledger is not None:
-            self._cost_mark = self.ledger.priced_cost()
+        self._cost_mark = self._ledger_cost()
         return rep
 
-    def rebase_cost_mark(self) -> None:
-        """Re-anchor the priced-cost window after the caller books
-        traffic that should not count toward C(θ) — e.g. the model-travel
-        probe itself (the float-based path likewise excludes it from
-        ``_comm_since``)."""
-        if self.ledger is not None:
-            self._cost_mark = self.ledger.priced_cost()
-
     def travel_overhead_floats(self) -> float:
-        """Cost of shipping one model per probe (counted against savings)."""
-        return self.model_floats * len(self.history)
+        """Model-traveling floats counted against the savings: probe
+        shipments of every travel *after* the measure-only warm-ups
+        (warm-up probes calibrate the controller; their traffic is still
+        booked on the ledger, but is not overhead attributed to θ)."""
+        return float(sum(rep.probe_floats
+                         for rep in self.history[self.warmup_travels:]))

@@ -15,6 +15,7 @@ import numpy as np
 
 from repro.configs.base import CommConfig
 from repro.configs.cnn_zoo import CNNConfig
+from repro.core.algorithms.adpsgd import ADPSGD
 from repro.core.algorithms.base import ModelFns, tree_size
 from repro.core.algorithms.bsp import BSP
 from repro.core.algorithms.dgc import DGC, warmup_sparsity
@@ -64,11 +65,16 @@ def make_cnn_fns(cfg: CNNConfig) -> Tuple[ModelFns, Callable]:
     return ModelFns(loss_and_grad=loss_and_grad), eval_acc_np
 
 
+#: gossip-averaging strategies that run over a TopologySchedule fabric
+GOSSIP_ALGOS = ("dpsgd", "adpsgd")
+
+
 def make_algorithm(name: str, fns: ModelFns, n_nodes: int,
                    comm: CommConfig, *, momentum: float = 0.9,
                    weight_decay: float = 5e-4, lr0: Optional[float] = None,
                    topology: Optional[Topology | TopologySchedule] = None,
-                   seed: int = 0, pad_degree: Optional[int] = None):
+                   seed: int = 0, pad_degree: Optional[int] = None,
+                   staleness: Optional[int] = None):
     if name == "bsp":
         return BSP(fns, n_nodes, momentum=momentum, weight_decay=weight_decay)
     if name == "gaia":
@@ -81,7 +87,7 @@ def make_algorithm(name: str, fns: ModelFns, n_nodes: int,
         return DGC(fns, n_nodes, momentum=momentum,
                    weight_decay=weight_decay, clip=comm.dgc_clip,
                    sparsity=comm.dgc_sparsity)
-    if name == "dpsgd":
+    if name in GOSSIP_ALGOS:
         if topology is None:
             # standalone fallback; label-aware topologies need the label
             # histograms only train_decentralized can supply — refuse to
@@ -94,6 +100,12 @@ def make_algorithm(name: str, fns: ModelFns, n_nodes: int,
                     "pass topology= explicitly (train_decentralized does "
                     "this from the partitions)")
             topology = build_schedule(comm.topology, n_nodes, seed=seed)
+        if name == "adpsgd":
+            return ADPSGD(fns, n_nodes, topology=topology,
+                          momentum=momentum, weight_decay=weight_decay,
+                          pad_degree=pad_degree,
+                          max_staleness=comm.max_staleness,
+                          staleness=staleness)
         return DPSGD(fns, n_nodes, topology=topology, momentum=momentum,
                      weight_decay=weight_decay, pad_degree=pad_degree)
     raise ValueError(name)
@@ -152,13 +164,14 @@ def train_decentralized(cnn_cfg: CNNConfig, algo_name: str,
     sched = build_schedule(comm.topology, K, label_hist=label_hist,
                            seed=seed)
 
-    # topology as a SkewScout rung (gossip only): the theta ladder is a
-    # list of schedules ordered densest first; training starts on the
-    # rung matching the configured topology when there is one, and the
+    # topology as a SkewScout rung (dpsgd): the theta ladder is a list
+    # of schedules ordered densest first; training starts on the rung
+    # matching the configured topology when there is one, and the
     # neighbor operands are padded to the ladder-wide max degree so rung
     # switches never retrace the step
     ladder = None
     pad_degree = None
+    staleness = None
     start_index = theta_start_index
     if comm.skewscout and algo_name == "dpsgd":
         ladder = topology_ladder(K, label_hist=label_hist, seed=seed)
@@ -180,32 +193,68 @@ def train_decentralized(cnn_cfg: CNNConfig, algo_name: str,
                 f"({[s.name for s in ladder]})")
         sched = ladder[start_index]
         pad_degree = max(s.max_degree for s in ladder)
+    elif comm.skewscout and algo_name == "adpsgd":
+        # staleness as a SkewScout rung (adpsgd): most synchronous rung
+        # first (staleness 0 pays full per-round latency -> the costly
+        # end of the ladder under the async time-priced C(theta)).
+        # A sync ledger ignores staleness, so every rung would have the
+        # same C(theta) and the controller would drift on noise —
+        # refuse instead of silently mis-steering
+        if not comm.async_gossip:
+            raise ValueError(
+                "skewscout over the adpsgd staleness ladder needs "
+                "async_gossip=True: a synchronous ledger prices every "
+                "staleness rung identically (C(theta) is float-based), "
+                "so the controller's cost term would be degenerate")
+        ladder = list(range(comm.max_staleness + 1))
+        if start_index is None:
+            start_index = len(ladder) - 1     # start fully asynchronous
+        elif not 0 <= start_index < len(ladder):
+            raise ValueError(
+                f"theta_start_index={start_index} out of range for the "
+                f"{len(ladder)}-rung staleness ladder ({ladder})")
+        staleness = ladder[start_index]
 
     ledger = CommLedger(sched, LINK_PROFILES[comm.link_profile],
-                        rewire_floats_per_edge=comm.rewire_floats)
+                        rewire_floats_per_edge=comm.rewire_floats,
+                        async_mode=comm.async_gossip)
 
     algo = make_algorithm(algo_name, fns, K, comm, momentum=momentum,
                           weight_decay=weight_decay, lr0=lr, topology=sched,
-                          seed=seed, pad_degree=pad_degree)
+                          seed=seed, pad_degree=pad_degree,
+                          staleness=staleness)
     state = algo.init(params, mstate)
     loader = DecentralizedLoader(parts, batch, seed=seed)
     lr_fn = lr_schedule or (lambda s: lr)
 
+    def _cm_pin(fabric) -> float:
+        # CM pinned to one full-model exchange on the given fabric, in
+        # the unit the scout prices C(theta) with: wall-clock for an
+        # async ledger, bandwidth-seconds for a sync one
+        led = CommLedger(fabric, LINK_PROFILES[comm.link_profile])
+        m = float(tree_size(params))
+        return led.full_exchange_time(m) if comm.async_gossip \
+            else led.full_exchange_cost(m)
+
     scout = None
     if comm.skewscout and algo_name == "dpsgd":
-        # CM is pinned to one full-model exchange on the densest rung so
-        # C(theta)/CM stays comparable as the controller changes fabrics
-        cm_ref = CommLedger(ladder[0], LINK_PROFILES[comm.link_profile]
-                            ).full_exchange_cost(float(tree_size(params)))
+        # densest rung pins the denominator so C(theta)/CM stays
+        # comparable as the controller changes fabrics
         scout = SkewScout(comm, algo_name, tree_size(params), eval_acc,
                           start_index=start_index, seed=seed,
-                          ledger=ledger, ladder=ladder, cm_ref=cm_ref)
+                          ledger=ledger, ladder=ladder,
+                          cm_ref=_cm_pin(ladder[0]))
+    elif comm.skewscout and algo_name == "adpsgd":
+        scout = SkewScout(comm, algo_name, tree_size(params), eval_acc,
+                          start_index=start_index, seed=seed,
+                          ledger=ledger, ladder=ladder,
+                          cm_ref=_cm_pin(sched))
     elif comm.skewscout and algo_name != "bsp":
         scout = SkewScout(comm, algo_name, tree_size(params), eval_acc,
                           start_index=theta_start_index, seed=seed,
                           ledger=ledger)
 
-    loss_curve, acc_curve, gap_curve = [], [], []
+    loss_curve, acc_curve, gap_curve, stale_curve = [], [], [], []
     comm_total = 0.0
     steps_per_epoch = loader.steps_per_epoch
 
@@ -229,11 +278,18 @@ def train_decentralized(cnn_cfg: CNNConfig, algo_name: str,
                                    jnp.asarray(t, jnp.int32), **kw)
         cf = float(metrics["comm_floats"])
         comm_total += cf
-        if algo_name == "dpsgd":
-            # round t's active edge set prices this gossip exchange
-            ledger.record_gossip(float(tree_size(params)), t=t)
+        if algo_name in GOSSIP_ALGOS:
+            # round t's active edge set prices this gossip exchange; an
+            # async algorithm also reports its per-edge staleness bound
+            # so the ledger can amortize link latency accordingly
+            stale = algo.edge_staleness(t) \
+                if algo_name == "adpsgd" else None
+            ledger.record_gossip(float(tree_size(params)), t=t,
+                                 staleness=stale)
             gap_curve.append(
                 (t, float(algo.schedule.round_spectral_gap(t))))
+            if algo_name == "adpsgd":
+                stale_curve.append((t, float(metrics["mean_staleness"])))
         elif cf > 0:
             ledger.record_exchange(cf)
         if scout:
@@ -242,16 +298,19 @@ def train_decentralized(cnn_cfg: CNNConfig, algo_name: str,
                 t, algo, state,
                 lambda node: loader.sample_train_subset(node, 256, seed=t))
             if rep is not None:
-                comm_total += tree_size(params)  # model traveling overhead
-                # one model total crosses the fabric per probe: M/K per node
-                ledger.record_exchange(float(tree_size(params)) / K)
-                scout.rebase_cost_mark()  # keep probe cost out of C(θ)
+                # model traveling overhead: the scout booked each
+                # probe's shipment on the edge it crossed
+                comm_total += rep.probe_floats
                 if algo_name == "dpsgd" and rep.new_theta is not rep.theta:
                     # topology rung switch: re-wiring is charged by the
                     # ledger on the next gossip round, inside the new
                     # rung's C(θ) window
                     algo.set_schedule(rep.new_theta)
                     ledger.switch_schedule(rep.new_theta)
+                elif algo_name == "adpsgd" and rep.new_theta != rep.theta:
+                    # staleness rung switch: same fabric, new bound —
+                    # runtime operand values only, no re-wiring
+                    algo.set_staleness(rep.new_theta)
         if (t + 1) % eval_every == 0 or t == steps - 1:
             p, s = algo.eval_params(state)
             acc = eval_acc(p, s, val[0], val[1])
@@ -264,8 +323,8 @@ def train_decentralized(cnn_cfg: CNNConfig, algo_name: str,
             f"{eval_every}); acc_curve is empty — check the schedule")
     bsp_equiv = float(tree_size(params)) * steps
     # the fabric the run *ended* on (rung switches may have moved it)
-    final_sched = as_schedule(algo.schedule) if algo_name == "dpsgd" \
-        else sched
+    final_sched = as_schedule(algo.schedule) \
+        if algo_name in GOSSIP_ALGOS else sched
     return RunResult(
         name=f"{cnn_cfg.name}/{algo_name}",
         val_acc=acc_curve[-1][1],
@@ -279,8 +338,19 @@ def train_decentralized(cnn_cfg: CNNConfig, algo_name: str,
                 "spectral_gap": final_sched.spectral_gap(),
                 "spectral_gap_curve": gap_curve,
                 "schedule_period": final_sched.period,
+                # per-node clock accounting (async: who ran ahead; sync:
+                # who sat waiting on the slowest link)
+                "node_clock_skew_s": ledger.clock_skew_s(),
+                "node_busy_s": [float(b) for b in ledger.node_busy_s],
+                "node_idle_s": [float(i) for i in ledger.node_idle_s],
+                **({"staleness_curve": stale_curve,
+                    "max_staleness": algo.max_staleness}
+                   if algo_name == "adpsgd" else {}),
                 **({"topology_ladder": [s.name for s in ladder]}
-                   if ladder is not None else {})},
+                   if ladder is not None and algo_name == "dpsgd" else {}),
+                **({"staleness_ladder": list(ladder)}
+                   if ladder is not None and algo_name == "adpsgd"
+                   else {})},
         topology=final_sched.name,
         comm_lan_floats=ledger.lan_floats,
         comm_wan_floats=ledger.wan_floats,

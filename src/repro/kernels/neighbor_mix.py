@@ -22,6 +22,14 @@ changes the neighbor set every round therefore reuses one compilation,
 provided every round pads to the schedule-wide max degree
 (``TopologySchedule.neighbor_arrays`` does) — that compile-once contract
 is what ``DPSGD.trace_count`` asserts in the tests.
+
+Stale mixing (AD-PSGD): passing ``src`` with M >= K rows gathers the
+neighbor terms from ``src`` instead of ``x`` (the self term stays on
+``x``).  AD-PSGD stacks its bounded-staleness snapshot buffer into
+``src = snaps.reshape((S + 1) * K, N)`` and offsets the neighbor indices
+by ``staleness * K`` — the staleness values ride inside the same runtime
+index operand, so a controller moving the staleness rung mid-run reuses
+the one compilation too.
 """
 from __future__ import annotations
 
@@ -44,32 +52,76 @@ def _mix_kernel(nbr_ref, w_ref, sw_ref, x_ref, out_ref):
         out_ref[k] = acc.astype(out_ref.dtype)
 
 
+def _mix_src_kernel(nbr_ref, w_ref, sw_ref, x_ref, src_ref, out_ref):
+    """Stale-mixing variant: neighbor rows gathered from ``src`` (M rows,
+    e.g. a stacked staleness-snapshot buffer), self term from ``x``."""
+    x = x_ref[...].astype(jnp.float32)            # (K, block_rows, 128)
+    src = src_ref[...].astype(jnp.float32)        # (M, block_rows, 128)
+    K, D = nbr_ref.shape
+    for k in range(K):
+        acc = sw_ref[k] * x[k]
+        for d in range(D):
+            xn = jax.lax.dynamic_index_in_dim(src, nbr_ref[k, d], axis=0,
+                                              keepdims=False)
+            acc = acc + w_ref[k, d] * xn
+        out_ref[k] = acc.astype(out_ref.dtype)
+
+
+def _to_blocks(x: jnp.ndarray, rows_pad: int) -> jnp.ndarray:
+    rows, n = x.shape
+    xp = jnp.pad(x, ((0, 0), (0, rows_pad * LANES - n)))
+    return xp.reshape(rows, rows_pad, LANES)
+
+
 def neighbor_mix(x: jnp.ndarray, nbr_idx: jnp.ndarray, nbr_w: jnp.ndarray,
-                 self_w: jnp.ndarray, *, block_rows: int = 64,
+                 self_w: jnp.ndarray, *, src: jnp.ndarray = None,
+                 block_rows: int = 64,
                  interpret: bool = False) -> jnp.ndarray:
     """x: (K, N) stacked per-node vectors.  nbr_idx/nbr_w: (K, D) padded
-    neighbor lists; self_w: (K,) = diag(W).  Returns (K, N) mixed."""
+    neighbor lists; self_w: (K,) = diag(W).  Returns (K, N) mixed.
+
+    ``src`` (optional, (M, N) with M >= K): gather neighbor terms from
+    ``src`` rows instead of ``x`` — AD-PSGD's stale mixing, where
+    ``src`` is the flattened (staleness+1, K, N) snapshot buffer and
+    ``nbr_idx`` carries ``staleness * K + neighbor`` offsets."""
     K, N = x.shape
     assert nbr_idx.shape == nbr_w.shape and nbr_idx.shape[0] == K
     assert self_w.shape == (K,)
     rows = -(-N // LANES)
     rows_pad = -(-rows // block_rows) * block_rows
-    xp = jnp.pad(x, ((0, 0), (0, rows_pad * LANES - N)))
-    x3 = xp.reshape(K, rows_pad, LANES)
+    x3 = _to_blocks(x, rows_pad)
     n_blocks = rows_pad // block_rows
+    block3 = lambda rows: pl.BlockSpec((rows, block_rows, LANES),
+                                       lambda i: (0, i, 0))
+    scalars = [
+        pl.BlockSpec(memory_space=pl.ANY),        # nbr_idx (scalars)
+        pl.BlockSpec(memory_space=pl.ANY),        # nbr_w
+        pl.BlockSpec(memory_space=pl.ANY),        # self_w
+    ]
+    operands = (jnp.asarray(nbr_idx, jnp.int32),
+                jnp.asarray(nbr_w, jnp.float32),
+                jnp.asarray(self_w, jnp.float32))
 
-    out = pl.pallas_call(
-        _mix_kernel,
-        grid=(n_blocks,),
-        in_specs=[
-            pl.BlockSpec(memory_space=pl.ANY),    # nbr_idx (scalars)
-            pl.BlockSpec(memory_space=pl.ANY),    # nbr_w
-            pl.BlockSpec(memory_space=pl.ANY),    # self_w
-            pl.BlockSpec((K, block_rows, LANES), lambda i: (0, i, 0)),
-        ],
-        out_specs=pl.BlockSpec((K, block_rows, LANES), lambda i: (0, i, 0)),
-        out_shape=jax.ShapeDtypeStruct(x3.shape, x.dtype),
-        interpret=interpret,
-    )(jnp.asarray(nbr_idx, jnp.int32), jnp.asarray(nbr_w, jnp.float32),
-      jnp.asarray(self_w, jnp.float32), x3)
+    if src is None:
+        out = pl.pallas_call(
+            _mix_kernel,
+            grid=(n_blocks,),
+            in_specs=scalars + [block3(K)],
+            out_specs=block3(K),
+            out_shape=jax.ShapeDtypeStruct(x3.shape, x.dtype),
+            interpret=interpret,
+        )(*operands, x3)
+    else:
+        M = src.shape[0]
+        assert src.shape[1] == N, (src.shape, x.shape)
+        assert M >= K, (M, K)
+        src3 = _to_blocks(src, rows_pad)
+        out = pl.pallas_call(
+            _mix_src_kernel,
+            grid=(n_blocks,),
+            in_specs=scalars + [block3(K), block3(M)],
+            out_specs=block3(K),
+            out_shape=jax.ShapeDtypeStruct(x3.shape, x.dtype),
+            interpret=interpret,
+        )(*operands, x3, src3)
     return out.reshape(K, rows_pad * LANES)[:, :N]

@@ -63,12 +63,15 @@ def dgc_sparsify(v, sparsity, *, n_bins: int = 256, block_rows: int = 64,
 
 
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def neighbor_mix(x, nbr_idx, nbr_w, self_w, *, block_rows: int = 64,
+def neighbor_mix(x, nbr_idx, nbr_w, self_w, *, src=None,
+                 block_rows: int = 64,
                  interpret: Optional[bool] = None) -> jnp.ndarray:
     """Sparse gossip averaging y[k] = W[k,k]*x[k] + sum_j W[k,j]*x[j]
-    over padded neighbor lists (see Topology.neighbor_arrays)."""
+    over padded neighbor lists (see Topology.neighbor_arrays).  With
+    ``src`` (M, N), neighbor rows are gathered from ``src`` instead of
+    ``x`` — AD-PSGD's stale mixing over a flattened snapshot buffer."""
     interpret = _default_interpret() if interpret is None else interpret
-    return _nm.neighbor_mix(x, nbr_idx, nbr_w, self_w,
+    return _nm.neighbor_mix(x, nbr_idx, nbr_w, self_w, src=src,
                             block_rows=block_rows, interpret=interpret)
 
 

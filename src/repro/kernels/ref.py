@@ -68,6 +68,17 @@ def neighbor_mix_ref(x: jnp.ndarray, mixing: jnp.ndarray) -> jnp.ndarray:
                       x.astype(jnp.float32)).astype(x.dtype)
 
 
+def neighbor_mix_src_ref(x: jnp.ndarray, src: jnp.ndarray,
+                         nbr_idx: jnp.ndarray, nbr_w: jnp.ndarray,
+                         self_w: jnp.ndarray) -> jnp.ndarray:
+    """Materialized-gather oracle for the stale-mixing variant: neighbor
+    rows pulled from ``src`` (M, N), self term from ``x`` (K, N)."""
+    gathered = src.astype(jnp.float32)[nbr_idx]        # (K, D, N)
+    out = self_w[:, None] * x.astype(jnp.float32) \
+        + jnp.sum(nbr_w[..., None] * gathered, axis=1)
+    return out.astype(x.dtype)
+
+
 def group_norm_ref(x: jnp.ndarray, scale: jnp.ndarray, bias: jnp.ndarray, *,
                    group_size: int, eps: float = 1e-5) -> jnp.ndarray:
     """x: (B, H, W, C) NHWC; groups of ``group_size`` adjacent channels."""

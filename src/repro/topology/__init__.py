@@ -19,23 +19,33 @@ Module map
     ``CommConfig.topology``.
 
 ``costs.py``
-    :class:`LinkProfile` (per-class bandwidth/latency presets in
-    ``LINK_PROFILES``: uniform | datacenter | geo-wan) and
+    :class:`LinkProfile` (per-class bandwidth/latency/handshake presets
+    in ``LINK_PROFILES``: uniform | datacenter | geo-wan) and
     :class:`CommLedger`, which prices each algorithm's exchanged floats
     against the *active edge set of the round's graph*, tracks LAN/WAN
     totals and a simulated wall-clock step time, and charges an explicit
-    online re-wiring cost whenever the active edge set changes (schedule
-    rotation or a SkewScout rung switch via ``switch_schedule``).  The
-    ledger is threaded through ``core/trainer.py`` and prices
-    SkewScout's ``C(theta)/CM`` objective in WAN-weighted cost.
+    online re-wiring cost — control-plane floats plus per-class
+    handshake latency — whenever the active edge set changes (schedule
+    rotation or a SkewScout rung switch via ``switch_schedule``).  Two
+    timing models share the float accounting: synchronous rounds cost
+    the slowest activated link; ``async_mode`` (AD-PSGD) gives every
+    link its own virtual clock — a round costs the activated edges' max
+    clock, bounded staleness amortizes link latency, and per-node
+    busy/idle/clock-skew accounting exposes the stragglers.  The ledger
+    is threaded through ``core/trainer.py`` and prices SkewScout's
+    ``C(theta)/CM`` objective in WAN-weighted cost (sync) or simulated
+    wall-clock (async); SkewScout probe shipments are booked per edge
+    via ``record_probe``.
 
 Downstream consumers
 --------------------
 ``core/algorithms/dpsgd.py`` (gossip averaging = ``W_t @ params`` on the
 round's edges, per-round neighbor operands through the
 ``kernels/neighbor_mix.py`` Pallas kernel — one compilation per run),
-``core/skewscout.py`` (topology as a ladder rung),
-``benchmarks/fig_topology.py`` (topology x skew x schedule sweep), and
+``core/algorithms/adpsgd.py`` (bounded-staleness async gossip over the
+same kernel's src-gather variant), ``core/skewscout.py`` (topology and
+staleness as ladder rungs), ``benchmarks/fig_topology.py`` (topology x
+skew x schedule sweep + sync-vs-async column), and
 ``examples/train_topology.py`` (the geo-WAN scenario end-to-end).
 """
 from repro.topology.costs import LINK_PROFILES, CommLedger, LinkProfile

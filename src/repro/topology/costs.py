@@ -2,8 +2,7 @@
 
 Replaces the flat ``comm_floats`` scalar with per-link traffic: every
 exchange is attributed to the edges of the run's fabric, split into LAN
-vs WAN totals, and priced into a simulated wall-clock step time
-(synchronous rounds: a step costs the slowest link's latency + transfer).
+vs WAN totals, and priced into a simulated wall-clock step time.
 
 The fabric is a :class:`~repro.topology.graphs.TopologySchedule` (a bare
 :class:`Topology` is wrapped into its constant schedule): gossip rounds
@@ -11,10 +10,31 @@ are priced against the *active edge set of that round's graph*, not one
 frozen graph.  When the active edge set changes — a time-varying
 schedule rotating its matchings, or SkewScout switching topology rungs
 mid-run — each newly-activated link is charged an explicit online
-re-wiring cost (``rewire_floats_per_edge`` control-plane floats plus the
-link's latency for the handshake).  Re-wiring traffic is booked on the
+re-wiring cost: ``rewire_floats_per_edge`` control-plane floats plus a
+per-class handshake latency (WAN setup is far slower than LAN), both
+added to the simulated step time.  Re-wiring traffic is booked on the
 links it crosses, so the LAN/WAN split still covers every priced float
 and SkewScout's C(θ)/CM objective sees schedule switches as real cost.
+
+Two timing models share the float accounting:
+
+*Synchronous* (default, D-PSGD stop-and-wait): every round ends when its
+slowest activated link finishes, so ``sim_time_s`` grows by the max of
+``latency + transfer`` over the round's active edges — one geo-WAN
+straggler gates every node.
+
+*Asynchronous* (``async_mode=True``, AD-PSGD): every link carries a
+**virtual clock** that advances only by that link's own cost, and a
+round's wall-clock is the max of the *activated* edges' clocks — links
+never wait for each other, so the global clock is a max of per-edge
+sums instead of a sum of per-round maxes (always <=, and strictly <
+once different links bottleneck different rounds or latency is
+amortized).  Bounded staleness is what licenses the overlap: a link
+whose payloads may arrive up to ``s`` rounds stale keeps ``s + 1``
+deliveries in flight, so its propagation latency is re-paid once per
+``s + 1`` activations (``s = 0`` degrades to stop-and-wait per edge).
+Per-node busy time (max cost over the node's own activated links each
+round) and the resulting idle time / clock skew expose who was gated.
 
 Units: traffic in *floats* (the repo's communication currency, 4 bytes
 each); bandwidth in floats/second; latency in seconds.
@@ -33,18 +53,27 @@ from repro.topology.graphs import (Edge, Topology, TopologySchedule,
 @dataclass(frozen=True)
 class LinkProfile:
     """Per-class bandwidth/latency.  ``uniform`` removes the LAN/WAN
-    distinction (every link is LAN-priced) — the seed repo's behaviour."""
+    distinction (every link is LAN-priced) — the seed repo's behaviour.
+    ``*_handshake`` is the connection-setup latency a newly-activated
+    link pays once (re-wiring); it defaults to 3x the link's propagation
+    latency (SYN / SYN-ACK / ACK) when not given."""
     name: str
     lan_bandwidth: float        # floats / second
     wan_bandwidth: float
     lan_latency: float = 0.0    # seconds
     wan_latency: float = 0.0
+    lan_handshake: Optional[float] = None   # seconds; None -> 3x latency
+    wan_handshake: Optional[float] = None
 
     def bandwidth(self, cls: str) -> float:
         return self.wan_bandwidth if cls == "wan" else self.lan_bandwidth
 
     def latency(self, cls: str) -> float:
         return self.wan_latency if cls == "wan" else self.lan_latency
+
+    def handshake(self, cls: str) -> float:
+        h = self.wan_handshake if cls == "wan" else self.lan_handshake
+        return 3.0 * self.latency(cls) if h is None else h
 
     def price_per_float(self, cls: str) -> float:
         """Seconds per float — the scarcity weight used by SkewScout."""
@@ -72,6 +101,8 @@ class _GraphPricing:
                               for c in graph.edge_class])
         self.lat = np.asarray([profile.latency(c)
                                for c in graph.edge_class])
+        self.hs = np.asarray([profile.handshake(c)
+                              for c in graph.edge_class])
         self.is_wan = np.asarray([c == "wan" for c in graph.edge_class],
                                  bool)
         self.active = frozenset(graph.edges)
@@ -97,29 +128,43 @@ class CommLedger:
     (parameter-server-style traffic has no per-round edge set).
     ``record_gossip(m, t)``: D-PSGD style — every edge *active in round
     t's graph* carries the full model once per direction (``2m`` per
-    active edge).
+    active edge).  In ``async_mode`` a per-edge ``staleness`` bound
+    (AD-PSGD) amortizes each link's latency over ``staleness + 1``
+    in-flight deliveries.
+    ``record_probe(edges, m)``: SkewScout model traveling — ``m`` floats
+    cross each probed union link once.
     """
 
     def __init__(self, fabric: Union[Topology, TopologySchedule],
                  profile: LinkProfile, *,
-                 rewire_floats_per_edge: float = 0.0):
+                 rewire_floats_per_edge: float = 0.0,
+                 async_mode: bool = False):
         self.profile = profile
         self.rewire_floats_per_edge = float(rewire_floats_per_edge)
+        self.async_mode = bool(async_mode)
         # source of truth for per-edge traffic survives schedule switches
         self._traffic: Dict[Edge, float] = {}
         self.lan_floats = 0.0
         self.wan_floats = 0.0
         self.sim_time_s = 0.0
-        # online re-wiring accounting (also included in lan/wan totals)
+        # per-edge virtual clocks (canonical edge -> seconds); in sync
+        # mode every activated edge snaps to the global clock, in async
+        # mode each advances by its own cost only
+        self._edge_clock: Dict[Edge, float] = {}
+        # online re-wiring accounting (floats also in lan/wan totals)
         self.rewire_lan_floats = 0.0
         self.rewire_wan_floats = 0.0
         self.rewire_events = 0
+        self.rewire_time_s = 0.0     # handshake seconds booked on links
         # communication rounds recorded — includes probe/overhead
         # exchanges, so this is NOT the trainer's step count
         self.rounds = 0
         self._last_active: Optional[frozenset] = None
         self._pricing: Dict[int, _GraphPricing] = {}
         self._attach(as_schedule(fabric))
+        # per-node busy time: each round a node participates in, it
+        # works for the max cost over its own activated incident links
+        self.node_busy_s = np.zeros(self.topology.n_nodes)
 
     def _attach(self, schedule: TopologySchedule) -> None:
         self.schedule = schedule
@@ -134,41 +179,85 @@ class CommLedger:
         return p
 
     # ---- recording ----
-    def _book(self, pricing: _GraphPricing, per_edge: np.ndarray) -> None:
+    def _book_floats(self, pricing: _GraphPricing,
+                     per_edge: np.ndarray) -> None:
         """Attribute ``per_edge`` floats (aligned with ``pricing.graph``'s
-        edge list) to links, totals, and simulated time — all vectorized;
-        the per-edge dict only materializes in the cold accessors."""
+        edge list) to links and LAN/WAN totals — all vectorized; the
+        per-edge dict only materializes in the cold accessors."""
         pricing.traffic += per_edge
         self.lan_floats += float(per_edge[~pricing.is_wan].sum())
         self.wan_floats += float(per_edge[pricing.is_wan].sum())
-        active = per_edge > 0
-        if active.any():
-            self.sim_time_s += float(np.max(
-                np.where(active,
-                         pricing.lat + per_edge / pricing.bw, 0.0)))
+
+    def _charge_time(self, pricing: _GraphPricing,
+                     cost: np.ndarray, active: np.ndarray) -> None:
+        """Advance the clocks by ``cost`` seconds per edge (aligned with
+        ``pricing.graph.edges``; only ``active`` entries count).
+
+        sync: stop-and-wait — the global clock grows by the round's max
+        cost and every activated edge snaps to it.  async: each edge's
+        clock advances by its own cost; the global clock is the max of
+        the *activated* edges' clocks (monotone by construction)."""
+        if not active.any():
+            return
+        edges = pricing.graph.edges
+        if self.async_mode:
+            frontier = 0.0
+            for n in np.flatnonzero(active):
+                e = edges[n]
+                c = self._edge_clock.get(e, 0.0) + float(cost[n])
+                self._edge_clock[e] = c
+                frontier = max(frontier, c)
+            self.sim_time_s = max(self.sim_time_s, frontier)
+        else:
+            self.sim_time_s += float(cost[active].max())
+            for n in np.flatnonzero(active):
+                self._edge_clock[edges[n]] = self.sim_time_s
+        busy = np.zeros(len(self.node_busy_s))
+        own = np.where(active, cost, 0.0)
+        np.maximum.at(busy, pricing.ei, own)
+        np.maximum.at(busy, pricing.ej, own)
+        self.node_busy_s += busy
 
     def _rewire(self, pricing: _GraphPricing) -> None:
         """Charge the online re-wiring cost for links that were not
         active in the previous gossip round: a control-plane handshake
-        of ``rewire_floats_per_edge`` floats per new link, priced at
-        that link's class.  Booked into the LAN/WAN totals too, so
-        ``lan_floats + wan_floats`` still covers every priced float.
-        Only gossip rounds carry an active edge set — union-routed
-        exchanges (probes) never re-wire and never reset the tracking."""
+        of ``rewire_floats_per_edge`` floats per new link *plus the
+        link's per-class setup latency* (``LinkProfile.handshake``:
+        WAN >> LAN), priced at that link's class and added to the
+        simulated step time.  Floats are booked into the LAN/WAN totals
+        too, so ``lan_floats + wan_floats`` still covers every priced
+        float.  Only gossip rounds carry an active edge set —
+        union-routed exchanges (probes) never re-wire and never reset
+        the tracking."""
         if self._last_active is None or \
                 pricing.active == self._last_active:
             self._last_active = pricing.active
             return
         new = pricing.active - self._last_active
         self._last_active = pricing.active
-        if not new or self.rewire_floats_per_edge <= 0.0:
+        if not new:
             return
-        per_edge = np.zeros(len(pricing.graph.edges))
-        for e in new:
-            per_edge[pricing.edge_index[e]] = self.rewire_floats_per_edge
-        self._book(pricing, per_edge)
-        self.rewire_lan_floats += float(per_edge[~pricing.is_wan].sum())
-        self.rewire_wan_floats += float(per_edge[pricing.is_wan].sum())
+        if self.async_mode:
+            # a (re)activated link joins at the global frontier: it
+            # cannot have banked transfer time while it did not exist.
+            # Without this, a rung switch would hand the controller a
+            # free window (the new fabric's clocks lag the ratcheted
+            # global max, so C(θ) reads ~0 until they catch up).
+            for e in new:
+                self._edge_clock[e] = max(self._edge_clock.get(e, 0.0),
+                                          self.sim_time_s)
+        is_new = np.asarray([e in new for e in pricing.graph.edges])
+        per_edge = np.where(is_new, self.rewire_floats_per_edge, 0.0)
+        if self.rewire_floats_per_edge > 0.0:
+            self._book_floats(pricing, per_edge)
+            self.rewire_lan_floats += float(per_edge[~pricing.is_wan].sum())
+            self.rewire_wan_floats += float(per_edge[pricing.is_wan].sum())
+        # handshake setup latency + the control-plane transfer itself
+        cost = np.where(is_new,
+                        pricing.hs + pricing.lat + per_edge / pricing.bw,
+                        0.0)
+        self.rewire_time_s += float(cost[is_new].sum())
+        self._charge_time(pricing, cost, cost > 0)
         self.rewire_events += len(new)
 
     def record_exchange(self,
@@ -183,29 +272,82 @@ class CommLedger:
         c = np.broadcast_to(np.asarray(floats_per_node, np.float64), (K,))
         share = np.where(pricing.deg > 0,
                          c / np.maximum(pricing.deg, 1), 0.0)
-        self._book(pricing, share[pricing.ei] + share[pricing.ej])
+        per_edge = share[pricing.ei] + share[pricing.ej]
+        self._book_floats(pricing, per_edge)
+        active = per_edge > 0
+        self._charge_time(pricing,
+                          np.where(active,
+                                   pricing.lat + per_edge / pricing.bw,
+                                   0.0), active)
         self.rounds += 1
 
     def record_gossip(self, model_floats: float,
-                      t: Optional[int] = None) -> None:
+                      t: Optional[int] = None,
+                      staleness: Union[None, int, Sequence[int]] = None
+                      ) -> None:
         """One gossip round at round index ``t``: the full model crosses
         every edge active in ``schedule.at(t)``, both directions.
-        ``t=None`` keeps the legacy one-graph behaviour (round 0)."""
+        ``t=None`` keeps the legacy one-graph behaviour (round 0).
+
+        ``staleness`` (async mode only): per-edge bounded-staleness
+        values (scalar broadcasts) — a link tolerating ``s``-stale
+        deliveries pipelines ``s + 1`` payloads, so its latency is paid
+        once per ``s + 1`` activations.  Ignored in sync mode, where
+        every round is stop-and-wait regardless of the algorithm."""
         graph = self.schedule.at(0 if t is None else t)
         pricing = self._graph_pricing(graph)
         self._rewire(pricing)
-        self._book(pricing,
-                   np.full(len(graph.edges), 2.0 * model_floats))
+        n_edges = len(graph.edges)
+        per_edge = np.full(n_edges, 2.0 * model_floats)
+        self._book_floats(pricing, per_edge)
+        if self.async_mode and staleness is not None:
+            s = np.broadcast_to(np.asarray(staleness, np.float64),
+                                (n_edges,))
+            assert (s >= 0).all(), "staleness must be non-negative"
+            lat = pricing.lat / (1.0 + s)
+        else:
+            lat = pricing.lat
+        active = per_edge > 0
+        self._charge_time(pricing,
+                          np.where(active, lat + per_edge / pricing.bw,
+                                   0.0), active)
+        self.rounds += 1
+
+    def record_probe(self, edges: Sequence[Edge],
+                     floats_each: float) -> None:
+        """SkewScout model traveling: ``floats_each`` floats cross each
+        probed link once (one direction).  Probes ride union-fabric
+        links (probe routing follows active edges, which are union
+        members), are booked into the LAN/WAN totals and per-edge
+        traffic, block on delivery (staleness 0 — the measurement needs
+        the fresh model), and neither pay nor reset re-wiring."""
+        pricing = self._union_pricing
+        per_edge = np.zeros(len(pricing.graph.edges))
+        for i, j in edges:
+            e = (min(i, j), max(i, j))
+            assert e in pricing.edge_index, \
+                f"probe edge {e} is not on the union fabric"
+            per_edge[pricing.edge_index[e]] += float(floats_each)
+        self._book_floats(pricing, per_edge)
+        active = per_edge > 0
+        self._charge_time(pricing,
+                          np.where(active,
+                                   pricing.lat + per_edge / pricing.bw,
+                                   0.0), active)
         self.rounds += 1
 
     def switch_schedule(self, fabric: Union[Topology, TopologySchedule]
                         ) -> None:
         """Swap the fabric mid-run (SkewScout climbing a topology rung).
-        Accumulated traffic is preserved (see ``traffic_by_edge``); the
-        first gossip round on the new schedule pays re-wiring for every
-        link the old round's active set did not have."""
+        Accumulated traffic and per-edge clocks are preserved (see
+        ``traffic_by_edge``); the first gossip round on the new schedule
+        pays re-wiring for every link the old round's active set did not
+        have."""
+        schedule = as_schedule(fabric)
+        assert schedule.n_nodes == self.topology.n_nodes, \
+            (schedule.n_nodes, self.topology.n_nodes)
         self._flush_traffic()
-        self._attach(as_schedule(fabric))
+        self._attach(schedule)
         self._pricing.clear()
 
     def _flush_traffic(self) -> None:
@@ -232,6 +374,40 @@ class CommLedger:
         self._flush_traffic()
         return np.asarray([self._traffic.get(e, 0.0)
                            for e in self.topology.edges])
+
+    # ---- clocks ----
+    def edge_clocks(self) -> Dict[Edge, float]:
+        """Per-link virtual clocks (seconds), keyed by canonical edge —
+        survives schedule switches.  Monotone non-decreasing per edge in
+        both modes; in sync mode activated edges snap to the global
+        clock, in async mode each advances by its own cost only."""
+        return dict(self._edge_clock)
+
+    def node_clocks(self) -> np.ndarray:
+        """When each node last finished a communication: the max clock
+        over its incident links (0 if it never communicated)."""
+        clk = np.zeros(self.topology.n_nodes)
+        for (i, j), c in self._edge_clock.items():
+            if i < len(clk):
+                clk[i] = max(clk[i], c)
+            if j < len(clk):
+                clk[j] = max(clk[j], c)
+        return clk
+
+    def clock_skew_s(self) -> float:
+        """Spread of the per-node clocks — 0 when every node finishes
+        rounds in lockstep (sync, constant fabric); positive when async
+        lets fast nodes run ahead of the stragglers."""
+        clk = self.node_clocks()
+        return float(clk.max() - clk.min()) if len(clk) else 0.0
+
+    @property
+    def node_idle_s(self) -> np.ndarray:
+        """Per-node idle time: the global clock minus the node's own
+        busy time.  In sync mode this is time spent waiting on other
+        nodes' slower links; in async mode, time a fast node is done
+        before the last link drains."""
+        return np.maximum(self.sim_time_s - self.node_busy_s, 0.0)
 
     @property
     def total_floats(self) -> float:
@@ -260,7 +436,7 @@ class CommLedger:
 
     def full_exchange_cost(self, model_floats: float) -> float:
         """Priced cost of one BSP-style full-model exchange on the union
-        fabric — SkewScout's CM denominator."""
+        fabric — SkewScout's CM denominator (bandwidth-seconds)."""
         pricing = self._union_pricing
         share = model_floats / np.maximum(pricing.deg, 1)
         cost = 0.0
@@ -269,10 +445,27 @@ class CommLedger:
             cost += (share[i] + share[j]) * self.profile.price_per_float(cls)
         return max(cost, 1e-30)
 
+    def full_exchange_time(self, model_floats: float) -> float:
+        """Wall-clock of one BSP-style full-model exchange on the union
+        fabric (slowest link's latency + transfer) — the CM denominator
+        when SkewScout prices C(θ) in async simulated time."""
+        pricing = self._union_pricing
+        if not len(pricing.graph.edges):
+            return 1e-30
+        share = model_floats / np.maximum(pricing.deg, 1)
+        per_edge = share[pricing.ei] + share[pricing.ej]
+        return max(float(np.max(pricing.lat + per_edge / pricing.bw)),
+                   1e-30)
+
     def summary(self) -> Dict[str, float]:
         return dict(lan_floats=self.lan_floats, wan_floats=self.wan_floats,
                     total_floats=self.total_floats,
                     sim_time_s=self.sim_time_s,
                     priced_cost=self.priced_cost(), rounds=self.rounds,
                     rewire_floats=self.rewire_floats,
-                    rewire_events=self.rewire_events)
+                    rewire_events=self.rewire_events,
+                    rewire_time_s=self.rewire_time_s,
+                    async_mode=float(self.async_mode),
+                    clock_skew_s=self.clock_skew_s(),
+                    busy_s_max=float(self.node_busy_s.max()),
+                    idle_s_mean=float(self.node_idle_s.mean()))

@@ -1,0 +1,463 @@
+"""Asynchronous gossip backend: per-edge virtual clocks (CommLedger
+async mode), bounded-staleness AD-PSGD mixing, per-class re-wiring
+handshake latency, and the sync-vs-async acceptance claim — same
+schedule, accuracy within noise, strictly lower simulated wall-clock."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import CommConfig
+from repro.core.algorithms.adpsgd import ADPSGD
+from repro.core.algorithms.base import ModelFns
+from repro.core.algorithms.dpsgd import DPSGD
+from repro.kernels import ops, ref
+from repro.topology import (LINK_PROFILES, CommLedger, fully_connected,
+                            hierarchical, ring, time_varying_d_cliques)
+from repro.topology.graphs import _build
+
+K = 4
+DIM = 8
+
+
+def exclusive_hist(n_nodes: int, n_classes: int) -> np.ndarray:
+    hist = np.zeros((n_nodes, n_classes))
+    for k in range(n_nodes):
+        hist[k, k % n_classes] = 100
+    return hist
+
+
+def make_quadratic_fns():
+    def loss_and_grad(params, mstate, batch):
+        diff = params["w"] - batch["target"]
+        return 0.5 * jnp.sum(diff ** 2), {"w": diff}, mstate
+    return ModelFns(loss_and_grad=loss_and_grad)
+
+
+def quad_setup(n_nodes=K):
+    fns = make_quadratic_fns()
+    params = {"w": jnp.zeros((DIM,))}
+    mstate = {"dummy": jnp.zeros((1,))}
+    targets = np.stack([np.full(DIM, float(k + 1)) for k in range(n_nodes)])
+    return fns, params, mstate, {"target": jnp.asarray(targets)}
+
+
+# ---------------------------------------------------------------------------
+# async ledger invariants
+# ---------------------------------------------------------------------------
+
+def test_async_edge_clocks_monotone_and_sim_time_monotone():
+    """Invariant: every link's virtual clock is non-decreasing, and the
+    global clock (max over activated clocks) never runs backwards."""
+    sched = time_varying_d_cliques(exclusive_hist(9, 3), seed=0)
+    led = CommLedger(sched, LINK_PROFILES["geo-wan"], async_mode=True)
+    last_clocks, last_t = {}, 0.0
+    for t in range(3 * sched.period):
+        led.record_gossip(500.0, t=t, staleness=1)
+        clocks = led.edge_clocks()
+        for e, c in clocks.items():
+            assert c >= last_clocks.get(e, 0.0), (e, c)
+        assert led.sim_time_s >= last_t
+        assert led.sim_time_s == pytest.approx(max(clocks.values()))
+        last_clocks, last_t = clocks, led.sim_time_s
+
+
+def test_sync_edge_clocks_snap_to_global_clock():
+    led = CommLedger(ring(5), LINK_PROFILES["geo-wan"])
+    for t in range(3):
+        led.record_gossip(100.0, t=t)
+        for c in led.edge_clocks().values():
+            assert c == pytest.approx(led.sim_time_s)
+    assert led.clock_skew_s() == pytest.approx(0.0)
+
+
+def test_async_lan_wan_partition_covers_all_priced_floats():
+    """lan + wan == total must survive async mode, with gossip, probes,
+    and re-wiring traffic all booked."""
+    sched = time_varying_d_cliques(exclusive_hist(9, 3), seed=0)
+    led = CommLedger(sched, LINK_PROFILES["geo-wan"],
+                     rewire_floats_per_edge=32.0, async_mode=True)
+    union = led.topology
+    for t in range(2 * sched.period):
+        led.record_gossip(500.0, t=t, staleness=2)
+        led.record_probe([union.edges[t % len(union.edges)]], 100.0)
+    assert led.total_floats == pytest.approx(
+        led.lan_floats + led.wan_floats)
+    assert led.edge_traffic.sum() == pytest.approx(led.total_floats)
+    assert led.rewire_floats > 0
+    assert led.rewire_time_s > 0          # handshakes priced into time
+
+
+def test_async_never_slower_than_sync_same_traffic():
+    """Max-of-per-edge-sums <= sum-of-per-round-maxes: for identical
+    traffic the async clock can never exceed the sync clock, and with
+    staleness amortizing WAN latency it is strictly lower."""
+    topo = hierarchical(6)
+    prof = LINK_PROFILES["geo-wan"]
+    times = {}
+    for name, async_mode, stale in (("sync", False, None),
+                                    ("async-s0", True, 0),
+                                    ("async-s2", True, 2)):
+        led = CommLedger(topo, prof, async_mode=async_mode)
+        for t in range(10):
+            led.record_gossip(1000.0, t=t, staleness=stale)
+        times[name] = led.sim_time_s
+    # staleness 0 degrades to stop-and-wait per edge: on a constant
+    # fabric the WAN edge bottlenecks every round either way
+    assert times["async-s0"] == pytest.approx(times["sync"])
+    assert times["async-s2"] < times["sync"]
+    # the win is the amortized WAN latency: 10 rounds pay it ~1/3 times
+    expect = 10 * (prof.wan_latency / 3.0 + 2000.0 / prof.wan_bandwidth)
+    assert times["async-s2"] == pytest.approx(expect)
+
+
+def test_async_per_node_busy_idle_and_clock_skew():
+    """Sync: LAN-only nodes idle waiting on the WAN straggler.  Async:
+    per-node clocks diverge (positive skew) and idle shrinks."""
+    topo = hierarchical(6)
+    prof = LINK_PROFILES["geo-wan"]
+    led_s = CommLedger(topo, prof)
+    led_a = CommLedger(topo, prof, async_mode=True)
+    for t in range(10):
+        led_s.record_gossip(1000.0, t=t)
+        led_a.record_gossip(1000.0, t=t, staleness=2)
+    for led in (led_s, led_a):
+        assert (led.node_busy_s <= led.sim_time_s + 1e-12).all()
+        assert (led.node_idle_s >= 0).all()
+    # gateways carry the WAN link: they are the busy ones; LAN-only
+    # nodes spend most of the synchronous run waiting
+    gateway_busy = led_s.node_busy_s.max()
+    lan_busy = led_s.node_busy_s.min()
+    assert gateway_busy > 10 * lan_busy
+    assert led_s.node_idle_s.max() == pytest.approx(
+        led_s.sim_time_s - lan_busy)
+    assert led_s.clock_skew_s() == pytest.approx(0.0)
+    assert led_a.clock_skew_s() > 0.0
+
+
+def test_record_probe_books_floats_and_blocks_on_latency():
+    topo = hierarchical(6)
+    prof = LINK_PROFILES["geo-wan"]
+    led = CommLedger(topo, prof, async_mode=True)
+    wan_edge = topo.edges[int(topo.wan_edge_indices()[0])]
+    led.record_probe([wan_edge], 500.0)
+    assert led.total_floats == pytest.approx(500.0)
+    assert led.wan_floats == pytest.approx(500.0)
+    # probes block on the fresh model: full latency, no amortization
+    assert led.sim_time_s == pytest.approx(
+        prof.wan_latency + 500.0 / prof.wan_bandwidth)
+    assert led.traffic_by_edge()[wan_edge] == pytest.approx(500.0)
+    with pytest.raises(AssertionError, match="union"):
+        led.record_probe([(0, 0)], 1.0)
+
+
+def test_async_reactivated_edges_join_at_the_global_frontier():
+    """A rung switch must not hand out a free window: the new fabric's
+    links start from the current global clock, so gossip on them costs
+    at least what a fresh ledger would charge for the same rounds."""
+    prof = LINK_PROFILES["geo-wan"]
+    # connected 6-node fabric sharing no edge with ring(6)
+    disjoint = _build("disjoint", 6,
+                      [(0, 2), (2, 4), (0, 4), (1, 3), (3, 5), (1, 5),
+                       (0, 3)], ["lan"] * 7)
+    led = CommLedger(ring(6), prof, async_mode=True)
+    for t in range(50):
+        led.record_gossip(1000.0, t=t, staleness=1)
+    before = led.sim_time_s
+    led.switch_schedule(disjoint)
+    for t in range(10):
+        led.record_gossip(1000.0, t=t, staleness=1)
+    fresh = CommLedger(disjoint, prof, async_mode=True)
+    for t in range(10):
+        fresh.record_gossip(1000.0, t=t, staleness=1)
+    assert led.sim_time_s - before >= fresh.sim_time_s, \
+        (led.sim_time_s, before, fresh.sim_time_s)
+
+
+def test_probe_neither_pays_nor_resets_rewiring_async():
+    sched = time_varying_d_cliques(exclusive_hist(9, 3), seed=0)
+    led = CommLedger(sched, LINK_PROFILES["uniform"],
+                     rewire_floats_per_edge=100.0, async_mode=True)
+    led.record_gossip(10.0, t=0)
+    led.record_probe([led.topology.edges[0]], 5.0)
+    assert led.rewire_events == 0
+    led.record_gossip(10.0, t=1)
+    new_edges = len(set(sched.at(1).edges) - set(sched.at(0).edges))
+    assert led.rewire_events == new_edges
+
+
+# ---------------------------------------------------------------------------
+# re-wiring handshake latency (satellite: WAN >> LAN setup cost)
+# ---------------------------------------------------------------------------
+
+def ring_plus(n: int, extra, cls: str):
+    """ring(n) plus one extra edge of the given link class (classes are
+    remapped to _build's canonical edge order)."""
+    cls_map = {e: "lan" for e in ring(n).edges}
+    cls_map[(min(extra), max(extra))] = cls
+    edges = sorted(cls_map)
+    return _build(f"ring+{cls}", n, edges, [cls_map[e] for e in edges])
+
+def test_link_profile_handshake_defaults_scale_with_latency():
+    prof = LINK_PROFILES["geo-wan"]
+    assert prof.handshake("wan") == pytest.approx(3 * prof.wan_latency)
+    assert prof.handshake("lan") == pytest.approx(3 * prof.lan_latency)
+    assert prof.handshake("wan") > 100 * prof.handshake("lan")
+    # explicit override wins
+    from repro.topology import LinkProfile
+    p = LinkProfile("x", 1.0, 1.0, 0.1, 0.2, lan_handshake=0.0,
+                    wan_handshake=1.5)
+    assert p.handshake("lan") == 0.0 and p.handshake("wan") == 1.5
+
+
+def test_rewire_charges_handshake_latency_even_with_zero_floats():
+    """The docstring's promise: the handshake is priced at the link's
+    setup latency, not only its control-plane floats.  Switching to a
+    fabric that activates a WAN link costs WAN handshake time even when
+    rewire_floats_per_edge == 0."""
+    prof = LINK_PROFILES["geo-wan"]
+    led = CommLedger(ring(6), prof, rewire_floats_per_edge=0.0)
+    led.record_gossip(100.0, t=0)
+    before = led.sim_time_s
+    # splice in a WAN link the ring never had: its activation must pay
+    # the WAN setup handshake even though no control-plane floats do
+    led.switch_schedule(ring_plus(6, (0, 3), "wan"))
+    led.record_gossip(100.0, t=1)
+    assert led.sim_time_s - before >= prof.handshake("wan")
+    assert led.rewire_time_s >= prof.handshake("wan")
+    assert led.rewire_events == 1
+    assert led.rewire_floats == 0.0       # no control-plane floats asked
+
+
+def test_rewire_wan_handshake_dominates_lan():
+    """Activating one WAN link must cost more setup time than activating
+    one LAN link of the same shape."""
+    prof = LINK_PROFILES["geo-wan"]
+    deltas = {}
+    for cls in ("lan", "wan"):
+        led = CommLedger(ring(6), prof, rewire_floats_per_edge=8.0)
+        led.record_gossip(10.0, t=0)
+        led.switch_schedule(ring_plus(6, (0, 3), cls))
+        led.record_gossip(10.0, t=1)
+        deltas[cls] = led.rewire_time_s
+    assert deltas["wan"] > 10 * deltas["lan"], deltas
+
+
+# ---------------------------------------------------------------------------
+# AD-PSGD: bounded-staleness mixing
+# ---------------------------------------------------------------------------
+
+def test_adpsgd_staleness_zero_is_bit_identical_to_dpsgd():
+    fns, params, mstate, batch = quad_setup()
+    dp = DPSGD(fns, K, topology=ring(K), momentum=0.9)
+    ad = ADPSGD(fns, K, topology=ring(K), momentum=0.9,
+                max_staleness=2, staleness=0)
+    sd, sa = dp.init(params, mstate), ad.init(params, mstate)
+    for t in range(10):
+        sd, _ = dp.step(sd, batch, jnp.float32(0.05), jnp.int32(t))
+        sa, m = ad.step(sa, batch, jnp.float32(0.05), jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(sd["params"]["w"]),
+                               np.asarray(sa["params"]["w"]), atol=1e-6)
+    assert float(m["mean_staleness"]) == 0.0
+
+
+def test_adpsgd_stale_mixing_uses_snapshots_from_s_rounds_ago():
+    """Analytic check: with staleness 1, round t's neighbor term must be
+    the neighbor's *pre-mix* stack from round t-1, not round t."""
+    fns, params, mstate, batch = quad_setup()
+    ad = ADPSGD(fns, K, topology=ring(K), momentum=0.0,
+                max_staleness=1, staleness=1)
+    s = ad.init(params, mstate)
+    idx, w, sw = ad.mix_operands(0)
+    lr = 0.05
+    # hist[-1] is always the previous round's pre-mix stack; the buffer
+    # is initialized with the starting params, so round 0's stale reads
+    # see the initial weights
+    hist = [np.zeros((K, DIM))]
+    for t in range(3):
+        # replicate the local update by hand (momentum 0)
+        cur = np.asarray(s["params"]["w"])
+        tgt = np.asarray(batch["target"])
+        pre = cur - lr * (cur - tgt)
+        src = hist[-1]                    # staleness 1: one round ago
+        expect = np.asarray(sw)[:, None] * pre
+        for k in range(K):
+            for d in range(idx.shape[1]):
+                if float(w[k, d]) > 0:
+                    expect[k] += float(w[k, d]) * src[int(idx[k, d])]
+        hist.append(pre)
+        s, m = ad.step(s, batch, jnp.float32(lr), jnp.int32(t))
+        np.testing.assert_allclose(np.asarray(s["params"]["w"]), expect,
+                                   atol=1e-5)
+    assert float(m["mean_staleness"]) == 1.0
+
+
+def test_adpsgd_bounded_staleness_never_exceeded():
+    fns, params, mstate, batch = quad_setup(9)
+    sched = time_varying_d_cliques(exclusive_hist(9, 3), seed=0)
+    ad = ADPSGD(fns, 9, topology=sched, momentum=0.0, max_staleness=2)
+    s = ad.init(params, mstate)
+    for t in range(2 * sched.period):
+        s, m = ad.step(s, batch, jnp.float32(0.01), jnp.int32(t))
+        assert int(m["max_staleness_used"]) <= ad.max_staleness
+        assert (ad.edge_staleness(t) <= ad.max_staleness).all()
+    assert s["snaps"].shape[0] == ad.max_staleness + 1
+    with pytest.raises(AssertionError, match="bound"):
+        ad.set_staleness(ad.max_staleness + 1)
+    with pytest.raises(AssertionError, match="bound"):
+        ad.set_staleness(-1)
+
+
+def test_adpsgd_kernel_and_dense_stale_mix_agree():
+    fns, params, mstate, batch = quad_setup()
+    kw = dict(topology=ring(K), momentum=0.9, max_staleness=2,
+              staleness=2)
+    ad_k = ADPSGD(fns, K, use_kernel=True, **kw)
+    ad_d = ADPSGD(fns, K, use_kernel=False, **kw)
+    sk, sd = ad_k.init(params, mstate), ad_d.init(params, mstate)
+    for t in range(6):
+        sk, _ = ad_k.step(sk, batch, jnp.float32(0.05), jnp.int32(t))
+        sd, _ = ad_d.step(sd, batch, jnp.float32(0.05), jnp.int32(t))
+    np.testing.assert_allclose(np.asarray(sk["params"]["w"]),
+                               np.asarray(sd["params"]["w"]), atol=1e-5)
+
+
+def test_neighbor_mix_src_variant_matches_oracle():
+    """The Pallas src-gather path (stale mixing) vs the dense oracle."""
+    rng = np.random.default_rng(0)
+    Kn, S, N, D = 5, 2, 1000, 3
+    x = jnp.asarray(rng.normal(size=(Kn, N)), jnp.float32)
+    src = jnp.asarray(rng.normal(size=((S + 1) * Kn, N)), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, (S + 1) * Kn, size=(Kn, D)),
+                      jnp.int32)
+    w = jnp.asarray(rng.random((Kn, D)), jnp.float32)
+    sw = jnp.asarray(rng.random((Kn,)), jnp.float32)
+    out = ops.neighbor_mix(x, idx, w, sw, src=src)
+    expect = ref.neighbor_mix_src_ref(x, src, idx, w, sw)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_adpsgd_compiles_once_across_staleness_and_schedule_switches():
+    """Acceptance: staleness values and neighbor sets are runtime
+    operands — staleness rung moves, schedule rotation, and topology
+    switches (within the pad) all reuse one compilation."""
+    fns, params, mstate, batch = quad_setup(9)
+    sched = time_varying_d_cliques(exclusive_hist(9, 3), seed=0)
+    pad = max(sched.max_degree, fully_connected(9).max_degree)
+    ad = ADPSGD(fns, 9, topology=sched, momentum=0.9, max_staleness=3,
+                pad_degree=pad)
+    s = ad.init(params, mstate)
+    t = 0
+    for stale in (3, 1, 0, 2):
+        ad.set_staleness(stale)
+        for _ in range(sched.period):
+            s, _ = ad.step(s, batch, jnp.float32(0.05), jnp.int32(t))
+            t += 1
+    ad.set_schedule(fully_connected(9))       # rung-style fabric switch
+    for _ in range(3):
+        s, _ = ad.step(s, batch, jnp.float32(0.05), jnp.int32(t))
+        t += 1
+    assert ad.trace_count == 1, \
+        f"stale gossip step retraced {ad.trace_count}x"
+
+
+def test_adpsgd_converges_on_quadratic_with_staleness():
+    """Stale gossip still settles near the global optimum; smaller lr,
+    smaller error (Lian et al. 2018, bounded-staleness assumption)."""
+    fns, params, mstate, batch = quad_setup()
+    errs = {}
+    for lr in (0.05, 0.01):
+        ad = ADPSGD(fns, K, topology=ring(K), momentum=0.0,
+                    max_staleness=2)
+        s = ad.init(params, mstate)
+        for t in range(1500):
+            s, _ = ad.step(s, batch, jnp.float32(lr), jnp.int32(t))
+        errs[lr] = np.abs(np.asarray(s["params"]["w"]) - 2.5).max()
+    assert errs[0.05] < 0.2 and errs[0.01] < 0.05, errs
+    assert errs[0.01] < errs[0.05]
+
+
+# ---------------------------------------------------------------------------
+# acceptance: sync D-PSGD vs async AD-PSGD end-to-end
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_adpsgd_async_matches_dpsgd_accuracy_with_lower_wall_clock():
+    """Acceptance: AD-PSGD under geo-wan (gateway nodes own the slow WAN
+    links) reaches accuracy within noise of sync D-PSGD on the same
+    schedule, while the async ledger reports strictly lower simulated
+    wall-clock per step."""
+    from repro.configs.cnn_zoo import CNN_ZOO
+    from repro.core.trainer import train_decentralized
+    from repro.data.synthetic import synth_images
+    n_nodes, n_classes = 6, 3
+    ds = synth_images(1800, seed=0, noise=0.8, class_sep=0.35,
+                      n_classes=n_classes)
+    val = synth_images(600, seed=99, noise=0.8, class_sep=0.35,
+                       n_classes=n_classes)
+    parts = []
+    for k in range(n_nodes):          # full skew: node k sees one class
+        idx = np.where(ds.y == k % n_classes)[0][k // n_classes::2]
+        parts.append((ds.x[idx], ds.y[idx]))
+    steps = 150
+    kw = dict(steps=steps, batch=10, lr=0.02, eval_every=steps)
+    runs = {}
+    for name, async_gossip in (("dpsgd", False), ("adpsgd", True)):
+        runs[name] = train_decentralized(
+            CNN_ZOO["gn-lenet"], name, parts, (val.x, val.y),
+            comm=CommConfig(strategy=name, topology="geo-wan",
+                            link_profile="geo-wan",
+                            async_gossip=async_gossip, max_staleness=2),
+            **kw)
+    sync, asy = runs["dpsgd"], runs["adpsgd"]
+    assert asy.val_acc > sync.val_acc - 0.06, (asy.val_acc, sync.val_acc)
+    # identical float traffic, strictly lower wall-clock per step
+    assert asy.comm_wan_floats == pytest.approx(sync.comm_wan_floats)
+    assert asy.sim_time_s / steps < sync.sim_time_s / steps, \
+        (asy.sim_time_s, sync.sim_time_s)
+    # async exposes the straggler: fast nodes ran ahead of the gateways
+    assert asy.extras["node_clock_skew_s"] > 0
+    assert asy.extras["staleness_curve"][-1][1] == pytest.approx(2.0)
+
+
+def test_trainer_adpsgd_staleness_rung_switch_end_to_end():
+    """SkewScout staleness mode: under full label skew the controller
+    starts fully asynchronous and tightens toward fresher reads, and the
+    algorithm's staleness follows the rung."""
+    from repro.configs.cnn_zoo import CNN_ZOO
+    from repro.core.trainer import train_decentralized
+    from repro.data.synthetic import synth_images
+    ds = synth_images(360, seed=0, n_classes=3)
+    K6 = 6
+    parts = []
+    for k in range(K6):
+        i = np.where(ds.y == k % 3)[0][k // 3::2]
+        parts.append((ds.x[i], ds.y[i]))
+    comm = CommConfig(strategy="adpsgd", topology="geo-wan",
+                      link_profile="geo-wan", async_gossip=True,
+                      max_staleness=2, skewscout=True, travel_every=3)
+    r = train_decentralized(CNN_ZOO["gn-lenet"], "adpsgd", parts,
+                            (ds.x, ds.y), comm=comm, steps=12, batch=5,
+                            eval_every=12)
+    assert r.extras["staleness_ladder"] == [0, 1, 2]
+    moves = [(h.theta, h.new_theta) for h in r.skewscout_history]
+    assert moves[0][0] == 2               # started fully async
+    assert all(n in (0, 1, 2) for _, n in moves)
+    # the staleness curve tracks the controller's moves
+    curve = dict(r.extras["staleness_curve"])
+    assert curve[0] == 2.0
+    final_theta = moves[-1][1]
+    assert curve[11] == float(final_theta)
+    with pytest.raises(ValueError, match="staleness ladder"):
+        train_decentralized(CNN_ZOO["gn-lenet"], "adpsgd", parts,
+                            (ds.x, ds.y), comm=comm, steps=3, batch=5,
+                            eval_every=3, theta_start_index=99)
+    # a sync ledger prices every staleness rung identically — the
+    # degenerate controller is refused up front
+    import dataclasses
+    with pytest.raises(ValueError, match="async_gossip"):
+        train_decentralized(
+            CNN_ZOO["gn-lenet"], "adpsgd", parts, (ds.x, ds.y),
+            comm=dataclasses.replace(comm, async_gossip=False),
+            steps=3, batch=5, eval_every=3)

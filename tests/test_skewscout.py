@@ -164,3 +164,112 @@ def test_travel_report_fields():
     assert rep.accuracy_loss == 0.0                 # equal home/away acc
     assert rep.comm_ratio == pytest.approx(0.1)
     assert len(scout.history) == 1
+    # no fabric at all: legacy ring route, one probe per node
+    assert rep.probe_edges == ((0, 1), (0, 1))
+    assert rep.probe_floats == pytest.approx(2 * 100)
+
+
+# ---------------------------------------------------------------------------
+# probe routing + probe booking (schedule-aware model traveling)
+# ---------------------------------------------------------------------------
+
+class GossipStub:
+    """An algo that exposes a fabric, like DPSGD, without any training."""
+    def __init__(self, schedule):
+        from repro.topology import as_schedule
+        self.schedule = as_schedule(schedule)
+        self.K = self.schedule.n_nodes
+
+    def node_params(self, state, k):
+        return None, None
+
+
+def tv_sched(n_nodes=9, n_classes=3):
+    from repro.topology import time_varying_d_cliques
+    hist = np.zeros((n_nodes, n_classes))
+    for k in range(n_nodes):
+        hist[k, k % n_classes] = 100
+    return time_varying_d_cliques(hist, seed=0)
+
+
+def make_scout(algo, ledger=None, travel_every=1, warmup=1):
+    comm = CommConfig(skewscout=True, travel_every=travel_every)
+    return SkewScout(comm, "fedavg", model_floats=1000,
+                     eval_acc_fn=lambda p, s, x, y: 0.9, start_index=3,
+                     ledger=ledger, warmup_travels=warmup)
+
+
+def test_probes_follow_the_rounds_active_edges():
+    """Bugfix: probes must travel links that exist in the round's graph
+    (falling back to union neighbors on isolated nodes), never the
+    hardcoded (k+1) % K ring."""
+    sched = tv_sched()
+    algo = GossipStub(sched)
+    scout = make_scout(algo)
+    union_edges = set(sched.union().edges)
+    for step in range(sched.period):
+        scout.record_step(10.0)
+        rep = scout.maybe_travel(step, algo, None, lambda n: (None, None))
+        active = set(sched.at(step).edges)
+        active_nodes = {v for e in sched.at(step).edges for v in e}
+        assert len(rep.probe_edges) == algo.K
+        for e in rep.probe_edges:
+            # active edge when the node has one, union edge otherwise
+            assert e in active or e in union_edges, (step, e)
+        # nodes with an active edge this round probed along it
+        k_on_active = [e for e in rep.probe_edges if e in active]
+        assert len(k_on_active) >= len(active_nodes)
+    # the ring would have produced (k, k+1) edges most of which are not
+    # even on the union fabric
+    ring_edges = {(k, (k + 1) % 9) for k in range(9)}
+    ring_edges = {(min(a, b), max(a, b)) for a, b in ring_edges}
+    assert not ring_edges <= union_edges
+
+
+def test_probe_rotation_covers_neighbors_across_travels():
+    from repro.topology import fully_connected
+    algo = GossipStub(fully_connected(4))
+    scout = make_scout(algo)
+    seen = set()
+    for step in range(3):
+        scout.record_step(1.0)
+        rep = scout.maybe_travel(step, algo, None, lambda n: (None, None))
+        seen.update(rep.probe_edges)
+    assert len(seen) > 3      # successive travels rotate probe targets
+
+
+def test_probe_traffic_is_booked_on_the_ledger():
+    """Bugfix: each probe's model shipment lands on the edge it crossed
+    — total floats, LAN/WAN split, and the per-edge dict all see it, and
+    C(θ) windows price it."""
+    from repro.topology import CommLedger, LINK_PROFILES
+    sched = tv_sched()
+    algo = GossipStub(sched)
+    ledger = CommLedger(sched, LINK_PROFILES["geo-wan"])
+    scout = make_scout(algo, ledger=ledger)
+    scout.record_step(0.0)
+    rep = scout.maybe_travel(0, algo, None, lambda n: (None, None))
+    assert ledger.total_floats == pytest.approx(rep.probe_floats)
+    assert ledger.total_floats == pytest.approx(
+        ledger.lan_floats + ledger.wan_floats)
+    by_edge = ledger.traffic_by_edge()
+    for e in set(rep.probe_edges):
+        assert by_edge[e] >= 1000
+    # the probe's own cost is part of the measured window: with zero
+    # training traffic the window is exactly the probe shipment
+    assert rep.comm_ratio > 0
+
+
+def test_travel_overhead_excludes_warmup_probes():
+    """Bugfix: measure-only warm-up travels are not overhead charged to
+    θ (their traffic is still booked on the ledger)."""
+    algo = GossipStub(tv_sched())
+    scout = make_scout(algo, warmup=2)
+    for step in range(4):
+        scout.record_step(1.0)
+        scout.maybe_travel(step, algo, None, lambda n: (None, None))
+    assert len(scout.history) == 4
+    expected = sum(r.probe_floats for r in scout.history[2:])
+    assert scout.travel_overhead_floats() == pytest.approx(expected)
+    assert scout.travel_overhead_floats() < sum(
+        r.probe_floats for r in scout.history)
