@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src:$(PYTHONPATH)
 
-.PHONY: test test-fast bench-smoke bench-smoke-async lint
+.PHONY: test test-fast bench-smoke bench-smoke-async dryrun-smoke lint
 
 # tier-1 verify: the full test suite
 test:
@@ -19,6 +19,15 @@ bench-smoke:
 # geo-wan fabric; asserts the async ledger strictly beats sync wall-clock
 bench-smoke-async:
 	$(PYTHON) -m benchmarks.fig_topology --smoke-async
+
+# launch-path gossip smoke: lower + compile the pod-gossip train step on
+# a tiny CPU mesh; fails if the cross-pod exchange stops lowering to
+# pod-axis collective-permutes (ring + tv-dcliques fabrics)
+dryrun-smoke:
+	$(PYTHON) -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k \
+	  --reduced --mesh 2,2,2 --strategy dpsgd --topology ring
+	$(PYTHON) -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k \
+	  --reduced --mesh 2,2,2 --strategy adpsgd --topology tv-dcliques
 
 # pyflakes-level check: every module compiles
 lint:

@@ -2,13 +2,16 @@
 production step functions (the same code path the dry-run lowers for the
 512-chip mesh), on CPU with a reduced model.
 
-Two pods x (data, model) mesh on 8 fake host devices; Gaia controls the
-cross-pod exchange.  Trains a ~10M-param qwen3-family model on synthetic
-Markov token streams for a few hundred steps and reports the loss curve
-and cross-pod communication.
+Two pods x (data, model) mesh on 8 fake host devices; the configured
+strategy controls the cross-pod exchange — Gaia's masked psum, or the
+D-PSGD/AD-PSGD gossip ring over a topology fabric (per-round neighbor
+operands, so a rotating schedule reuses one compilation).  Trains a
+~10M-param qwen3-family model on synthetic Markov token streams for a
+few hundred steps and reports the loss curve and cross-pod communication.
 
   PYTHONPATH=src python examples/train_lm_decentralized.py \
-      [--steps 200] [--strategy gaia] [--d-model 256] [--layers 4]
+      [--steps 200] [--strategy gaia|dpsgd|adpsgd] [--topology ring] \
+      [--d-model 256] [--layers 4]
 """
 import os
 
@@ -28,18 +31,25 @@ import numpy as np
 from repro.configs.base import CommConfig
 from repro.configs.registry import get_config
 from repro.data.synthetic import synth_tokens
-from repro.launch.sharding import batch_shardings, param_shardings
-from repro.launch.steps import make_train_state, make_train_step
+from repro.launch.sharding import batch_shardings, train_state_shardings
+from repro.launch.steps import (GOSSIP_STRATEGIES, gossip_operands,
+                                make_train_state, make_train_step)
 from repro.models.model import init_model
 from repro.models.shard_hints import activation_sharding
 from repro.checkpointing import save
+from repro.topology.graphs import build_demo_schedule
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=200)
     ap.add_argument("--strategy", default="gaia",
-                    choices=["bsp", "gaia", "fedavg", "dgc"])
+                    choices=["bsp", "gaia", "fedavg", "dgc",
+                             "dpsgd", "adpsgd"])
+    ap.add_argument("--topology", default="ring",
+                    help="gossip fabric across the two pods")
+    ap.add_argument("--staleness", type=int, default=1,
+                    help="adpsgd staleness rung (<= max_staleness=2)")
     ap.add_argument("--d-model", type=int, default=256)
     ap.add_argument("--layers", type=int, default=4)
     ap.add_argument("--seq", type=int, default=128)
@@ -60,8 +70,8 @@ def main():
           f"strategy={args.strategy}")
 
     mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
-    comm = CommConfig(strategy=args.strategy, gaia_t0=0.05, iter_local=10,
-                      dgc_sparsity=0.95)
+    comm = CommConfig(strategy=args.strategy, topology=args.topology,
+                      gaia_t0=0.05, iter_local=10, dgc_sparsity=0.95)
     params = init_model(jax.random.PRNGKey(0), cfg)
     state = make_train_state(params, comm, 2)
 
@@ -75,17 +85,36 @@ def main():
         return {"tokens": jnp.asarray(seqs[..., :-1]),
                 "labels": jnp.asarray(seqs[..., 1:])}
 
+    gossip = args.strategy in GOSSIP_STRATEGIES
+    # label-aware fabrics get the synthetic full-skew histogram (the
+    # Markov stream has no labels to derive one from)
+    sched = build_demo_schedule(args.topology, 2) if gossip else None
     with mesh, activation_sharding(mesh):
-        s_shard = {k: param_shardings(v, mesh, stacked=True)
-                   for k, v in state.items()}
+        s_shard = train_state_shardings(jax.eval_shape(lambda: state), mesh)
         b_shard = batch_shardings(jax.eval_shape(next_batch), mesh,
                                   pod_stacked=True)
+        in_sh = (s_shard, b_shard, None) + ((None,) if gossip else ())
         step_fn = jax.jit(
-            make_train_step(cfg, comm, lr=args.lr, remat=False, chunk=64),
-            in_shardings=(s_shard, b_shard, None), donate_argnums=(0,))
+            make_train_step(cfg, comm, mesh=mesh, lr=args.lr, remat=False,
+                            chunk=64),
+            in_shardings=in_sh,
+            # pin the state outputs to the canonical shardings so step t's
+            # output is bit-compatible with step t+1's in_shardings (GSPMD
+            # may otherwise pick a different layout for e.g. vel)
+            out_shardings=(s_shard, None), donate_argnums=(0,))
         t0 = time.time()
         for t in range(args.steps):
-            state, metrics = step_fn(state, next_batch(), jnp.int32(t))
+            extra = ()
+            if gossip:
+                # per-round runtime operands: a rotating schedule (and a
+                # staleness move) reuses the one compilation
+                extra = (gossip_operands(
+                    sched, t,
+                    staleness=args.staleness
+                    if args.strategy == "adpsgd" else None,
+                    max_staleness=comm.max_staleness),)
+            state, metrics = step_fn(state, next_batch(), jnp.int32(t),
+                                     *extra)
             if t % 20 == 0 or t == args.steps - 1:
                 print(f"step {t:4d}  loss={float(metrics['loss']):.4f}  "
                       f"({(time.time()-t0):.1f}s)", flush=True)

@@ -1,0 +1,21 @@
+"""Version shims for jax API churn, shared by every shard_map consumer.
+
+Newer jax promotes shard_map to ``jax.shard_map`` and (separately)
+renames the replication-check kwarg ``check_rep`` -> ``check_vma``;
+probe each change independently since they landed in different releases.
+"""
+from __future__ import annotations
+
+import inspect
+
+import jax
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:
+    from jax.experimental.shard_map import shard_map
+
+#: name of shard_map's replication-check kwarg on this jax version
+SHARD_MAP_CHECK_KW = ("check_vma" if "check_vma"
+                      in inspect.signature(shard_map).parameters
+                      else "check_rep")

@@ -241,7 +241,13 @@ INPUT_SHAPES = {
 
 @dataclass(frozen=True)
 class CommConfig:
-    """The paper's technique as a first-class trainer feature."""
+    """The paper's technique as a first-class trainer feature.
+
+    Every strategy exists on *both* backends — the CPU-scale simulation
+    (``core.trainer``/``core.algorithms``) and the pod-scale SPMD launch
+    path (``launch.steps``, where dpsgd/adpsgd gossip rides a
+    shard_map + ppermute ring over the mesh ``pod`` axis) — and the two
+    are held equivalent by ``tests/test_launch_gossip.py``."""
     strategy: str = "bsp"             # bsp | gaia | fedavg | dgc | dpsgd |
     #                                   adpsgd
     # communication fabric (repro.topology): who talks to whom, when, and

@@ -30,6 +30,11 @@ neighbor terms from ``src`` instead of ``x`` (the self term stays on
 by ``staleness * K`` — the staleness values ride inside the same runtime
 index operand, so a controller moving the staleness rung mid-run reuses
 the one compilation too.
+
+The pod-scale distributed backend applies the same self-weight +
+padded-neighbor-gather arithmetic (both variants) as a shard_map +
+ppermute ring over the mesh ``pod`` axis (``launch/steps._pod_mix_fn``);
+tests/test_launch_gossip.py holds the two implementations equivalent.
 """
 from __future__ import annotations
 

@@ -16,24 +16,30 @@ import argparse
 import json
 import sys
 import traceback
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import CommConfig, INPUT_SHAPES
 from repro.configs.registry import ARCH_IDS, get_config
-from repro.launch import analysis
-from repro.launch.mesh import make_production_mesh, n_pods as mesh_n_pods
+from repro.launch import analysis, hlo_analysis
+from repro.launch.mesh import (devices_per_pod, make_production_mesh,
+                               n_pods as mesh_n_pods)
 from repro.launch.sharding import (batch_shardings, cache_shardings,
-                                   param_shardings, replicated)
+                                   param_shardings, replicated,
+                                   train_state_shardings)
 from repro.launch.specs import input_specs
-from repro.launch.steps import (make_prefill_step, make_serve_step,
+from repro.launch.steps import (GOSSIP_STRATEGIES, gossip_operands,
+                                make_prefill_step, make_serve_step,
                                 make_train_step, train_state_shape)
 from repro.models.model import init_cache, init_model
 from repro.models.shard_hints import activation_sharding
+from repro.topology.graphs import build_demo_schedule
 
 SDS = jax.ShapeDtypeStruct
+
+STRATEGIES = ("bsp", "gaia", "fedavg", "dgc") + GOSSIP_STRATEGIES
 
 
 def _with_shardings(shapes, shardings):
@@ -42,35 +48,62 @@ def _with_shardings(shapes, shardings):
         shapes, shardings)
 
 
+def _parse_mesh(spec: Optional[str]):
+    if not spec:
+        return None
+    dims = tuple(int(d) for d in spec.split(","))
+    if len(dims) not in (2, 3):
+        raise ValueError(
+            f"--mesh {spec!r}: expected 'pod,data,model' (3 dims) or "
+            "'data,model' (2 dims)")
+    axes = {3: ("pod", "data", "model"), 2: ("data", "model")}[len(dims)]
+    return jax.make_mesh(dims, axes)
+
+
 def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
-               strategy: str = "gaia", chunk: int = 512,
-               remat: bool = True, verbose: bool = True,
+               strategy: str = "gaia", topology: str = "ring",
+               staleness: Optional[int] = None, max_staleness: int = 2,
+               chunk: int = 512, remat: bool = True, verbose: bool = True,
+               reduced: bool = False, mesh=None,
                return_hlo: bool = False) -> Dict:
     cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
     shape = INPUT_SHAPES[shape_name]
-    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh = mesh or make_production_mesh(multi_pod=multi_pod)
     pods = mesh_n_pods(mesh)
     mesh_name = "x".join(str(s) for s in mesh.devices.shape)
-    comm = CommConfig(strategy=strategy)
+    comm = CommConfig(strategy=strategy, topology=topology,
+                      max_staleness=max_staleness)
     long_mode = shape_name == "long_500k"
 
     with mesh, activation_sharding(mesh):
         if shape.mode == "train":
             state_shape = train_state_shape(cfg, comm, pods)
-            state_shardings = {
-                k: param_shardings(v, mesh, stacked=True)
-                for k, v in state_shape.items()}
+            state_shardings = train_state_shardings(state_shape, mesh)
             batch_shapes = input_specs(cfg, shape_name, n_pods=pods)
             b_shardings = batch_shardings(batch_shapes, mesh,
                                           pod_stacked=True)
-            step = make_train_step(cfg, comm, remat=remat, chunk=chunk)
-            jitted = jax.jit(
-                step,
-                in_shardings=(state_shardings, b_shardings, None),
-                donate_argnums=(0,))
+            step = make_train_step(cfg, comm, mesh=mesh, remat=remat,
+                                   chunk=chunk)
             args = (_with_shardings(state_shape, state_shardings),
                     _with_shardings(batch_shapes, b_shardings),
                     SDS((), jnp.int32))
+            in_sh: Tuple = (state_shardings, b_shardings, None)
+            if strategy in GOSSIP_STRATEGIES:
+                # round-0 operands of the real fabric (label-aware
+                # builders get the synthetic full-skew histogram): the
+                # values are runtime operands, so one compile serves the
+                # whole schedule
+                sched = build_demo_schedule(topology, pods)
+                args += (gossip_operands(
+                    sched, 0,
+                    staleness=(max_staleness if staleness is None
+                               else staleness)
+                    if strategy == "adpsgd" else None,
+                    max_staleness=max_staleness),)
+                in_sh += (None,)
+            jitted = jax.jit(step, in_shardings=in_sh, donate_argnums=(0,))
         elif shape.mode == "prefill":
             p_shape = jax.eval_shape(
                 lambda: init_model(jax.random.PRNGKey(0), cfg))
@@ -106,6 +139,8 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
         compiled = lowered.compile()
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):   # older jaxlib: one per device
+            cost = cost[0] if cost else {}
         hlo = compiled.as_text()
 
     n_chips = mesh.devices.size
@@ -125,11 +160,57 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     roof = analysis.derive_roofline(
         arch, shape_name, mesh_name, n_chips, cost or {}, hlo, mf,
         bytes_per_device=per_dev_bytes)
+    pod_exchange = None
+    if shape.mode == "train" and pods > 1:
+        # where the cross-pod traffic flows: gossip must be pure pod-axis
+        # collective-permutes; bsp/gaia/dgc show up as cross-pod reduces
+        pex = hlo_analysis.pod_exchange_report(hlo, devices_per_pod(mesh))
+        pod_exchange = {
+            "permute_cross_gbytes_per_dev": pex.permute_cross_bytes / 1e9,
+            "permute_local_gbytes_per_dev": pex.permute_local_bytes / 1e9,
+            "reduce_cross_gbytes_per_dev": pex.reduce_cross_bytes / 1e9,
+            "reduce_local_gbytes_per_dev": pex.reduce_local_bytes / 1e9,
+            "cross_pod_gbytes_per_dev": pex.cross_pod_bytes / 1e9,
+            "pod_axis_only": pex.pod_axis_only,
+            "unparsed_collectives": pex.unparsed,
+        }
+        if strategy in GOSSIP_STRATEGIES:
+            pod_exchange["topology"] = topology
+            if not pex.pod_axis_only:
+                raise RuntimeError(
+                    f"{strategy} exchange leaked off the pod axis: a "
+                    "cross-pod collective-permute pair does not preserve "
+                    "the intra-pod device coordinate")
+            if pex.permute_cross_bytes <= 0:
+                raise RuntimeError(
+                    f"{strategy} lowered with no cross-pod "
+                    "collective-permute: the gossip exchange vanished")
+            # GSPMD reshard noise (e.g. replicated-table all-gathers —
+            # the CI smoke carries ~0.6x permute bytes of it from the
+            # reduced config's rope-table gather) may legitimately cross
+            # pods, but the moment cross-pod reductions *rival* the
+            # permute exchange, part of the gossip has fallen back to
+            # reduction collectives; if this ever reds on a config tweak
+            # rather than a real leak, compare reduce_cross against the
+            # bsp baseline before loosening
+            if pex.reduce_cross_bytes >= pex.permute_cross_bytes:
+                raise RuntimeError(
+                    f"{strategy}: cross-pod reduction bytes "
+                    f"({pex.reduce_cross_bytes:.0f}) rival the permute "
+                    f"exchange ({pex.permute_cross_bytes:.0f}) — the "
+                    "gossip is leaking into reduction collectives")
+            if pex.unparsed:
+                raise RuntimeError(
+                    f"{strategy}: {pex.unparsed} collective(s) the pod "
+                    "report cannot classify (send/recv, broadcast, or "
+                    "unparseable groups) — cross-pod byte totals would "
+                    "silently understate the exchange")
     report = {
         "arch": arch, "shape": shape_name, "mesh": mesh_name,
         "mode": shape.mode, "strategy": strategy if shape.mode == "train"
         else None,
         "ok": True,
+        "pod_exchange": pod_exchange,
         "memory": mem_summary,
         "cost": {k: float(v) for k, v in (cost or {}).items()
                  if isinstance(v, (int, float))},
@@ -156,6 +237,12 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
               f"useful={roof.useful_ratio:.2f}")
         if mem_summary:
             print(f"         memory: {json.dumps(mem_summary)}")
+        if pod_exchange is not None:
+            print(f"         cross-pod exchange: "
+                  f"{pod_exchange['cross_pod_gbytes_per_dev']:.4f} GB/dev "
+                  f"(permute {pod_exchange['permute_cross_gbytes_per_dev']:.4f}"
+                  f" / reduce {pod_exchange['reduce_cross_gbytes_per_dev']:.4f}"
+                  f", pod_axis_only={pod_exchange['pod_axis_only']})")
     return report
 
 
@@ -166,8 +253,21 @@ def main(argv=None) -> int:
                     choices=list(INPUT_SHAPES) + [None])
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--multi-pod", action="store_true")
-    ap.add_argument("--strategy", default="gaia",
-                    choices=["bsp", "gaia", "fedavg", "dgc"])
+    ap.add_argument("--strategy", default="gaia", choices=list(STRATEGIES))
+    ap.add_argument("--topology", default="ring",
+                    help="gossip fabric over the pod set (dpsgd/adpsgd): "
+                         "ring | torus | full | random | geo-wan | "
+                         "dcliques | tv-dcliques | random-matching")
+    ap.add_argument("--staleness", type=int, default=None,
+                    help="adpsgd staleness rung (default: max-staleness)")
+    ap.add_argument("--max-staleness", type=int, default=2,
+                    help="adpsgd snapshot-buffer depth")
+    ap.add_argument("--mesh", default=None,
+                    help="override mesh shape, e.g. 2,2,2 (pod,data,model)"
+                         " — CI smoke / debugging knob")
+    ap.add_argument("--reduced", action="store_true",
+                    help="lower the reduced() smoke config instead of the"
+                         " full-size arch (CI smoke)")
     ap.add_argument("--chunk", type=int, default=512)
     ap.add_argument("--no-remat", action="store_true")
     ap.add_argument("--out", default=None)
@@ -176,6 +276,10 @@ def main(argv=None) -> int:
     ap.add_argument("--save-hlo", action="store_true",
                     help="gzip the partitioned HLO next to each JSON")
     args = ap.parse_args(argv)
+    try:
+        mesh_override = _parse_mesh(args.mesh)
+    except ValueError as e:
+        ap.error(str(e))
 
     combos = []
     if args.all:
@@ -186,9 +290,22 @@ def main(argv=None) -> int:
         assert args.arch and args.shape, "--arch/--shape or --all"
         combos = [(args.arch, args.shape)]
 
+    # the cache tag must carry every report-changing knob, or a cached
+    # JSON from a different configuration is silently returned as this
+    # run's result (and the gossip pod-axis verification never runs)
+    cfg_tag = "__".join(
+        [args.strategy, "multi" if args.multi_pod else "single"]
+        + ([f"mesh{args.mesh.replace(',', 'x')}"] if args.mesh else [])
+        + (["reduced"] if args.reduced else [])
+        + ([f"chunk{args.chunk}"] if args.chunk != 512 else [])
+        + (["noremat"] if args.no_remat else [])
+        + ([f"{args.topology}",
+            f"s{args.staleness}of{args.max_staleness}"]
+           if args.strategy in GOSSIP_STRATEGIES else []))
+
     reports, failures = [], []
     for a, s in combos:
-        tag = f"{a}__{s}__{'multi' if args.multi_pod else 'single'}"
+        tag = f"{a}__{s}__{cfg_tag}"
         path = os.path.join(args.outdir, tag + ".json") if args.outdir else None
         if path and os.path.exists(path):
             with open(path) as f:
@@ -199,6 +316,9 @@ def main(argv=None) -> int:
         try:
             rep = dryrun_one(
                 a, s, multi_pod=args.multi_pod, strategy=args.strategy,
+                topology=args.topology, staleness=args.staleness,
+                max_staleness=args.max_staleness,
+                reduced=args.reduced, mesh=mesh_override,
                 chunk=args.chunk, remat=not args.no_remat,
                 return_hlo=args.save_hlo)
             if args.save_hlo and "_hlo" in rep:

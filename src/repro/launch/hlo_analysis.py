@@ -23,6 +23,8 @@ import re
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
+import numpy as np
+
 _DTYPE_BYTES = {
     "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
     "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
@@ -162,6 +164,13 @@ _FREE_OPS = {"parameter", "constant", "tuple", "get-tuple-element",
              "partition-id", "replica-id", "domain", "opt-barrier",
              "get-dimension-size", "iota"}
 
+
+_PAIR_RE = re.compile(r"source_target_pairs=\{((?:\{\d+,\d+\},?)+)\}")
+_PAIR_ITEM_RE = re.compile(r"\{(\d+),(\d+)\}")
+_GROUPS_RE = re.compile(r"replica_groups=\{((?:\{[\d,]*\},?)*)\}")
+_GROUP_ITEM_RE = re.compile(r"\{([\d,]*)\}")
+_GROUPS_IOTA_RE = re.compile(
+    r"replica_groups=\[(\d+),(\d+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?")
 
 _OPNAME_RE = re.compile(r'op_name="([^"]*)"')
 
@@ -334,6 +343,122 @@ def _scatter_inplace_bytes(ins: Instr, comps: Dict[str, Computation],
             continue
         total += bb
     return 2.0 * total if buffer_skipped else None
+
+
+def _parse_pairs(rest: str) -> Optional[List[Tuple[int, int]]]:
+    """collective-permute source_target_pairs, or None when absent."""
+    m = _PAIR_RE.search(rest)
+    if not m:
+        return None
+    return [(int(a), int(b)) for a, b in _PAIR_ITEM_RE.findall(m.group(1))]
+
+
+def _parse_replica_groups(rest: str) -> Optional[List[List[int]]]:
+    """Device groups of a reduction collective.  Handles the literal
+    ``{{0,1},{2,3}}`` form and the iota v2 form ``[g,s]<=[dims]T(perm)``
+    (arange over prod(dims), reshaped to dims, transposed by perm,
+    flattened, then split into g groups of s).  ``{{}}``/missing groups
+    mean all devices; returns None only when the attribute is present
+    but unparseable."""
+    m = _GROUPS_RE.search(rest)
+    if m:
+        groups = [[int(x) for x in g.split(",") if x]
+                  for g in _GROUP_ITEM_RE.findall(m.group(1))]
+        return [g for g in groups if g]
+    m = _GROUPS_IOTA_RE.search(rest)
+    if m:
+        g, s = int(m.group(1)), int(m.group(2))
+        dims = [int(d) for d in m.group(3).split(",") if d]
+        ids = np.arange(int(np.prod(dims))).reshape(dims)
+        if m.group(4):
+            perm = [int(p) for p in m.group(4).split(",") if p]
+            ids = ids.transpose(perm)
+        return ids.reshape(g, s).tolist()
+    if "replica_groups=" in rest:
+        return None
+    return []           # no groups attribute: all devices
+
+
+#: reduction-style collectives whose replica_groups decide pod crossing
+_REDUCE_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter",
+                       "all-to-all")
+
+
+@dataclass
+class PodExchange:
+    """Where a multi-pod program's collective traffic actually flows.
+
+    The gossip/exchange contract for the pod-stacked train step: the
+    model exchange must be collective-permutes whose cross-pod pairs move
+    along the ``pod`` axis *only* (source and target share their
+    intra-pod coordinate), and cross-pod reduction traffic must stay
+    small relative to the permute exchange (GSPMD reshard noise aside,
+    gossip that leaks into reduction collectives is a regression — the
+    dryrun gossip gate enforces the ratio).  Bytes are per-device,
+    trip-multiplied, using the same conventions as :func:`analyze`.
+    """
+    devices_per_pod: int
+    permute_cross_bytes: float = 0.0     # collective-permute across pods
+    permute_local_bytes: float = 0.0     # collective-permute inside a pod
+    reduce_cross_bytes: float = 0.0      # reductions whose groups span pods
+    reduce_local_bytes: float = 0.0      # reductions inside a single pod
+    pod_axis_only: bool = True           # every cross-pod permute pair
+    #                                      preserves the intra-pod coord
+    unparsed: int = 0                    # collectives we could not classify
+
+    @property
+    def cross_pod_bytes(self) -> float:
+        return self.permute_cross_bytes + self.reduce_cross_bytes
+
+
+def pod_exchange_report(text: str, devices_per_pod: int) -> PodExchange:
+    """Classify every collective in the partitioned HLO by whether it
+    crosses the pod boundary (device ids are pod-major: pod p owns ids
+    ``[p*devices_per_pod, (p+1)*devices_per_pod)``)."""
+    comps = parse_module(text)
+    mult = _multiplicities(comps)
+    rep = PodExchange(devices_per_pod=devices_per_pod)
+    dpp = devices_per_pod
+    for comp in comps.values():
+        m = mult.get(comp.name, 0.0)
+        if m == 0.0:
+            continue
+        for ins in comp.instrs:
+            if ins.op.endswith("-done"):
+                continue                 # bytes counted at the -start
+            base = ins.op[:-6] if ins.op.endswith("-start") else ins.op
+            b = m * _shape_bytes(ins.type_str)
+            if base == "collective-permute":
+                pairs = _parse_pairs(ins.rest)
+                if pairs is None:
+                    rep.unparsed += 1
+                    continue
+                cross = [(a, t) for a, t in pairs if a // dpp != t // dpp]
+                if cross:
+                    rep.permute_cross_bytes += b
+                    if any(a % dpp != t % dpp for a, t in cross):
+                        rep.pod_axis_only = False
+                else:
+                    rep.permute_local_bytes += b
+            elif base in _REDUCE_COLLECTIVES:
+                groups = _parse_replica_groups(ins.rest)
+                if groups is None:
+                    rep.unparsed += 1
+                    rep.reduce_cross_bytes += b   # conservative
+                    continue
+                if not groups:                    # all devices
+                    rep.reduce_cross_bytes += b
+                elif any(len({g // dpp for g in grp}) > 1
+                         for grp in groups):
+                    rep.reduce_cross_bytes += b
+                else:
+                    rep.reduce_local_bytes += b
+            elif base in ("collective-broadcast", "send", "recv",
+                          "ragged-all-to-all"):
+                # a collective kind this report can't classify: surface
+                # it instead of silently under-stating cross-pod traffic
+                rep.unparsed += 1
+    return rep
 
 
 def analyze(text: str) -> HLOCost:

@@ -3,8 +3,8 @@
 Single pod: (data=16, model=16) — 256 chips (TPU v5e pod slice).
 Multi-pod:  (pod=2, data=16, model=16) — 512 chips.  The ``pod`` axis is
 the decentralized-learning *site* axis: the paper's algorithms (Gaia /
-FedAvg / DGC) control traffic across it, standard data+tensor parallelism
-runs inside each pod.
+FedAvg / DGC, and the D-PSGD/AD-PSGD gossip ring) control traffic across
+it, standard data+tensor parallelism runs inside each pod.
 
 A FUNCTION (not module-level constant) so importing never touches jax
 device state.
@@ -26,6 +26,13 @@ def mesh_axes(mesh) -> tuple:
 
 def n_pods(mesh) -> int:
     return mesh.shape["pod"] if "pod" in mesh.axis_names else 1
+
+
+def devices_per_pod(mesh) -> int:
+    """Chips inside one pod — the device-id stride of the ``pod`` axis
+    (mesh axes are ordered pod-major), which is what the HLO pod-traffic
+    check keys on."""
+    return mesh.devices.size // n_pods(mesh)
 
 
 def batch_axes(mesh) -> tuple:

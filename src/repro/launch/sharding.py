@@ -90,10 +90,14 @@ def _clamp_spec(spec: P, shape, mesh: Mesh) -> P:
 
 
 def param_shardings(params_shape: Params, mesh: Mesh, *,
-                    stacked: bool = False) -> Params:
+                    stacked: bool = False,
+                    snap_stacked: bool = False) -> Params:
     """NamedSharding pytree for a params(-shaped) tree.  ``stacked``: the
     tree has a prepended replica dimension (pod-site stacking in training
-    state) — sharded over ``pod`` when the mesh has that axis."""
+    state) — sharded over ``pod`` when the mesh has that axis.
+    ``snap_stacked``: the tree additionally carries a staleness-slot
+    dimension *before* the pod axis (adpsgd's bounded-staleness snapshot
+    buffer, leaves (max_staleness+1, n_pods, ...)) — never sharded."""
     stack_axis = "pod" if (stacked and "pod" in mesh.axis_names) else None
     flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
     out = []
@@ -104,6 +108,9 @@ def param_shardings(params_shape: Params, mesh: Mesh, *,
         # scan-stacked layer cycles carry a leading cycle axis
         cycle_stacked = "body" in segs or "layers" in segs
         lead: Tuple = ()
+        if snap_stacked:
+            lead += (None,)
+            shape = shape[1:]
         if stacked:
             lead += (stack_axis,)
             shape = shape[1:]
@@ -115,6 +122,15 @@ def param_shardings(params_shape: Params, mesh: Mesh, *,
         spec = _clamp_spec(spec, leaf.shape, mesh)
         out.append(NamedSharding(mesh, spec))
     return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def train_state_shardings(state_shape: Params, mesh: Mesh) -> Params:
+    """NamedShardings for the full launch train state (one call site for
+    every backend consumer): every entry is pod-stacked; adpsgd's
+    ``snaps`` carries an extra unsharded snapshot-slot axis in front."""
+    return {k: param_shardings(v, mesh, stacked=True,
+                               snap_stacked=(k == "snaps"))
+            for k, v in state_shape.items()}
 
 
 def cache_shardings(cache_shape: Params, mesh: Mesh, *,

@@ -16,7 +16,6 @@ Enabled with REPRO_MOE_EP=1 under an active mesh with data+model axes
 """
 from __future__ import annotations
 
-import inspect
 import math
 from typing import Any, Dict, Tuple
 
@@ -24,17 +23,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import SHARD_MAP_CHECK_KW as _CHECK_KW
+from repro.compat import shard_map as _shard_map
 from repro.configs.base import MoEConfig
-
-# newer jax promotes shard_map to jax.shard_map and (separately) renames
-# the replication-check kwarg check_rep -> check_vma; probe each change
-# independently since they landed in different releases
-if hasattr(jax, "shard_map"):
-    _shard_map = jax.shard_map
-else:
-    from jax.experimental.shard_map import shard_map as _shard_map
-_CHECK_KW = ("check_vma" if "check_vma"
-             in inspect.signature(_shard_map).parameters else "check_rep")
 
 Params = Dict[str, Any]
 

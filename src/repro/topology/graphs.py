@@ -623,6 +623,30 @@ LABEL_AWARE_TOPOLOGIES = ("dcliques", "d-cliques", "tv-dcliques",
                           "time-varying-dcliques")
 
 
+def full_skew_label_hist(n_nodes: int,
+                         n_classes: Optional[int] = None) -> np.ndarray:
+    """Synthetic (K, C) per-node label histogram for the paper's
+    *full-skew* setting — each node holds one label exclusively.  What
+    compile-only dry-runs and demo drivers feed the label-aware builders
+    when no real partition exists to derive histograms from."""
+    if n_classes is None:
+        n_classes = max(2, n_nodes)
+    hist = np.zeros((n_nodes, n_classes))
+    hist[np.arange(n_nodes), np.arange(n_nodes) % n_classes] = 100
+    return hist
+
+
+def build_demo_schedule(name: str, n_nodes: int,
+                        seed: int = 0) -> "TopologySchedule":
+    """:func:`build_schedule` with the full-skew synthetic histogram
+    supplied automatically for label-aware fabrics — the one import-safe
+    home for compile-only dry-runs and demo drivers that have no real
+    partition to derive histograms from."""
+    label_hist = (full_skew_label_hist(n_nodes)
+                  if name in LABEL_AWARE_TOPOLOGIES else None)
+    return build_schedule(name, n_nodes, label_hist=label_hist, seed=seed)
+
+
 def build_schedule(name: str, n_nodes: int, *,
                    label_hist: Optional[np.ndarray] = None,
                    seed: int = 0, **kw) -> TopologySchedule:

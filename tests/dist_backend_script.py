@@ -3,9 +3,11 @@ xla_force_host_platform_device_count doesn't leak into other tests.
 
 Runs the SPMD train step on a (2,2,2) pod/data/model mesh with a REAL
 reduced model and real arrays, and checks:
- 1. every strategy (bsp/gaia/fedavg/dgc) executes with finite loss,
+ 1. every strategy (bsp/gaia/fedavg/dgc/dpsgd/adpsgd) executes with
+    finite loss,
  2. the distributed Gaia update == the simulation-backend Gaia update
-    (same arithmetic, two backends),
+    (same arithmetic, two backends; the full per-strategy equivalence
+    matrix lives in launch_gossip_script.py),
  3. serve_step executes on the mesh.
 """
 import os
@@ -22,10 +24,12 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 from repro.configs.base import CommConfig
 from repro.configs.registry import get_config
 from repro.launch.sharding import (batch_shardings, cache_shardings,
-                                   param_shardings)
-from repro.launch.steps import make_serve_step, make_train_step, make_train_state
+                                   param_shardings, train_state_shardings)
+from repro.launch.steps import (gossip_operands, make_serve_step,
+                                make_train_step, make_train_state)
 from repro.models.model import init_cache, init_model
 from repro.models.shard_hints import activation_sharding
+from repro.topology.graphs import ring
 
 
 def main():
@@ -41,17 +45,31 @@ def main():
 
     losses = {}
     states = {}
-    for strategy in ("bsp", "gaia", "fedavg", "dgc"):
+    fabric = ring(2)
+    for strategy in ("bsp", "gaia", "fedavg", "dgc", "dpsgd", "adpsgd"):
         comm = CommConfig(strategy=strategy, gaia_t0=0.01,
-                          iter_local=1, dgc_sparsity=0.75)
+                          iter_local=1, dgc_sparsity=0.75, max_staleness=1)
         state = make_train_state(params, comm, 2)
         with mesh, activation_sharding(mesh):
-            s_shard = {k: param_shardings(v, mesh, stacked=True)
-                       for k, v in state.items()}
+            s_shard = train_state_shardings(
+                jax.eval_shape(lambda: state), mesh)
             b_shard = batch_shardings(batch, mesh, pod_stacked=True)
-            step = make_train_step(cfg, comm, lr=1e-2, remat=False, chunk=16)
-            jitted = jax.jit(step, in_shardings=(s_shard, b_shard, None))
-            new_state, metrics = jitted(state, batch, jnp.int32(0))
+            step = make_train_step(cfg, comm, mesh=mesh, lr=1e-2,
+                                   remat=False, chunk=16)
+            if strategy in ("dpsgd", "adpsgd"):
+                mix = gossip_operands(
+                    fabric, 0,
+                    staleness=1 if strategy == "adpsgd" else None,
+                    max_staleness=comm.max_staleness)
+                jitted = jax.jit(step,
+                                 in_shardings=(s_shard, b_shard, None,
+                                               None))
+                new_state, metrics = jitted(state, batch, jnp.int32(0),
+                                            mix)
+            else:
+                jitted = jax.jit(step,
+                                 in_shardings=(s_shard, b_shard, None))
+                new_state, metrics = jitted(state, batch, jnp.int32(0))
             loss = float(metrics["loss"])
         assert np.isfinite(loss), (strategy, loss)
         losses[strategy] = loss

@@ -1,0 +1,45 @@
+"""Launch-vs-core equivalence for every communication strategy, plus the
+pod-gossip contracts (compile-once, bit-exact staleness 0, pod-axis-only
+exchange).  The heavy lifting runs once in a subprocess (it needs its own
+XLA device count); the parametrized tests assert its per-strategy
+markers, so a failure names the strategy that drifted."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+STRATEGIES = ("bsp", "gaia", "fedavg", "dgc", "dpsgd", "adpsgd")
+
+
+@pytest.fixture(scope="module")
+def gossip_output():
+    script = os.path.join(os.path.dirname(__file__),
+                          "launch_gossip_script.py")
+    out = subprocess.run([sys.executable, script], capture_output=True,
+                         text=True, timeout=900)
+    assert "ALL_LAUNCH_GOSSIP_OK" in out.stdout, \
+        out.stdout + "\n" + out.stderr
+    return out.stdout
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("strategy", STRATEGIES)
+def test_launch_matches_core(gossip_output, strategy):
+    assert f"EQ_OK {strategy}" in gossip_output
+
+
+@pytest.mark.slow
+def test_adpsgd_staleness0_bitwise_dpsgd(gossip_output):
+    assert "BITWISE_OK adpsgd0==dpsgd" in gossip_output
+
+
+@pytest.mark.slow
+def test_pod_gossip_compiles_once(gossip_output):
+    assert "COMPILE_ONCE_OK dpsgd rotation" in gossip_output
+    assert "COMPILE_ONCE_OK adpsgd staleness move" in gossip_output
+
+
+@pytest.mark.slow
+def test_exchange_is_pod_axis_only(gossip_output):
+    assert "PODAXIS_OK" in gossip_output
