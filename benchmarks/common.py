@@ -8,9 +8,7 @@ from __future__ import annotations
 import json
 import os
 import time
-from typing import Dict, List, Tuple
-
-import numpy as np
+from typing import Dict, List
 
 from repro.core.partition import partition_label_skew
 from repro.data.synthetic import synth_images
@@ -50,6 +48,41 @@ def save_rows(name: str, rows: List[Dict]) -> str:
     path = os.path.join(RESULTS_DIR, f"{name}.json")
     with open(path, "w") as f:
         json.dump(rows, f, indent=1)
+    return path
+
+
+def git_commit() -> str:
+    """Best-effort commit id for bench provenance: CI env var first,
+    then git; empty string when neither is available."""
+    sha = os.environ.get("GITHUB_SHA", "")
+    if sha:
+        return sha
+    try:
+        import subprocess
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            cwd=os.path.dirname(__file__), timeout=10,
+        ).stdout.strip()
+    except Exception:
+        return ""
+
+
+def save_bench_json(name: str, rows: List[Dict], *, derived: str = "",
+                    us_per_call: float = 0.0,
+                    out_dir: str = None) -> str:
+    """Machine-readable per-bench artifact (``BENCH_<name>.json``): the
+    perf-trajectory record CI uploads per commit.  Writes to ``out_dir``
+    or ``$BENCH_JSON_DIR``; silently a no-op when neither is set, so
+    local bench runs don't litter the tree."""
+    out_dir = out_dir or os.environ.get("BENCH_JSON_DIR")
+    if not out_dir:
+        return ""
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(dict(name=name, commit=git_commit(),
+                       timestamp=time.time(), us_per_call=us_per_call,
+                       derived=derived, rows=rows), f, indent=1)
     return path
 
 

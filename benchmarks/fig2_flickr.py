@@ -14,7 +14,7 @@ from repro.core.partition import partition_by_region, partition_label_skew
 from repro.core.trainer import train_decentralized
 from repro.data.synthetic import synth_geo_images
 
-from benchmarks.common import DATA, TRAIN, save_rows
+from benchmarks.common import TRAIN, save_rows
 
 COMM = CommConfig(gaia_t0=0.10, iter_local=20)
 

@@ -6,8 +6,6 @@ accuracy (more under mild skew), and stays within ~1.1-1.5x of Oracle's
 communication."""
 from __future__ import annotations
 
-import numpy as np
-
 from repro.configs.base import CommConfig
 from repro.configs.cnn_zoo import CNN_ZOO
 from repro.core.skewscout import THETA_LADDERS

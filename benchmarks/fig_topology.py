@@ -21,6 +21,13 @@ slowest link) vs AD-PSGD with bounded-staleness mixing priced by the
 async ledger's per-edge clocks — accuracy within noise at a fraction of
 the simulated wall-clock, plus the per-node idle time the straggler was
 costing everyone.
+
+The straggler-rate column (``run_straggler`` / ``--smoke-links``) drops
+the persistent WAN gap entirely: an all-LAN fabric under the stochastic
+link model, sweeping the Markov transient-slowdown rate.  Sync pays
+every round's straggler (sum of per-round maxes); async only pays it on
+the link it hit (max of per-edge sums) — AD-PSGD's actual headline
+claim, unmeasurable under class-constant link pricing.
 """
 from __future__ import annotations
 
@@ -34,7 +41,7 @@ from repro.core.partition import partition_label_skew
 from repro.core.trainer import train_decentralized
 from repro.data.synthetic import synth_images
 
-from benchmarks.common import save_rows
+from benchmarks.common import save_bench_json, save_rows
 
 K = 10
 N_CLASSES = 5          # < K so D-Cliques can span the label space
@@ -56,6 +63,10 @@ SCHEDULES = ("dcliques", "tv-dcliques", "random-matching")
 # sync-vs-async column: same geo-wan fabric + full skew, the only
 # difference is whether rounds stop-and-wait for the slowest link
 ASYNC_MODES = (("sync", "dpsgd", False), ("async", "adpsgd", True))
+# straggler column: all-LAN fabric (no persistent WAN gap), transient
+# Markov slowdowns only — the occasional-straggler regime
+STRAGGLER_RATES = (0.0, 0.05, 0.15)
+STRAGGLER_SLOWDOWN = 25.0
 
 
 def _exclusive_parts(ds, n_nodes=K, n_classes=N_CLASSES):
@@ -132,6 +143,8 @@ def run(quick: bool = False):
 
     rows.extend(run_async(parts=_exclusive_parts(ds), ds_val=val,
                           steps=steps))
+    rows.extend(run_straggler(parts=_exclusive_parts(ds), ds_val=val,
+                              steps=steps))
     save_rows("fig_topology", rows)
     return rows
 
@@ -172,6 +185,48 @@ def run_async(parts=None, ds_val=None, steps: int = 100):
     return rows
 
 
+def run_straggler(parts=None, ds_val=None, steps: int = 100,
+                  rates=STRAGGLER_RATES):
+    """Straggler-rate sweep (also the ``--smoke-links`` CI entry): an
+    otherwise-LAN fabric (ring, datacenter profile — every link LAN),
+    the stochastic link model's transient Markov slowdowns the only
+    heterogeneity.  Sync D-PSGD stop-and-waits on whichever link is
+    currently slow; AD-PSGD's per-edge clocks absorb the burst — the
+    wall-clock gap *grows with the straggler rate* while accuracy stays
+    within noise, and at rate 0 the two ledgers price identical rounds
+    (modulo staleness amortization of the ~zero LAN latency)."""
+    if parts is None:
+        ds = synth_images(1200, seed=0, **DATA)
+        ds_val = synth_images(400, seed=99, **DATA)
+        parts = _exclusive_parts(ds)
+    rows = []
+    for rate in rates:
+        for mode, algo, async_gossip in ASYNC_MODES:
+            comm = CommConfig(strategy=algo, topology="ring",
+                              link_profile="datacenter",
+                              link_model="sampled", straggler_rate=rate,
+                              straggler_slowdown=STRAGGLER_SLOWDOWN,
+                              async_gossip=async_gossip, max_staleness=2)
+            r = train_decentralized(
+                CNN_ZOO["gn-lenet"], algo, parts, (ds_val.x, ds_val.y),
+                comm=comm, steps=steps, batch=20, lr=LR,
+                eval_every=steps)
+            lm = r.extras["link_model"]
+            rows.append(dict(
+                schedule="constant", mode=mode, topology="ring",
+                link_model="sampled", straggler_rate=rate, skew=1.0,
+                val_acc=r.val_acc,
+                sim_time_s=r.sim_time_s,
+                sim_time_per_step_ms=r.sim_time_s / steps * 1e3,
+                slow_fraction=lm["slow_fraction"],
+                clock_skew_s=r.extras["ledger"]["clock_skew_s"]))
+            print(f"[fig_topology] straggler={rate:.2f} {mode:5s} "
+                  f"({algo:6s}): acc={r.val_acc:.3f} "
+                  f"t_sim={r.sim_time_s:.3f}s "
+                  f"slow_frac={lm['slow_fraction']:.3f}", flush=True)
+    return rows
+
+
 def smoke_async():
     """Tiny end-to-end async exercise for CI: must finish in seconds and
     still show the async ledger strictly beating sync wall-clock."""
@@ -181,6 +236,29 @@ def smoke_async():
     assert asy["sim_time_s"] < sync["sim_time_s"], \
         (asy["sim_time_s"], sync["sim_time_s"])
     save_rows("fig_topology_async_smoke", rows)
+    save_bench_json("fig_topology_async_smoke", rows,
+                    derived=f"async={asy['sim_time_s']:.3f}s "
+                            f"sync={sync['sim_time_s']:.3f}s")
+    return rows
+
+
+def smoke_links():
+    """Stochastic-link CI smoke: transient stragglers on an all-LAN
+    fabric — async AD-PSGD must strictly beat sync D-PSGD's simulated
+    wall-clock at accuracy within noise."""
+    rows = run_straggler(steps=12, rates=(0.15,))
+    sync = next(r for r in rows if r["mode"] == "sync")
+    asy = next(r for r in rows if r["mode"] == "async")
+    assert asy["sim_time_s"] < sync["sim_time_s"], \
+        (asy["sim_time_s"], sync["sim_time_s"])
+    assert asy["val_acc"] > sync["val_acc"] - 0.15, \
+        (asy["val_acc"], sync["val_acc"])
+    assert sync["slow_fraction"] > 0, "straggler chain never fired"
+    save_rows("fig_topology_links_smoke", rows)
+    save_bench_json("fig_topology_links_smoke", rows,
+                    derived=f"async={asy['sim_time_s']:.3f}s "
+                            f"sync={sync['sim_time_s']:.3f}s "
+                            f"slow_frac={sync['slow_fraction']:.3f}")
     return rows
 
 
@@ -189,9 +267,14 @@ if __name__ == "__main__":
     ap.add_argument("--smoke-async", action="store_true",
                     help="tiny sync-vs-async CI smoke (seconds, asserts "
                          "async < sync simulated wall-clock)")
+    ap.add_argument("--smoke-links", action="store_true",
+                    help="stochastic-link CI smoke (transient stragglers "
+                         "on an all-LAN fabric, asserts async < sync)")
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
     if args.smoke_async:
         smoke_async()
+    elif args.smoke_links:
+        smoke_links()
     else:
         run(quick=args.quick)

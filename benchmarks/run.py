@@ -3,6 +3,8 @@
   PYTHONPATH=src python -m benchmarks.run            # quick pass (default)
   PYTHONPATH=src python -m benchmarks.run --full     # full paper-scale runs
   PYTHONPATH=src python -m benchmarks.run --only fig1,fig8
+  PYTHONPATH=src python -m benchmarks.run --json out # + BENCH_*.json per
+                                                     # bench (CI artifact)
 
 Prints ``name,us_per_call,derived`` CSV.  For kernel benches us_per_call is
 the measured call time; for experiment benches us_per_call is the total
@@ -70,6 +72,11 @@ def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--json", default=None, metavar="DIR",
+                    help="emit a machine-readable BENCH_<name>.json per "
+                         "bench into DIR (the CI perf-trajectory "
+                         "artifact: commit, timestamp, wall time, "
+                         "headline, full rows)")
     ap.add_argument("--use-cache", action="store_true",
                     help="reuse experiments/results/*.json if present")
     ap.add_argument("--cache-only", action="store_true",
@@ -98,6 +105,10 @@ def main(argv=None) -> int:
                 print(f"{r['name']},{r['us_per_call']:.1f},")
         else:
             print(f"{name},{dt_us:.0f},{_headline(name, rows)}")
+        if args.json:
+            from benchmarks.common import save_bench_json
+            save_bench_json(name, rows, derived=_headline(name, rows),
+                            us_per_call=dt_us, out_dir=args.json)
         sys.stdout.flush()
     return 0
 

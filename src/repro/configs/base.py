@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass, field
-from typing import Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 
 @dataclass(frozen=True)
@@ -257,6 +257,20 @@ class CommConfig:
     #                                   geo-wan | dcliques | tv-dcliques |
     #                                   random-matching
     link_profile: str = "uniform"     # uniform | datacenter | geo-wan
+    # stochastic links (repro.topology.links.LinkModel): "sampled" draws
+    # per-edge, per-activation latency/bandwidth instead of the class
+    # constants — seeded + replayable; with all rates at zero the
+    # sampled ledger reproduces the constant ledger exactly
+    link_model: str = "constant"      # constant | sampled
+    link_jitter: float = 0.0          # per-activation lognormal sigma
+    link_hetero: float = 0.0          # persistent per-edge base spread
+    straggler_rate: float = 0.0       # P(normal -> slow) per activation
+    straggler_exit: float = 0.5       # P(slow -> normal) per activation
+    straggler_slowdown: float = 10.0  # lat x / bw / while slow
+    # handshake amortization: a newly-activated link spreads its setup
+    # latency over its first `amortize_window` gossip activations (1 =
+    # pay up front); dropping a link forfeits the unpaid balance
+    amortize_window: int = 1
     # online re-wiring: control-plane floats charged per newly-activated
     # link whenever the active edge set changes (schedule rotation or a
     # SkewScout topology-rung switch); 0 keeps re-wiring free (the

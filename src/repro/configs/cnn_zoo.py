@@ -7,8 +7,8 @@ AlexNet-style net and a ResNet-20-style net with BatchNorm — enough to
 reproduce every paper phenomenon (BN divergence, GN rescue, algorithm loss)
 on CPU with synthetic data.
 """
-from dataclasses import dataclass, field
-from typing import Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Optional, Tuple
 
 
 @dataclass(frozen=True)

@@ -20,7 +20,7 @@ the paper's communication-savings currency (BSP = model size each step).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp

@@ -6,7 +6,7 @@ non-IID problem for BN models (paper §5)."""
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Dict, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

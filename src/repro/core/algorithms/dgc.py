@@ -12,13 +12,13 @@ retuning require no recompilation.
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Dict, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.algorithms.base import (ModelFns, Params, pernode_grads,
-                                        tree_mean0, tree_size, tree_sum0, tmap)
+                                        tree_mean0, tree_sum0, tmap)
 from repro.optim.sgd import global_norm
 
 WARMUP_SPARSITIES = (0.75, 0.9375, 0.984375, 0.996, 0.999)

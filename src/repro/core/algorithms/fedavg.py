@@ -8,7 +8,7 @@ the paper's Appendix A, all K partitions participate every round
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Dict, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp

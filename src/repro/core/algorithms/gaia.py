@@ -13,13 +13,13 @@ it without recompilation.
 from __future__ import annotations
 
 from functools import partial
-from typing import Any, Dict, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.algorithms.base import (ModelFns, Params, pernode_grads,
-                                        tree_mean0, tree_size, tree_sum0, tmap)
+                                        tree_mean0, tmap)
 
 
 class Gaia:

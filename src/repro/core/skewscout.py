@@ -28,7 +28,10 @@ wall-clock the window actually cost (per-edge clocks, latency amortized
 by staleness) over the wall-clock of one full-model exchange — so θ
 rungs that change *when* links block (staleness) are priced, not just
 rungs that change how many floats move.  With the uniform profile the
-sync path reduces exactly to the flat float ratio.
+sync path reduces exactly to the flat float ratio.  Under a stochastic
+link model (``CommLedger(link_model=...)``) the CM denominator comes
+from the ledger's per-edge EWMA *measured* costs instead of profile
+constants, re-priced at every probe on a pinned fabric (``cm_fabric``).
 
 SkewScout is algorithm-agnostic: anything exposing a dynamic θ knob
 (Gaia t0, FedAvg iter_local, DGC sparsity) plugs in via ``theta_ladder``.
@@ -85,7 +88,7 @@ class SkewScout:
                  eval_acc_fn: Callable, *, start_index: Optional[int] = None,
                  seed: int = 0, ledger=None, warmup_travels: int = 1,
                  ladder: Optional[List] = None,
-                 cm_ref: Optional[float] = None):
+                 cm_ref: Optional[float] = None, cm_fabric=None):
         """eval_acc_fn(params, mstate, x, y) -> accuracy in [0,1].
         ``ledger``: optional CommLedger; when given, C(θ)/CM is computed
         from bandwidth-priced link traffic (sync) or simulated
@@ -101,7 +104,17 @@ class SkewScout:
         ``cm_ref``: pin the CM denominator (seconds for one full-model
         exchange) instead of re-deriving it from the ledger's current
         fabric each probe — required when rung switches change the fabric
-        mid-run, or C(θ)/CM would be renormalized under the controller."""
+        mid-run, or C(θ)/CM would be renormalized under the controller.
+        ``cm_fabric``: like ``cm_ref`` but for a ledger with a stochastic
+        link model, where profile constants are a fiction: the *fabric*
+        is pinned and CM is re-priced at every probe from the ledger's
+        per-edge EWMA measured costs
+        (``measured_full_exchange_time/cost``), so the denominator
+        tracks what the links actually cost while staying comparable
+        across rung switches.  Amortized handshake installments land in
+        whichever C(θ) window reuses the links, so a rung switch that
+        persists sees its setup cost decay across windows while
+        thrashing keeps re-paying it."""
         if ladder is None:
             ladder = THETA_LADDERS[algo_name]
         kw = {} if comm.tuner == "hill" else {"seed": seed}
@@ -113,6 +126,10 @@ class SkewScout:
         self.ledger = ledger
         self.warmup_travels = warmup_travels
         self._cm_ref = cm_ref
+        # normalize to a schedule once: union() is cached per schedule
+        # instance, so per-probe CM re-pricing reuses one union graph
+        self._cm_fabric = None if cm_fabric is None \
+            else as_schedule(cm_fabric)
         self._cost_mark = self._ledger_cost()
         self._comm_since = 0.0
         self._steps_since = 0
@@ -123,21 +140,23 @@ class SkewScout:
         return self.tuner.theta
 
     def _ledger_cost(self) -> float:
-        """The running cost counter C(θ) windows are cut from: priced
-        link traffic (bandwidth-seconds) for a sync ledger, simulated
-        wall-clock for an async one."""
-        if self.ledger is None:
-            return 0.0
-        if getattr(self.ledger, "async_mode", False):
-            return self.ledger.sim_time_s
-        return self.ledger.priced_cost()
+        """The running cost counter C(θ) windows are cut from — the
+        currency (wall-clock / sampled / constant bandwidth-seconds) is
+        the *ledger's* policy (``CommLedger.window_cost``), so the
+        numerator always matches the CM denominator's units."""
+        return self.ledger.window_cost() if self.ledger is not None \
+            else 0.0
 
     def _cm(self) -> float:
+        # an explicit pinned constant always wins — cm_ref exists to
+        # keep C(θ)/CM comparable across rung switches, and a caller
+        # that passed one must not have it silently overridden; the
+        # pricing policy (measured vs constant, time vs cost) otherwise
+        # lives on the ledger, with cm_fabric pinning the exchange graph
         if self._cm_ref is not None:
             return self._cm_ref
-        if getattr(self.ledger, "async_mode", False):
-            return self.ledger.full_exchange_time(self.model_floats)
-        return self.ledger.full_exchange_cost(self.model_floats)
+        return self.ledger.cm_denominator(self.model_floats,
+                                          fabric=self._cm_fabric)
 
     def record_step(self, comm_floats: float) -> None:
         self._comm_since += float(comm_floats)

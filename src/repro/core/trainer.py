@@ -27,7 +27,8 @@ from repro.data.pipeline import DecentralizedLoader
 from repro.models.cnn import cnn_apply, init_cnn
 from repro.topology import (LABEL_AWARE_TOPOLOGIES, LINK_PROFILES,
                             CommLedger, Topology, TopologySchedule,
-                            as_schedule, build_schedule, topology_ladder)
+                            as_schedule, build_schedule, make_link_model,
+                            topology_ladder)
 
 
 # ---------------------------------------------------------------------------
@@ -215,9 +216,16 @@ def train_decentralized(cnn_cfg: CNNConfig, algo_name: str,
                 f"{len(ladder)}-rung staleness ladder ({ladder})")
         staleness = ladder[start_index]
 
+    # stochastic links: one seeded LinkModel for the run.  Its draws are
+    # keyed streams of (seed, edge, activation) — the link seed cannot
+    # perturb the clique assignment or anything else the run seed feeds
+    links = make_link_model(comm, LINK_PROFILES[comm.link_profile],
+                            seed=seed)
     ledger = CommLedger(sched, LINK_PROFILES[comm.link_profile],
                         rewire_floats_per_edge=comm.rewire_floats,
-                        async_mode=comm.async_gossip)
+                        async_mode=comm.async_gossip,
+                        link_model=links,
+                        amortize_window=comm.amortize_window)
 
     algo = make_algorithm(algo_name, fns, K, comm, momentum=momentum,
                           weight_decay=weight_decay, lr0=lr, topology=sched,
@@ -239,16 +247,21 @@ def train_decentralized(cnn_cfg: CNNConfig, algo_name: str,
     scout = None
     if comm.skewscout and algo_name == "dpsgd":
         # densest rung pins the denominator so C(theta)/CM stays
-        # comparable as the controller changes fabrics
+        # comparable as the controller changes fabrics.  Under a link
+        # model the constants are a fiction: pin the *fabric* instead
+        # and let the scout re-price CM from the ledger's per-edge EWMA
+        # measured costs at every probe
+        cm = (dict(cm_fabric=ladder[0]) if links is not None
+              else dict(cm_ref=_cm_pin(ladder[0])))
         scout = SkewScout(comm, algo_name, tree_size(params), eval_acc,
                           start_index=start_index, seed=seed,
-                          ledger=ledger, ladder=ladder,
-                          cm_ref=_cm_pin(ladder[0]))
+                          ledger=ledger, ladder=ladder, **cm)
     elif comm.skewscout and algo_name == "adpsgd":
+        cm = (dict(cm_fabric=sched) if links is not None
+              else dict(cm_ref=_cm_pin(sched)))
         scout = SkewScout(comm, algo_name, tree_size(params), eval_acc,
                           start_index=start_index, seed=seed,
-                          ledger=ledger, ladder=ladder,
-                          cm_ref=_cm_pin(sched))
+                          ledger=ledger, ladder=ladder, **cm)
     elif comm.skewscout and algo_name != "bsp":
         scout = SkewScout(comm, algo_name, tree_size(params), eval_acc,
                           start_index=theta_start_index, seed=seed,
@@ -343,6 +356,10 @@ def train_decentralized(cnn_cfg: CNNConfig, algo_name: str,
                 "node_clock_skew_s": ledger.clock_skew_s(),
                 "node_busy_s": [float(b) for b in ledger.node_busy_s],
                 "node_idle_s": [float(i) for i in ledger.node_idle_s],
+                # stochastic-link extras: straggler/jitter exposure of
+                # the run (activations, slow fraction, knob values)
+                **({"link_model": links.summary()}
+                   if links is not None else {}),
                 **({"staleness_curve": stale_curve,
                     "max_staleness": algo.max_staleness}
                    if algo_name == "adpsgd" else {}),

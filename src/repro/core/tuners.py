@@ -9,7 +9,7 @@ from __future__ import annotations
 
 import math
 import random
-from typing import Callable, Dict, List, Optional
+from typing import Dict, List, Optional
 
 
 class LadderTuner:

@@ -6,7 +6,7 @@ Each decentralized node k draws minibatches from its own partition P_k
 """
 from __future__ import annotations
 
-from typing import Dict, Iterator, List, Sequence, Tuple
+from typing import Sequence, Tuple
 
 import numpy as np
 

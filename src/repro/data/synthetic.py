@@ -16,7 +16,7 @@ generative stand-ins with controllable label geometry:
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, Tuple
+from typing import Tuple
 
 import numpy as np
 

@@ -10,7 +10,6 @@ TPU-idiomatic replacement for a GPU atomics-based compaction.
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

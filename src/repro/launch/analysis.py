@@ -14,8 +14,8 @@ Hardware constants: TPU v5e — 197 TFLOP/s bf16 per chip, 819 GB/s HBM,
 from __future__ import annotations
 
 import re
-from dataclasses import asdict, dataclass, field
-from typing import Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, Optional
 
 PEAK_FLOPS = 197e12          # bf16 per chip
 HBM_BW = 819e9               # bytes/s per chip

@@ -27,7 +27,7 @@ from repro.launch import analysis, hlo_analysis
 from repro.launch.mesh import (devices_per_pod, make_production_mesh,
                                n_pods as mesh_n_pods)
 from repro.launch.sharding import (batch_shardings, cache_shardings,
-                                   param_shardings, replicated,
+                                   param_shardings,
                                    train_state_shardings)
 from repro.launch.specs import input_specs
 from repro.launch.steps import (GOSSIP_STRATEGIES, gossip_operands,

@@ -29,20 +29,17 @@ def main(argv=None):
 
     # late import so XLA_FLAGS is already set
     from repro.launch.dryrun import dryrun_one
-    import repro.launch.dryrun as dr
-    import jax
 
     # reuse dryrun_one but capture the HLO for bucket analysis
-    from repro.configs.base import INPUT_SHAPES
     rep = dryrun_one(args.arch, args.shape, multi_pod=args.multi_pod,
                      strategy=args.strategy, chunk=args.chunk,
                      remat=not args.no_remat, verbose=True,
                      return_hlo=True)
     hc = hlo_analysis.analyze(rep["_hlo"])
-    print(f"\n== top collective buckets (GB/device/step) ==")
+    print("\n== top collective buckets (GB/device/step) ==")
     for name, b in hc.top_collectives(args.top):
         print(f"  {b/1e9:10.3f}  {name}")
-    print(f"\n== top HBM-byte buckets (GB/device/step) ==")
+    print("\n== top HBM-byte buckets (GB/device/step) ==")
     for name, b in hc.top_bytes(args.top):
         print(f"  {b/1e9:10.3f}  {name}")
 

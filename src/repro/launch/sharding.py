@@ -18,7 +18,7 @@ from __future__ import annotations
 
 import os
 import re
-from typing import Any, Optional, Tuple
+from typing import Any, Tuple
 
 import jax
 import numpy as np

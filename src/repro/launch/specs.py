@@ -2,7 +2,7 @@
 shardable, no device allocation.  The dry-run lowers against these."""
 from __future__ import annotations
 
-from typing import Any, Dict, Optional
+from typing import Dict
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ observable and measurable (``repro.core.divergence``).
 """
 from __future__ import annotations
 
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -8,7 +8,7 @@ consumes them (bidirectional self-attention); the decoder is the shared
 """
 from __future__ import annotations
 
-from typing import Any, Dict, List
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import MoEConfig
 from repro.models.layers import gated_mlp_apply, init_gated_mlp, init_linear
-from repro.models.shard_hints import axis_env_size, current_mesh, hint
+from repro.models.shard_hints import current_mesh, hint
 
 Params = Dict[str, Any]
 

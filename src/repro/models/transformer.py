@@ -12,7 +12,6 @@ unit.
 from __future__ import annotations
 
 import math
-from functools import partial
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax

@@ -5,7 +5,7 @@ Weight decay is applied as L2-in-gradient (Caffe semantics, matching the
 paper's training setup tables)."""
 from __future__ import annotations
 
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -37,6 +37,20 @@ Module map
     wall-clock (async); SkewScout probe shipments are booked per edge
     via ``record_probe``.
 
+``links.py``
+    :class:`LinkModel`, the stochastic-heterogeneous-link sampler: each
+    edge draws a persistent base latency/bandwidth from its class's
+    distribution (``hetero``), every activation applies a median-1
+    lognormal jitter (``jitter``), and a per-edge Markov chain produces
+    bursty transient slowdowns (``straggler_rate`` / ``straggler_exit``
+    / ``straggler_slowdown``).  All draws are keyed by ``(seed, edge,
+    activation index)`` — bit-identical replay across ledger rebuilds.
+    The ledger samples it when ``link_model=`` is attached, folds each
+    observation into per-edge EWMA *measured* costs
+    (``measured_full_exchange_time/cost``), and amortizes re-wiring
+    handshakes over ``amortize_window`` activations.
+    ``make_link_model`` builds it from a ``CommConfig``.
+
 Downstream consumers
 --------------------
 ``core/algorithms/dpsgd.py`` (gossip averaging = ``W_t @ params`` on the
@@ -49,20 +63,23 @@ skew x schedule sweep + sync-vs-async column), and
 ``examples/train_topology.py`` (the geo-WAN scenario end-to-end).
 """
 from repro.topology.costs import LINK_PROFILES, CommLedger, LinkProfile
+from repro.topology.links import LinkModel, make_link_model
 from repro.topology.graphs import (LABEL_AWARE_TOPOLOGIES, Topology,
                                    TopologySchedule, as_schedule,
                                    build_schedule, build_topology,
                                    constant_schedule, d_cliques,
-                                   fully_connected, hierarchical,
+                                   fully_connected,
+                                   greedy_clique_assignment, hierarchical,
                                    metropolis_weights,
                                    random_matching_schedule, random_regular,
                                    ring, topology_ladder, torus,
                                    time_varying_d_cliques)
 
-__all__ = ["LINK_PROFILES", "CommLedger", "LinkProfile", "Topology",
-           "TopologySchedule", "LABEL_AWARE_TOPOLOGIES",
+__all__ = ["LINK_PROFILES", "CommLedger", "LinkProfile", "LinkModel",
+           "Topology", "TopologySchedule", "LABEL_AWARE_TOPOLOGIES",
            "as_schedule", "build_schedule", "build_topology",
            "constant_schedule", "d_cliques", "fully_connected",
-           "hierarchical", "metropolis_weights",
-           "random_matching_schedule", "random_regular", "ring",
-           "topology_ladder", "torus", "time_varying_d_cliques"]
+           "greedy_clique_assignment", "hierarchical", "make_link_model",
+           "metropolis_weights", "random_matching_schedule",
+           "random_regular", "ring", "topology_ladder", "torus",
+           "time_varying_d_cliques"]

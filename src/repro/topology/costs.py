@@ -36,6 +36,28 @@ deliveries in flight, so its propagation latency is re-paid once per
 Per-node busy time (max cost over the node's own activated links each
 round) and the resulting idle time / clock skew expose who was gated.
 
+Stochastic links (``link_model=``): a
+:class:`~repro.topology.links.LinkModel` replaces the class-constant
+pricing with seeded per-edge sampling — persistent per-edge base draws,
+lognormal per-activation jitter, and a Markov transient-slowdown state
+for bursty stragglers.  Both timing models price the *sampled* per-edge
+times, so the async max-of-per-edge-sums diverges from the sync
+sum-of-per-round-maxes under transient stragglers, not only persistent
+WAN gaps.  Every observation also feeds per-edge EWMA **measured**
+costs (``measured_full_exchange_time/cost``) that SkewScout's C(θ)/CM
+pricing consumes in place of profile constants.
+
+Amortized re-wiring (``amortize_window=W``): a newly-activated link's
+handshake is paid in ``handshake / W`` installments over its first ``W``
+activations instead of up front — a rung switch that persists gets
+cheaper per round.  A link dropped before its window completes forfeits
+the unamortized balance immediately (the setup work was really done;
+tearing down just stops deferring the booking), so thrashing between
+schedules stays exactly as expensive as un-amortized switching.  A run
+that ends mid-window leaves the remainder in ``pending_handshake_s``
+(reported in ``summary()``): ``rewire_time_s + pending_handshake_s`` is
+the horizon-independent handshake total to compare across windows.
+
 Units: traffic in *floats* (the repo's communication currency, 4 bytes
 each); bandwidth in floats/second; latency in seconds.
 """
@@ -138,10 +160,31 @@ class CommLedger:
     def __init__(self, fabric: Union[Topology, TopologySchedule],
                  profile: LinkProfile, *,
                  rewire_floats_per_edge: float = 0.0,
-                 async_mode: bool = False):
+                 async_mode: bool = False,
+                 link_model=None, amortize_window: int = 1,
+                 ewma_alpha: float = 0.1):
         self.profile = profile
         self.rewire_floats_per_edge = float(rewire_floats_per_edge)
         self.async_mode = bool(async_mode)
+        # stochastic per-link sampler (repro.topology.links.LinkModel);
+        # None keeps the class-constant pricing
+        self.links = link_model
+        assert int(amortize_window) >= 1, amortize_window
+        self.amortize_window = int(amortize_window)
+        # handshake amortization: canonical edge -> unpaid balance (s)
+        # and the per-activation installment it is paid down in
+        self._pending_hs: Dict[Edge, float] = {}
+        self._hs_inst: Dict[Edge, float] = {}
+        # per-edge EWMA measured costs (observed latency seconds and
+        # price seconds/float) — SkewScout's measured-cost denominators
+        assert 0.0 < ewma_alpha <= 1.0, ewma_alpha
+        self.ewma_alpha = float(ewma_alpha)
+        self._ewma_lat: Dict[Edge, float] = {}
+        self._ewma_price: Dict[Edge, float] = {}
+        # running transfer seconds with every float priced at the
+        # bandwidth its activation actually sampled — the sync C(θ)
+        # numerator that stays in the same currency as the measured CM
+        self._sampled_cost_s = 0.0
         # source of truth for per-edge traffic survives schedule switches
         self._traffic: Dict[Edge, float] = {}
         self.lan_floats = 0.0
@@ -188,6 +231,68 @@ class CommLedger:
         self.lan_floats += float(per_edge[~pricing.is_wan].sum())
         self.wan_floats += float(per_edge[pricing.is_wan].sum())
 
+    def _link_rates(self, pricing: _GraphPricing, active: np.ndarray
+                    ) -> tuple:
+        """Per-edge (latency, bandwidth) for one activation of the
+        ``active`` edges: the graph's class constants, or — with a
+        ``link_model`` attached — the sampled values, each observation
+        folded into the per-edge EWMA measured costs."""
+        if self.links is None or not self.links.stochastic:
+            # identity sampling: constants are the truth, the EWMA fold
+            # would only re-derive them — keep the hot path dict-free
+            return pricing.lat, pricing.bw
+        lat, bw = self.links.sample(pricing.graph.edges, pricing.lat,
+                                    pricing.bw, active)
+        a = self.ewma_alpha
+        for n in np.flatnonzero(active):
+            e = pricing.graph.edges[n]
+            obs_lat, obs_price = float(lat[n]), 1.0 / float(bw[n])
+            old_lat = self._ewma_lat.get(e)
+            old_price = self._ewma_price.get(e)
+            self._ewma_lat[e] = obs_lat if old_lat is None \
+                else (1.0 - a) * old_lat + a * obs_lat
+            self._ewma_price[e] = obs_price if old_price is None \
+                else (1.0 - a) * old_price + a * obs_price
+        return lat, bw
+
+    def _book_sampled_cost(self, per_edge: np.ndarray, bw: np.ndarray,
+                           active: np.ndarray) -> None:
+        """Accumulate the transfer seconds of ``per_edge`` floats at the
+        (possibly sampled) ``bw`` of this activation — the sampled
+        analogue of ``priced_cost``'s float-times-constant-price sum.
+        No-op without a stochastic link model: ``sampled_priced_cost``
+        falls back to ``priced_cost`` there."""
+        if self.links is not None and self.links.stochastic:
+            self._sampled_cost_s += float(
+                (per_edge[active] / bw[active]).sum())
+
+    def _pay_installments(self, pricing: _GraphPricing,
+                          active: np.ndarray) -> Optional[np.ndarray]:
+        """Handshake installments due this round: each active edge with
+        an unpaid balance pays ``handshake / amortize_window`` into its
+        round cost.  Returns the per-edge installment array (None when
+        nothing is owed)."""
+        if not self._pending_hs:
+            return None
+        inst = None
+        for e in list(self._pending_hs):
+            n = pricing.edge_index.get(e)
+            if n is None or not active[n]:
+                continue
+            bal = self._pending_hs[e]
+            pay = min(self._hs_inst.get(e, bal), bal)
+            if inst is None:
+                inst = np.zeros(len(pricing.graph.edges))
+            inst[n] += pay
+            self.rewire_time_s += pay
+            bal -= pay
+            if bal <= 1e-18:
+                del self._pending_hs[e]
+                self._hs_inst.pop(e, None)
+            else:
+                self._pending_hs[e] = bal
+        return inst
+
     def _charge_time(self, pricing: _GraphPricing,
                      cost: np.ndarray, active: np.ndarray) -> None:
         """Advance the clocks by ``cost`` seconds per edge (aligned with
@@ -221,20 +326,65 @@ class CommLedger:
     def _rewire(self, pricing: _GraphPricing) -> None:
         """Charge the online re-wiring cost for links that were not
         active in the previous gossip round: a control-plane handshake
-        of ``rewire_floats_per_edge`` floats per new link *plus the
-        link's per-class setup latency* (``LinkProfile.handshake``:
-        WAN >> LAN), priced at that link's class and added to the
-        simulated step time.  Floats are booked into the LAN/WAN totals
-        too, so ``lan_floats + wan_floats`` still covers every priced
-        float.  Only gossip rounds carry an active edge set —
-        union-routed exchanges (probes) never re-wire and never reset
-        the tracking."""
+        of ``rewire_floats_per_edge`` floats per new link, priced at the
+        link's class and added to the simulated step time; the link's
+        per-class *setup latency* (``LinkProfile.handshake``: WAN >>
+        LAN) is charged as its own serial setup event at the default
+        ``amortize_window=1`` (the exact legacy behaviour), or scheduled
+        as ``handshake / amortize_window`` installments paid into the
+        link's first ``amortize_window`` gossip activations.  Links
+        dropped before their window completes forfeit the unpaid
+        balance immediately.
+        Floats are booked into the LAN/WAN totals too, so ``lan_floats +
+        wan_floats`` still covers every priced float.  Only gossip
+        rounds carry an active edge set — union-routed exchanges
+        (probes) never re-wire and never reset the tracking."""
         if self._last_active is None or \
                 pricing.active == self._last_active:
             self._last_active = pricing.active
             return
-        new = pricing.active - self._last_active
+        prev = self._last_active
+        new = pricing.active - prev
+        dropped = prev - pricing.active
         self._last_active = pricing.active
+        # teardown: a dropped link's unamortized handshake balance is
+        # charged now — the setup work was spent; only the booking was
+        # deferred.  This is what keeps schedule thrashing as expensive
+        # as un-amortized switching.
+        if dropped and self._pending_hs:
+            forfeit_max = 0.0
+            forfeited = []
+            busy = np.zeros(len(self.node_busy_s))
+            for e in dropped:
+                bal = self._pending_hs.pop(e, 0.0)
+                self._hs_inst.pop(e, None)
+                if bal <= 0.0:
+                    continue
+                forfeited.append(e)
+                self.rewire_time_s += bal
+                # the endpoints did this work: keep busy/idle/clock-skew
+                # accounting comparable across amortize_window settings
+                # (at window 1 the same seconds flow through the round's
+                # _charge_time and land on the endpoints there)
+                for k in e:
+                    if k < len(busy):
+                        busy[k] = max(busy[k], bal)
+                if self.async_mode:
+                    c = self._edge_clock.get(e, 0.0) + bal
+                    self._edge_clock[e] = c
+                    self.sim_time_s = max(self.sim_time_s, c)
+                else:
+                    forfeit_max = max(forfeit_max, bal)
+            # sync: teardowns run in parallel across the dropped links,
+            # and the links that actually forfeited (only those — a
+            # fully-paid dropped edge keeps its stale clock) snap to the
+            # global clock
+            self.sim_time_s += forfeit_max
+            for e in forfeited:
+                if not self.async_mode:
+                    self._edge_clock[e] = max(
+                        self._edge_clock.get(e, 0.0), self.sim_time_s)
+            self.node_busy_s += busy
         if not new:
             return
         if self.async_mode:
@@ -252,10 +402,27 @@ class CommLedger:
             self._book_floats(pricing, per_edge)
             self.rewire_lan_floats += float(per_edge[~pricing.is_wan].sum())
             self.rewire_wan_floats += float(per_edge[pricing.is_wan].sum())
-        # handshake setup latency + the control-plane transfer itself
+        # window 1 (the default) keeps the exact legacy behaviour: the
+        # whole handshake is charged here as its own serial setup event.
+        # W > 1 schedules it as installments over the link's first W
+        # activations instead (re-activation restarts the window: the
+        # old connection is gone)
+        if self.amortize_window > 1:
+            for n in np.flatnonzero(is_new):
+                e = pricing.graph.edges[n]
+                hs = float(pricing.hs[n])
+                if hs > 0.0:
+                    self._pending_hs[e] = hs
+                    self._hs_inst[e] = hs / self.amortize_window
+            hs_now = 0.0
+        else:
+            hs_now = pricing.hs
+        # the control-plane transfer itself (amortized handshake latency
+        # is paid through the installments, starting with this round's
+        # gossip; control-plane floats are priced at nominal constants)
+        self._book_sampled_cost(per_edge, pricing.bw, is_new)
         cost = np.where(is_new,
-                        pricing.hs + pricing.lat + per_edge / pricing.bw,
-                        0.0)
+                        hs_now + pricing.lat + per_edge / pricing.bw, 0.0)
         self.rewire_time_s += float(cost[is_new].sum())
         self._charge_time(pricing, cost, cost > 0)
         self.rewire_events += len(new)
@@ -275,10 +442,11 @@ class CommLedger:
         per_edge = share[pricing.ei] + share[pricing.ej]
         self._book_floats(pricing, per_edge)
         active = per_edge > 0
+        lat, bw = self._link_rates(pricing, active)
+        self._book_sampled_cost(per_edge, bw, active)
         self._charge_time(pricing,
-                          np.where(active,
-                                   pricing.lat + per_edge / pricing.bw,
-                                   0.0), active)
+                          np.where(active, lat + per_edge / bw, 0.0),
+                          active)
         self.rounds += 1
 
     def record_gossip(self, model_floats: float,
@@ -300,17 +468,19 @@ class CommLedger:
         n_edges = len(graph.edges)
         per_edge = np.full(n_edges, 2.0 * model_floats)
         self._book_floats(pricing, per_edge)
+        active = per_edge > 0
+        lat, bw = self._link_rates(pricing, active)
+        self._book_sampled_cost(per_edge, bw, active)
         if self.async_mode and staleness is not None:
             s = np.broadcast_to(np.asarray(staleness, np.float64),
                                 (n_edges,))
             assert (s >= 0).all(), "staleness must be non-negative"
-            lat = pricing.lat / (1.0 + s)
-        else:
-            lat = pricing.lat
-        active = per_edge > 0
-        self._charge_time(pricing,
-                          np.where(active, lat + per_edge / pricing.bw,
-                                   0.0), active)
+            lat = lat / (1.0 + s)
+        cost = np.where(active, lat + per_edge / bw, 0.0)
+        inst = self._pay_installments(pricing, active)
+        if inst is not None:
+            cost = cost + inst
+        self._charge_time(pricing, cost, active)
         self.rounds += 1
 
     def record_probe(self, edges: Sequence[Edge],
@@ -330,10 +500,11 @@ class CommLedger:
             per_edge[pricing.edge_index[e]] += float(floats_each)
         self._book_floats(pricing, per_edge)
         active = per_edge > 0
+        lat, bw = self._link_rates(pricing, active)
+        self._book_sampled_cost(per_edge, bw, active)
         self._charge_time(pricing,
-                          np.where(active,
-                                   pricing.lat + per_edge / pricing.bw,
-                                   0.0), active)
+                          np.where(active, lat + per_edge / bw, 0.0),
+                          active)
         self.rounds += 1
 
     def switch_schedule(self, fabric: Union[Topology, TopologySchedule]
@@ -422,6 +593,18 @@ class CommLedger:
         return (self.lan_floats * self.profile.price_per_float("lan")
                 + self.wan_floats * self.profile.price_per_float("wan"))
 
+    def sampled_priced_cost(self) -> float:
+        """``priced_cost`` in *sampled* currency: every booked float
+        priced at the bandwidth its activation actually sampled, so a
+        sync SkewScout window numerator stays unit-consistent with the
+        EWMA-measured CM denominator (constant-priced floats against a
+        measured CM would read systematically cheap and drift during
+        EWMA warm-up).  Falls back to ``priced_cost`` when no stochastic
+        link model is attached — the constants are the truth there."""
+        if self.links is None or not self.links.stochastic:
+            return self.priced_cost()
+        return self._sampled_cost_s
+
     @property
     def rewire_floats(self) -> float:
         return self.rewire_lan_floats + self.rewire_wan_floats
@@ -434,28 +617,119 @@ class CommLedger:
                 + self.rewire_wan_floats
                 * self.profile.price_per_float("wan"))
 
+    def _full_exchange(self, model_floats: float, g: Topology,
+                       lat_of, price_of, worst: bool) -> float:
+        """One BSP-style full-model exchange on ``g`` (each node's model
+        share routed uniformly over its incident edges): the max link
+        time (``worst=True``, latency + transfer) or the summed
+        bandwidth-seconds.  The per-edge (latency, price) come from the
+        accessors, so the constant and measured variants share one
+        routing formula."""
+        if not len(g.edges):
+            return 1e-30
+        deg = g.degrees().astype(np.float64)
+        share = model_floats / np.maximum(deg, 1)
+        acc = 0.0
+        for n, (i, j) in enumerate(g.edges):
+            cls = g.edge_class[n]
+            per_edge = share[i] + share[j]
+            if worst:
+                acc = max(acc, lat_of((i, j), cls)
+                          + per_edge * price_of((i, j), cls))
+            else:
+                acc += per_edge * price_of((i, j), cls)
+        return max(acc, 1e-30)
+
     def full_exchange_cost(self, model_floats: float) -> float:
         """Priced cost of one BSP-style full-model exchange on the union
         fabric — SkewScout's CM denominator (bandwidth-seconds)."""
-        pricing = self._union_pricing
-        share = model_floats / np.maximum(pricing.deg, 1)
-        cost = 0.0
-        for e, (i, j) in enumerate(self.topology.edges):
-            cls = self.topology.edge_class[e]
-            cost += (share[i] + share[j]) * self.profile.price_per_float(cls)
-        return max(cost, 1e-30)
+        return self._full_exchange(
+            model_floats, self.topology,
+            lambda e, cls: self.profile.latency(cls),
+            lambda e, cls: self.profile.price_per_float(cls), worst=False)
 
     def full_exchange_time(self, model_floats: float) -> float:
         """Wall-clock of one BSP-style full-model exchange on the union
         fabric (slowest link's latency + transfer) — the CM denominator
         when SkewScout prices C(θ) in async simulated time."""
-        pricing = self._union_pricing
-        if not len(pricing.graph.edges):
-            return 1e-30
-        share = model_floats / np.maximum(pricing.deg, 1)
-        per_edge = share[pricing.ei] + share[pricing.ej]
-        return max(float(np.max(pricing.lat + per_edge / pricing.bw)),
-                   1e-30)
+        return self._full_exchange(
+            model_floats, self.topology,
+            lambda e, cls: self.profile.latency(cls),
+            lambda e, cls: self.profile.price_per_float(cls), worst=True)
+
+    # ---- measured costs (per-edge EWMA over sampled observations) ----
+    def measured_latency_s(self, e: Edge, cls: str = "lan") -> float:
+        """EWMA of the link's observed latency; profile constant until
+        the link has been observed (or when no link model is attached —
+        the constants *are* the truth then)."""
+        return self._ewma_lat.get(e, self.profile.latency(cls))
+
+    def measured_price_per_float(self, e: Edge, cls: str = "lan") -> float:
+        """EWMA of the link's observed seconds-per-float (inverse
+        sampled bandwidth), with the same profile-constant fallback."""
+        return self._ewma_price.get(e, self.profile.price_per_float(cls))
+
+    def _measured_union(self, fabric) -> Topology:
+        return self.topology if fabric is None \
+            else as_schedule(fabric).union()
+
+    def measured_full_exchange_cost(self, model_floats: float,
+                                    fabric=None) -> float:
+        """``full_exchange_cost`` priced from the per-edge EWMA measured
+        costs instead of profile constants — SkewScout's CM denominator
+        when a link model makes the constants a fiction.  ``fabric``
+        pins the exchange graph (e.g. the densest ladder rung) so the
+        denominator stays comparable across rung switches."""
+        return self._full_exchange(
+            model_floats, self._measured_union(fabric),
+            self.measured_latency_s, self.measured_price_per_float,
+            worst=False)
+
+    def measured_full_exchange_time(self, model_floats: float,
+                                    fabric=None) -> float:
+        """``full_exchange_time`` from measured per-edge costs — the CM
+        denominator for an async ledger under a link model."""
+        return self._full_exchange(
+            model_floats, self._measured_union(fabric),
+            self.measured_latency_s, self.measured_price_per_float,
+            worst=True)
+
+    # ---- controller-facing pricing policy ----
+    def window_cost(self) -> float:
+        """The running counter SkewScout cuts C(θ) windows from — the
+        one place the numerator currency is chosen: simulated wall-clock
+        for an async ledger; for a sync ledger, bandwidth-seconds priced
+        at the sampled bandwidths when a stochastic link model is
+        attached (``sampled_priced_cost``) and at the profile constants
+        otherwise."""
+        if self.async_mode:
+            return self.sim_time_s
+        return self.sampled_priced_cost()
+
+    def cm_denominator(self, model_floats: float, fabric=None) -> float:
+        """The CM denominator matching :meth:`window_cost`'s currency —
+        one full-model exchange priced as wall-clock (async) or
+        bandwidth-seconds (sync), from the per-edge EWMA measured costs
+        when a link model is attached and from the profile constants
+        otherwise.  ``fabric`` pins the exchange graph (constants-only
+        callers that need a pin use a precomputed ``cm_ref`` instead,
+        since constants never drift)."""
+        if self.links is not None:
+            return (self.measured_full_exchange_time(model_floats,
+                                                     fabric=fabric)
+                    if self.async_mode
+                    else self.measured_full_exchange_cost(model_floats,
+                                                          fabric=fabric))
+        return (self.full_exchange_time(model_floats) if self.async_mode
+                else self.full_exchange_cost(model_floats))
+
+    @property
+    def pending_handshake_s(self) -> float:
+        """Unpaid handshake balance still being amortized (seconds) —
+        cost already incurred by the links but deferred into their
+        remaining window; ``rewire_time_s + pending_handshake_s`` is the
+        horizon-independent handshake total."""
+        return float(sum(self._pending_hs.values()))
 
     def summary(self) -> Dict[str, float]:
         return dict(lan_floats=self.lan_floats, wan_floats=self.wan_floats,
@@ -468,4 +742,9 @@ class CommLedger:
                     async_mode=float(self.async_mode),
                     clock_skew_s=self.clock_skew_s(),
                     busy_s_max=float(self.node_busy_s.max()),
-                    idle_s_mean=float(self.node_idle_s.mean()))
+                    idle_s_mean=float(self.node_idle_s.mean()),
+                    amortize_window=float(self.amortize_window),
+                    pending_handshake_s=self.pending_handshake_s,
+                    **({"link_" + k: float(v)
+                        for k, v in self.links.summary().items()}
+                       if self.links is not None else {}))

@@ -38,7 +38,7 @@ must be (consensus still mixes across rounds).
 from __future__ import annotations
 
 import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -259,13 +259,21 @@ def hierarchical(n_nodes: int, n_datacenters: Optional[int] = None
                   cliques=groups)
 
 
-def _greedy_cliques(label_hist: np.ndarray,
-                    clique_size: Optional[int] = None,
-                    seed: int = 0) -> List[List[int]]:
+def greedy_clique_assignment(label_hist: np.ndarray,
+                             clique_size: Optional[int] = None,
+                             seed: int = 0) -> List[List[int]]:
     """Greedy label-balanced clique assignment shared by the constant and
     time-varying D-Cliques builders: repeatedly absorb the node that most
     reduces the clique's TV distance to the global label distribution,
-    so skew cancels *inside* each clique."""
+    so skew cancels *inside* each clique.
+
+    The ``seed`` is the *only* source of randomness (one private
+    ``default_rng``), and both builders route through this one helper —
+    the same ``(label_hist, clique_size, seed)`` always yields the same
+    assignment, and nothing another subsystem draws (e.g. the stochastic
+    link model's keyed streams) can perturb it.  Callers that need the
+    constant and time-varying variants to agree on cliques can also
+    precompute the assignment here and pass it via ``cliques=``."""
     K, C = label_hist.shape
     if clique_size is None:
         # one clique should be able to span the label space: with
@@ -298,16 +306,20 @@ def _greedy_cliques(label_hist: np.ndarray,
 
 
 def d_cliques(label_hist: np.ndarray, clique_size: Optional[int] = None,
-              seed: int = 0) -> Topology:
+              seed: int = 0,
+              cliques: Optional[List[List[int]]] = None) -> Topology:
     """Label-aware D-Cliques (Bellet et al., 2021).
 
     ``label_hist``: (K, C) per-node label counts.  Nodes are greedily
     grouped into cliques of ~``clique_size`` so each clique's aggregate
     label distribution tracks the global one; cliques are LAN-connected
     internally and joined by a WAN ring of inter-clique edges.
+    ``cliques`` overrides the greedy assignment with a precomputed one
+    (:func:`greedy_clique_assignment`).
     """
     K = label_hist.shape[0]
-    cliques = _greedy_cliques(label_hist, clique_size, seed)
+    if cliques is None:
+        cliques = greedy_clique_assignment(label_hist, clique_size, seed)
 
     edges, cls = [], []
     for cq in cliques:
@@ -473,7 +485,9 @@ def _round_robin_matching(members: Sequence[int], r: int
 
 def time_varying_d_cliques(label_hist: np.ndarray,
                            clique_size: Optional[int] = None,
-                           seed: int = 0) -> TopologySchedule:
+                           seed: int = 0,
+                           cliques: Optional[List[List[int]]] = None
+                           ) -> TopologySchedule:
     """One-peer-per-round D-Cliques (Bellet et al., 2021, §time-varying).
 
     Same greedy label-balanced cliques as :func:`d_cliques`, but each
@@ -483,10 +497,13 @@ def time_varying_d_cliques(label_hist: np.ndarray,
     intra-clique mesh plus one WAN edge per clique, every round.  Over
     one period the union covers the whole constant graph, so the mixing
     rate survives while per-round traffic (and especially per-round WAN
-    traffic) drops by the clique size.
+    traffic) drops by the clique size.  Both variants share
+    :func:`greedy_clique_assignment` (same ``seed`` => same cliques);
+    ``cliques`` passes a precomputed assignment explicitly.
     """
     K = label_hist.shape[0]
-    cliques = _greedy_cliques(label_hist, clique_size, seed)
+    if cliques is None:
+        cliques = greedy_clique_assignment(label_hist, clique_size, seed)
     n_cl = len(cliques)
     # period: lcm of the per-clique round-robin cycles and the WAN ring
     # rotation, so the union over one period is the full constant graph

@@ -1,0 +1,189 @@
+"""Stochastic heterogeneous links: per-edge latency/bandwidth sampling.
+
+``LinkProfile`` prices every link of a class (lan | wan) from two
+constants, which makes AD-PSGD's headline advantage unmeasurable: the
+async ledger only wins when *different* links bottleneck different
+rounds, and with class constants the same WAN edge is the bottleneck
+forever.  :class:`LinkModel` replaces the constants with a seeded,
+replayable sampler with three layers of structure:
+
+*Per-edge base draws* (``hetero``): each link draws a persistent
+latency/bandwidth multiplier once, lognormal with sigma ``hetero``
+around the class constants — some links are just slower than others,
+forever.  At ``hetero=0`` every link's base equals the class constants.
+
+*Per-activation jitter* (``jitter``): every activation multiplies the
+link's cost by an independent median-1 lognormal, ``exp(jitter * z)``
+with ``z ~ N(0,1)`` — latency is multiplied, bandwidth divided, so the
+whole edge cost scales by the draw.
+
+*Markov transient slowdowns* (``straggler_rate``): each link carries a
+two-state chain (normal <-> slow).  A normal link enters the slow state
+with probability ``straggler_rate`` per activation and leaves it with
+probability ``straggler_exit``; while slow, latency is multiplied and
+bandwidth divided by ``straggler_slowdown``.  Bursty, *occasional*
+stragglers — the regime where async gossip strictly beats stop-and-wait
+even on an all-LAN fabric (Lian et al., AD-PSGD).
+
+Seeding and replay: every draw is a pure function of
+``(seed, edge, activation index)`` — a fresh ``np.random.Generator``
+keyed by that tuple — so a rebuilt model (same seed) replaying the same
+sequence of ledger calls produces bit-identical sampled times, in any
+interleaving of edges.  The Markov state is a fold over the keyed draws,
+so it replays too.  With all three knobs at zero, :meth:`sample` returns
+the class-constant arrays unchanged (bitwise), which is what lets a
+"sampled" ledger at zero rates reproduce the constant-profile ledger
+exactly.
+
+Consumed by :class:`~repro.topology.costs.CommLedger` (``link_model=``):
+gossip, exchange, and probe rounds all price sampled per-edge times, and
+the ledger folds each observation into per-edge EWMA *measured* costs
+that SkewScout's C(θ)/CM pricing reads in place of profile constants.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.topology.costs import LinkProfile
+
+Edge = Tuple[int, int]
+
+# draw-key tags: keep the per-edge base stream and the per-activation
+# stream disjoint (both are keyed under the same model seed)
+_TAG_BASE = 0x0B
+_TAG_ROUND = 0x0A
+
+
+@dataclass
+class _EdgeState:
+    """Mutable per-link sampling state (replayable: a pure fold over the
+    keyed draws, advanced once per activation)."""
+    lat_mult: float = 1.0     # persistent per-edge base draw (hetero)
+    bw_mult: float = 1.0
+    n: int = 0                # activations so far (the draw counter)
+    slow: bool = False        # Markov transient-slowdown state
+
+
+class LinkModel:
+    """Seeded per-link latency/bandwidth sampler (see module docstring).
+
+    ``sample`` maps a graph's per-edge class-constant (latency,
+    bandwidth) arrays to sampled arrays for one activation, advancing
+    each active edge's draw counter and Markov state.
+    """
+
+    def __init__(self, profile: LinkProfile, *, seed: int = 0,
+                 jitter: float = 0.0, hetero: float = 0.0,
+                 straggler_rate: float = 0.0, straggler_exit: float = 0.5,
+                 straggler_slowdown: float = 10.0):
+        assert jitter >= 0 and hetero >= 0, (jitter, hetero)
+        assert 0.0 <= straggler_rate <= 1.0, straggler_rate
+        assert 0.0 < straggler_exit <= 1.0, straggler_exit
+        assert straggler_slowdown >= 1.0, straggler_slowdown
+        self.profile = profile
+        self.seed = int(seed)
+        self.jitter = float(jitter)
+        self.hetero = float(hetero)
+        self.straggler_rate = float(straggler_rate)
+        self.straggler_exit = float(straggler_exit)
+        self.straggler_slowdown = float(straggler_slowdown)
+        self._edges: Dict[Edge, _EdgeState] = {}
+        # counters for the trainer's straggler/jitter extras
+        self.activations = 0
+        self.slow_activations = 0
+
+    @property
+    def stochastic(self) -> bool:
+        """False when every knob is zero — sampling is the identity and
+        the hot path can skip the per-edge draws entirely."""
+        return (self.jitter > 0 or self.hetero > 0
+                or self.straggler_rate > 0)
+
+    # ---- draws ----
+    def _rng(self, tag: int, e: Edge, n: int) -> np.random.Generator:
+        """A fresh generator keyed by (seed, tag, edge, draw index) —
+        the pure-function property that makes replay bit-identical."""
+        return np.random.default_rng([self.seed, tag, e[0], e[1], n])
+
+    def _state(self, e: Edge) -> _EdgeState:
+        st = self._edges.get(e)
+        if st is None:
+            st = _EdgeState()
+            if self.hetero > 0:
+                z = self._rng(_TAG_BASE, e, 0).standard_normal(2)
+                st.lat_mult = float(np.exp(self.hetero * z[0]))
+                st.bw_mult = float(np.exp(-self.hetero * z[1]))
+            self._edges[e] = st
+        return st
+
+    def _activate(self, e: Edge, st: _EdgeState) -> float:
+        """One activation of edge ``e``: returns the cost multiplier for
+        this round (jitter x transient slowdown) and advances the edge's
+        counter + Markov state."""
+        rng = self._rng(_TAG_ROUND, e, st.n)
+        st.n += 1
+        self.activations += 1
+        mult = 1.0
+        if self.jitter > 0:
+            mult *= float(np.exp(self.jitter * rng.standard_normal()))
+        if self.straggler_rate > 0:
+            if st.slow:
+                self.slow_activations += 1
+                mult *= self.straggler_slowdown
+                st.slow = float(rng.random()) >= self.straggler_exit
+            else:
+                st.slow = float(rng.random()) < self.straggler_rate
+        return mult
+
+    def sample(self, edges: Sequence[Edge], lat: np.ndarray,
+               bw: np.ndarray, active: np.ndarray
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """Sampled (latency, bandwidth) arrays for one activation of the
+        ``active`` edges, starting from the graph's class-constant
+        arrays.  Inactive edges keep the constants (their cost is masked
+        by the caller anyway) and do not advance their counters."""
+        if not self.stochastic:
+            return lat, bw
+        s_lat = lat.astype(np.float64).copy()
+        s_bw = bw.astype(np.float64).copy()
+        for n in np.flatnonzero(active):
+            e = edges[n]
+            st = self._state(e)
+            mult = self._activate(e, st)
+            s_lat[n] = lat[n] * st.lat_mult * mult
+            s_bw[n] = bw[n] * st.bw_mult / mult
+        return s_lat, s_bw
+
+    # ---- reporting ----
+    def slow_fraction(self) -> float:
+        """Fraction of activations that hit a straggler's slow state."""
+        return self.slow_activations / max(self.activations, 1)
+
+    def summary(self) -> Dict[str, float]:
+        return dict(jitter=self.jitter, hetero=self.hetero,
+                    straggler_rate=self.straggler_rate,
+                    straggler_slowdown=self.straggler_slowdown,
+                    activations=float(self.activations),
+                    slow_activations=float(self.slow_activations),
+                    slow_fraction=self.slow_fraction())
+
+
+def make_link_model(comm, profile: LinkProfile,
+                    seed: int = 0) -> Optional[LinkModel]:
+    """Build the :class:`LinkModel` a ``CommConfig`` asks for (``None``
+    for the constant-profile ledger).  The model draws from its own
+    keyed streams, so the link seed can never perturb anything else
+    seeded from the run seed (clique assignment, data order, init)."""
+    if comm.link_model == "constant":
+        return None
+    if comm.link_model != "sampled":
+        raise ValueError(
+            f"unknown link_model {comm.link_model!r} (constant | sampled)")
+    return LinkModel(profile, seed=seed, jitter=comm.link_jitter,
+                     hetero=comm.link_hetero,
+                     straggler_rate=comm.straggler_rate,
+                     straggler_exit=comm.straggler_exit,
+                     straggler_slowdown=comm.straggler_slowdown)

@@ -3,12 +3,11 @@ import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
 import sys
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-import jax, jax.numpy as jnp, numpy as np
-import dataclasses
+import jax
+import jax.numpy as jnp
 from repro.configs.base import MoEConfig
 from repro.models import moe as moe_mod
 from repro.models import moe_ep
-from repro.models.shard_hints import activation_sharding
 
 mesh = jax.make_mesh((4, 2), ("data", "model"))
 m = MoEConfig(n_experts=4, n_shared=0, top_k=2, d_ff_expert=16,

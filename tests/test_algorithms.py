@@ -1,6 +1,5 @@
 """Semantics of the four decentralized algorithms, validated step-by-step on
 a tiny quadratic model where every quantity is analytically checkable."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

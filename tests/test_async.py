@@ -2,7 +2,6 @@
 async mode), bounded-staleness AD-PSGD mixing, per-class re-wiring
 handshake latency, and the sync-vs-async acceptance claim — same
 schedule, accuracy within noise, strictly lower simulated wall-clock."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

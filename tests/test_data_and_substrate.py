@@ -1,5 +1,4 @@
 """Data pipeline, synthetic generators, optimizer, checkpointing."""
-import os
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,435 @@
+"""Stochastic heterogeneous links: seeded determinism of the LinkModel,
+exact constant-profile reproduction at zero rates, transient stragglers
+(async strictly beats sync on an all-LAN fabric), amortized handshake
+invariants, EWMA measured-cost convergence, SkewScout's measured CM
+denominator, and the shared greedy-clique helper's seed isolation."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs.base import CommConfig
+from repro.topology import (LINK_PROFILES, CommLedger, LinkModel,
+                            d_cliques, fully_connected,
+                            greedy_clique_assignment, make_link_model,
+                            ring, time_varying_d_cliques)
+from repro.topology.graphs import _build
+
+
+def exclusive_hist(n_nodes: int, n_classes: int) -> np.ndarray:
+    hist = np.zeros((n_nodes, n_classes))
+    for k in range(n_nodes):
+        hist[k, k % n_classes] = 100
+    return hist
+
+
+def ring_plus(n: int, extra, cls: str):
+    """ring(n) plus one extra edge of the given link class."""
+    cls_map = {e: "lan" for e in ring(n).edges}
+    cls_map[(min(extra), max(extra))] = cls
+    edges = sorted(cls_map)
+    return _build(f"ring+{cls}", n, edges, [cls_map[e] for e in edges])
+
+
+# ---------------------------------------------------------------------------
+# seeded determinism & replay
+# ---------------------------------------------------------------------------
+
+def test_link_model_same_seed_bit_identical_across_rebuilds():
+    """Acceptance: same key => bit-identical sampled round times when a
+    fresh LinkModel + ledger replay the same sequence of calls."""
+    prof = LINK_PROFILES["datacenter"]
+    sched = time_varying_d_cliques(exclusive_hist(9, 3), seed=0)
+
+    def build():
+        lm = LinkModel(prof, seed=3, jitter=0.3, hetero=0.2,
+                       straggler_rate=0.05)
+        led = CommLedger(sched, prof, async_mode=True, link_model=lm)
+        for t in range(3 * sched.period):
+            led.record_gossip(1e4, t=t, staleness=1)
+            led.record_exchange(100.0)
+        return led
+
+    a, b = build(), build()
+    assert a.sim_time_s == b.sim_time_s          # bitwise, not approx
+    assert a.edge_clocks() == b.edge_clocks()
+    np.testing.assert_array_equal(a.node_busy_s, b.node_busy_s)
+    assert a.links.slow_activations == b.links.slow_activations
+
+
+def test_link_model_different_seed_differs():
+    prof = LINK_PROFILES["datacenter"]
+    times = set()
+    for seed in (0, 1, 2):
+        lm = LinkModel(prof, seed=seed, jitter=0.5)
+        led = CommLedger(ring(6), prof, link_model=lm)
+        for t in range(10):
+            led.record_gossip(1e4, t=t)
+        times.add(led.sim_time_s)
+    assert len(times) == 3, times
+
+
+# ---------------------------------------------------------------------------
+# zero rates == constant profile, exactly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("async_mode", [False, True],
+                         ids=["sync", "async"])
+def test_zero_rate_sampled_ledger_equals_constant_exactly(async_mode):
+    """Acceptance: jitter = straggler = hetero = 0 and amortize_window=1
+    must reproduce the constant-profile ledger's totals exactly —
+    gossip, exchanges, probes, and schedule rotation included."""
+    prof = LINK_PROFILES["geo-wan"]
+    sched = time_varying_d_cliques(exclusive_hist(9, 3), seed=0)
+    const = CommLedger(sched, prof, rewire_floats_per_edge=32.0,
+                       async_mode=async_mode)
+    sampled = CommLedger(sched, prof, rewire_floats_per_edge=32.0,
+                         async_mode=async_mode,
+                         link_model=LinkModel(prof, seed=7),
+                         amortize_window=1)
+    probe_edge = const.topology.edges[0]
+    for t in range(2 * sched.period):
+        for led in (const, sampled):
+            led.record_gossip(500.0, t=t,
+                              staleness=1 if async_mode else None)
+            led.record_exchange(40.0)
+            led.record_probe([probe_edge], 25.0)
+    assert sampled.sim_time_s == const.sim_time_s
+    assert sampled.priced_cost() == const.priced_cost()
+    assert sampled.lan_floats == const.lan_floats
+    assert sampled.wan_floats == const.wan_floats
+    assert sampled.rewire_time_s == const.rewire_time_s
+    assert sampled.edge_clocks() == const.edge_clocks()
+
+
+# ---------------------------------------------------------------------------
+# transient stragglers: the async headline claim
+# ---------------------------------------------------------------------------
+
+def test_straggler_async_strictly_beats_sync_on_lan_fabric():
+    """With straggler_rate > 0 on an otherwise-LAN fabric, async wall
+    clock is strictly below sync for identical traffic: sync pays every
+    round's slowest link (sum of per-round maxes), async only the hit
+    link's own clock (max of per-edge sums)."""
+    prof = LINK_PROFILES["datacenter"]
+    times = {}
+    for name, async_mode in (("sync", False), ("async", True)):
+        lm = LinkModel(prof, seed=7, straggler_rate=0.1,
+                       straggler_slowdown=25.0)
+        led = CommLedger(ring(10), prof, async_mode=async_mode,
+                         link_model=lm)
+        for t in range(50):
+            led.record_gossip(1e5, t=t,
+                              staleness=2 if async_mode else None)
+        times[name] = led.sim_time_s
+        assert lm.slow_activations > 0       # the chain actually fired
+    assert times["async"] < times["sync"], times
+
+
+def test_straggler_gap_opens_only_when_stragglers_exist():
+    """On an all-LAN fabric the sync/async ratio is ~1 without
+    stragglers (nothing to overlap: every link costs the same) and
+    opens wide once transient slowdowns appear — the claim the
+    fig_topology straggler sweep plots.  (The ratio is *not* monotone
+    in the rate: at saturating rates every edge is slow at once and
+    async's per-edge sums inflate too.)"""
+    prof = LINK_PROFILES["datacenter"]
+    ratios = {}
+    for rate in (0.0, 0.1):
+        t = {}
+        for name, async_mode in (("sync", False), ("async", True)):
+            lm = LinkModel(prof, seed=11, straggler_rate=rate,
+                           straggler_slowdown=25.0)
+            led = CommLedger(ring(10), prof, async_mode=async_mode,
+                             link_model=lm)
+            for r in range(60):
+                led.record_gossip(1e5, t=r,
+                                  staleness=2 if async_mode else None)
+            t[name] = led.sim_time_s
+        ratios[rate] = t["sync"] / t["async"]
+    # rate 0: only the bounded-staleness amortization of the (tiny) LAN
+    # latency separates the modes — ratio within ~10% of 1
+    assert ratios[0.0] == pytest.approx(1.0, abs=0.12), ratios
+    assert ratios[0.1] > 2.0 * ratios[0.0], ratios
+
+
+def test_markov_slow_fraction_tracks_stationary_distribution():
+    """Two-state chain: stationary slow fraction = rate/(rate+exit)."""
+    prof = LINK_PROFILES["datacenter"]
+    lm = LinkModel(prof, seed=0, straggler_rate=0.2, straggler_exit=0.4)
+    led = CommLedger(ring(8), prof, link_model=lm)
+    for t in range(600):
+        led.record_gossip(100.0, t=t)
+    expect = 0.2 / (0.2 + 0.4)
+    assert abs(lm.slow_fraction() - expect) < 0.08, \
+        (lm.slow_fraction(), expect)
+
+
+# ---------------------------------------------------------------------------
+# amortized handshake invariants
+# ---------------------------------------------------------------------------
+
+def test_amortized_handshake_conserves_total_and_flattens_spike():
+    """A persisting rung switch pays the same total handshake whatever
+    the window, but the per-round spike flattens: the first round after
+    the switch is strictly cheaper with W > 1, and the balance drains
+    to zero within W activations."""
+    prof = LINK_PROFILES["geo-wan"]
+    first_round_delta, totals = {}, {}
+    for W in (1, 4):
+        led = CommLedger(ring(6), prof, amortize_window=W)
+        led.record_gossip(100.0, t=0)
+        led.switch_schedule(ring_plus(6, (0, 3), "wan"))
+        before = led.sim_time_s
+        led.record_gossip(100.0, t=1)
+        first_round_delta[W] = led.sim_time_s - before
+        for t in range(2, 10):
+            led.record_gossip(100.0, t=t)
+        assert led.pending_handshake_s == pytest.approx(0.0, abs=1e-15)
+        totals[W] = led.rewire_time_s
+    # total handshake seconds booked are window-independent
+    assert totals[4] == pytest.approx(totals[1])
+    assert totals[1] >= prof.handshake("wan")
+    # ... but the switch-round spike is flattened by the window
+    assert first_round_delta[4] < first_round_delta[1], first_round_delta
+    # un-amortized spike carries the whole WAN handshake at once
+    assert first_round_delta[1] - first_round_delta[4] > \
+        0.5 * prof.handshake("wan")
+
+
+def test_thrashing_forfeits_balance_and_stays_expensive():
+    """Flapping between fabrics drops links mid-window: the unpaid
+    balance is forfeited at teardown, so amortization gives thrashing
+    no discount — same rewire seconds as the un-amortized ledger."""
+    prof = LINK_PROFILES["geo-wan"]
+    g1, g2 = ring(6), ring_plus(6, (0, 3), "wan")
+    totals, busy = {}, {}
+    for W in (1, 4):
+        led = CommLedger(g1, prof, rewire_floats_per_edge=16.0,
+                         amortize_window=W)
+        led.record_gossip(100.0, t=0)
+        for t in range(1, 9):
+            led.switch_schedule(g2 if t % 2 else g1)
+            led.record_gossip(100.0, t=t)
+        totals[W] = led.rewire_time_s
+        busy[W] = led.node_busy_s.copy()
+        # conservation: lan + wan covers every priced float, with the
+        # re-wiring control-plane floats booked too
+        assert led.total_floats == pytest.approx(
+            led.lan_floats + led.wan_floats)
+        assert led.rewire_floats > 0
+    assert totals[4] == pytest.approx(totals[1]), totals
+    # forfeited balances land on the endpoints' busy accounting too, so
+    # per-node busy/idle stays comparable across amortize_window values
+    np.testing.assert_allclose(busy[4], busy[1], rtol=1e-9)
+
+
+def test_amortize_window_validation():
+    with pytest.raises(AssertionError):
+        CommLedger(ring(4), LINK_PROFILES["uniform"], amortize_window=0)
+
+
+# ---------------------------------------------------------------------------
+# EWMA measured costs
+# ---------------------------------------------------------------------------
+
+def test_ewma_measured_cost_converges_to_sampling_mean():
+    """The per-edge EWMA price converges to the model's true sampling
+    mean: a median-1 lognormal with sigma s has mean exp(s^2/2), so the
+    measured seconds/float approaches exp(s^2/2)/bandwidth."""
+    prof = LINK_PROFILES["datacenter"]
+    sigma = 0.3
+    lm = LinkModel(prof, seed=5, jitter=sigma)
+    led = CommLedger(ring(4), prof, link_model=lm, ewma_alpha=0.05)
+    for t in range(800):
+        led.record_gossip(1e4, t=t)
+    expect = float(np.exp(sigma ** 2 / 2)) / prof.lan_bandwidth
+    for e in led.topology.edges:
+        got = led.measured_price_per_float(e, "lan")
+        assert abs(got - expect) / expect < 0.2, (e, got, expect)
+
+
+def test_measured_costs_fall_back_to_profile_until_observed():
+    prof = LINK_PROFILES["geo-wan"]
+    lm = LinkModel(prof, seed=0, jitter=0.4)
+    led = CommLedger(hier6 := ring_plus(6, (0, 3), "wan"), prof,
+                     link_model=lm)
+    # nothing observed yet: measured == profile-derived exactly
+    m = 1e6
+    assert led.measured_full_exchange_cost(m) == pytest.approx(
+        led.full_exchange_cost(m))
+    assert led.measured_full_exchange_time(m) == pytest.approx(
+        led.full_exchange_time(m))
+    for t in range(50):
+        led.record_gossip(1e4, t=t)
+    # after observations the measured denominator departs the constants
+    assert led.measured_full_exchange_cost(m) != pytest.approx(
+        led.full_exchange_cost(m), rel=1e-6)
+    assert len(hier6.edges) == len(led.topology.edges)
+
+
+def test_sync_window_numerator_matches_measured_cm_currency():
+    """Sync C(θ) under a link model is priced in *sampled* currency
+    (floats at each activation's sampled bandwidth): slowdowns inflate
+    it over the constant-priced cost, zero rates reproduce it exactly,
+    and the window/CM ratio is therefore unit-consistent with the
+    EWMA-measured denominator instead of systematically deflated."""
+    from repro.core.skewscout import SkewScout
+    prof = LINK_PROFILES["datacenter"]
+    lm = LinkModel(prof, seed=3, straggler_rate=0.2,
+                   straggler_slowdown=25.0)
+    led = CommLedger(ring(6), prof, link_model=lm)
+    for t in range(60):
+        led.record_gossip(1e4, t=t)
+    assert led.sampled_priced_cost() > 1.5 * led.priced_cost()
+    scout = SkewScout(CommConfig(strategy="gaia", skewscout=True),
+                      "gaia", 1000, lambda *a: 0.0, ledger=led)
+    assert scout._ledger_cost() == led.sampled_priced_cost()
+    # zero rates: sampled currency degenerates to the constant pricing
+    led0 = CommLedger(ring(6), prof, link_model=LinkModel(prof, seed=3))
+    led0.record_gossip(1e4, t=0)
+    assert led0.sampled_priced_cost() == led0.priced_cost()
+
+
+def test_skewscout_cm_uses_measured_costs_under_link_model():
+    """With a link model on the ledger, the scout's CM denominator must
+    re-price from the EWMA measured costs on the pinned fabric."""
+    from repro.core.skewscout import SkewScout
+    prof = LINK_PROFILES["geo-wan"]
+    lm = LinkModel(prof, seed=2, jitter=0.4)
+    fabric = ring_plus(6, (0, 3), "wan")
+    led = CommLedger(fabric, prof, link_model=lm)
+    comm = CommConfig(strategy="gaia", skewscout=True)
+    scout = SkewScout(comm, "gaia", 1000, lambda *a: 0.0, ledger=led,
+                      cm_fabric=fully_connected(6))
+    before = scout._cm()
+    assert before == pytest.approx(
+        led.measured_full_exchange_cost(1000.0,
+                                        fabric=fully_connected(6)))
+    for t in range(40):
+        led.record_gossip(1e4, t=t)
+    # the denominator tracked the observations (no pinned constant)
+    assert scout._cm() != pytest.approx(before, rel=1e-6)
+    assert scout._cm() == pytest.approx(
+        led.measured_full_exchange_cost(1000.0,
+                                        fabric=fully_connected(6)))
+
+
+# ---------------------------------------------------------------------------
+# clique assignment: shared helper, explicit seed, link-seed isolation
+# ---------------------------------------------------------------------------
+
+def test_greedy_clique_assignment_shared_and_seeded():
+    """Both D-Cliques builders route through the one public helper: the
+    same (hist, seed) yields the same cliques, an explicit precomputed
+    assignment overrides, and a different seed may differ."""
+    hist = exclusive_hist(10, 5)
+    asg = greedy_clique_assignment(hist, seed=0)
+    assert d_cliques(hist, seed=0).cliques == \
+        tuple(tuple(c) for c in asg)
+    tv = time_varying_d_cliques(hist, seed=0)
+    assert tv.at(0).cliques == tuple(tuple(c) for c in asg)
+    # explicit assignment wins over the seed
+    override = [sorted(range(0, 5)), sorted(range(5, 10))]
+    topo = d_cliques(hist, seed=123, cliques=override)
+    assert topo.cliques == tuple(tuple(c) for c in override)
+
+
+def test_link_model_draws_cannot_perturb_clique_assignment():
+    """The stochastic link model draws from keyed streams, not the
+    global/default RNG state — interleaving link sampling with clique
+    building must not change the assignment."""
+    hist = exclusive_hist(9, 3)
+    clean = greedy_clique_assignment(hist, seed=0)
+    prof = LINK_PROFILES["geo-wan"]
+    lm = LinkModel(prof, seed=0, jitter=0.5, straggler_rate=0.3)
+    led = CommLedger(ring(9), prof, link_model=lm)
+    led.record_gossip(1e5, t=0)              # burn link-model draws
+    assert greedy_clique_assignment(hist, seed=0) == clean
+    led.record_gossip(1e5, t=1)
+    assert d_cliques(hist, seed=0).cliques == \
+        tuple(tuple(c) for c in clean)
+
+
+# ---------------------------------------------------------------------------
+# config plumbing + end-to-end acceptance
+# ---------------------------------------------------------------------------
+
+def test_make_link_model_registry():
+    prof = LINK_PROFILES["uniform"]
+    assert make_link_model(CommConfig(), prof) is None
+    lm = make_link_model(CommConfig(link_model="sampled", link_jitter=0.2,
+                                    straggler_rate=0.1), prof, seed=4)
+    assert isinstance(lm, LinkModel) and lm.seed == 4
+    assert lm.jitter == 0.2 and lm.straggler_rate == 0.1
+    with pytest.raises(ValueError, match="link_model"):
+        make_link_model(CommConfig(link_model="quantum"), prof)
+
+
+def test_trainer_straggler_async_beats_sync_at_equal_accuracy():
+    """Acceptance: straggler_rate > 0 on an otherwise-LAN fabric —
+    async AD-PSGD's simulated wall-clock is strictly below sync
+    D-PSGD's at accuracy within noise, end-to-end through the trainer,
+    and the run reports its straggler/jitter extras."""
+    from repro.configs.cnn_zoo import CNN_ZOO
+    from repro.core.trainer import train_decentralized
+    from repro.data.synthetic import synth_images
+    n_nodes, n_classes = 6, 3
+    ds = synth_images(360, seed=0, n_classes=n_classes)
+    parts = []
+    for k in range(n_nodes):
+        i = np.where(ds.y == k % n_classes)[0][k // n_classes::2]
+        parts.append((ds.x[i], ds.y[i]))
+    steps, runs = 12, {}
+    for name, async_gossip in (("dpsgd", False), ("adpsgd", True)):
+        comm = CommConfig(strategy=name, topology="ring",
+                          link_profile="datacenter",
+                          link_model="sampled", straggler_rate=0.2,
+                          straggler_slowdown=25.0,
+                          async_gossip=async_gossip, max_staleness=2)
+        runs[name] = train_decentralized(
+            CNN_ZOO["gn-lenet"], name, parts, (ds.x, ds.y), comm=comm,
+            steps=steps, batch=5, eval_every=steps)
+    sync, asy = runs["dpsgd"], runs["adpsgd"]
+    assert asy.sim_time_s < sync.sim_time_s, \
+        (asy.sim_time_s, sync.sim_time_s)
+    assert asy.val_acc > sync.val_acc - 0.15, (asy.val_acc, sync.val_acc)
+    for r in (sync, asy):
+        lmx = r.extras["link_model"]
+        assert lmx["straggler_rate"] == 0.2
+        assert lmx["activations"] > 0
+        assert 0.0 <= lmx["slow_fraction"] <= 1.0
+    assert sync.extras["link_model"]["slow_activations"] > 0
+    # zero-rate sampled trainer run must price like the constant ledger
+    base, samp = {}, {}
+    for tag, link_model in (("const", "constant"), ("samp", "sampled")):
+        comm = CommConfig(strategy="dpsgd", topology="ring",
+                          link_profile="datacenter",
+                          link_model=link_model)
+        r = train_decentralized(
+            CNN_ZOO["gn-lenet"], "dpsgd", parts, (ds.x, ds.y), comm=comm,
+            steps=3, batch=5, eval_every=3)
+        (base if tag == "const" else samp).update(
+            sim=r.sim_time_s, wan=r.comm_wan_floats,
+            lan=r.comm_lan_floats)
+    assert samp["sim"] == base["sim"]
+    assert samp["lan"] == base["lan"] and samp["wan"] == base["wan"]
+
+
+def test_ledger_summary_reports_link_and_amortization_state():
+    prof = LINK_PROFILES["geo-wan"]
+    lm = LinkModel(prof, seed=0, jitter=0.1, straggler_rate=0.05)
+    led = CommLedger(ring(6), prof, link_model=lm, amortize_window=3)
+    led.record_gossip(1e4, t=0)
+    s = led.summary()
+    assert s["amortize_window"] == 3.0
+    assert s["link_straggler_rate"] == pytest.approx(0.05)
+    assert s["link_activations"] > 0
+    assert "pending_handshake_s" in s
+
+
+def test_dataclass_replace_keeps_link_knobs():
+    comm = CommConfig(link_model="sampled", straggler_rate=0.3,
+                      amortize_window=5)
+    c2 = dataclasses.replace(comm, topology="ring")
+    assert c2.link_model == "sampled" and c2.amortize_window == 5

@@ -12,9 +12,8 @@ pytest.importorskip("hypothesis",
                            "test_partition_basic.py")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.partition import (label_distribution, partition_80_20,
-                                  partition_by_region, partition_label_skew,
-                                  skew_index)
+from repro.core.partition import (label_distribution,
+                                  partition_label_skew, skew_index)
 
 
 @st.composite

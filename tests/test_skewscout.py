@@ -1,14 +1,12 @@
 """SkewScout mechanism tests: tuner behaviour on the Eq.1 objective, and the
 travel/adapt loop against synthetic accuracy-loss landscapes."""
-import math
 
 import numpy as np
 import pytest
 
 from repro.configs.base import CommConfig
 from repro.core.skewscout import SkewScout, THETA_LADDERS
-from repro.core.tuners import (HillClimb, SimulatedAnnealing,
-                               StochasticHillClimb, make_tuner)
+from repro.core.tuners import HillClimb, make_tuner
 
 
 def run_tuner(tuner, objective, steps=30):
