@@ -5,7 +5,7 @@ BENCH_JSON_DIR ?= out
 export BENCH_JSON_DIR
 
 .PHONY: test test-fast bench-smoke bench-smoke-async bench-smoke-links \
-	dryrun-smoke lint
+	bench-smoke-kernels dryrun-smoke lint
 
 # tier-1 verify: the full test suite
 test:
@@ -19,6 +19,14 @@ test-fast:
 # also lands as $(BENCH_JSON_DIR)/BENCH_<name>.json (the CI artifact)
 bench-smoke:
 	$(PYTHON) -m benchmarks.run --only kernels,fig4 --json $(BENCH_JSON_DIR)
+
+# kernel-dispatch smoke + gate: re-measure the kernels bench, then
+# assert the dispatched path never loses to the jnp oracle (ratio
+# <= 1 + noise band) and that the headline ops (neighbor_mix,
+# group_norm) beat the old interpret path by the required speedup
+bench-smoke-kernels:
+	$(PYTHON) -m benchmarks.run --only kernels --json $(BENCH_JSON_DIR)
+	$(PYTHON) -m benchmarks.report --gate $(BENCH_JSON_DIR)/BENCH_kernels.json
 
 # asynchronous-gossip backend smoke: sync D-PSGD vs AD-PSGD on the
 # geo-wan fabric; asserts the async ledger strictly beats sync wall-clock

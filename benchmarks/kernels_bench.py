@@ -1,7 +1,20 @@
-"""Kernel microbenchmarks: us_per_call for each Pallas kernel (interpret
-mode on CPU — structural check; real perf is the TPU target) and the jnp
-twin used by the production path."""
+"""Kernel microbenchmarks: three rows per op.
+
+* ``kernel/<op>``  — the production path: whatever the backend-aware
+  dispatcher (``kernels/dispatch.py``) picks for this op/shape/backend.
+* ``oracle/<op>``  — the jnp twin from ``kernels/ref.py``, timed
+  directly (the dispatch candidate the kernel row must never lose to).
+* ``interp/<op>``  — the pre-dispatch path: Pallas forced through
+  ``interpret=True`` with the old hardcoded blocks.  Kept as the
+  baseline the overhaul is measured against (``report.py --gate``
+  asserts kernel/oracle <= 1+band and the headline interp speedups).
+
+The interp rows are expensive by construction (interpret mode loses by
+5-170x at these sizes), so they use fewer timing iterations.
+"""
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -9,9 +22,15 @@ import jax.numpy as jnp
 from repro.kernels import ops, ref
 from repro.models.attention import chunked_attention
 
-from benchmarks.common import timed
+from benchmarks.common import save_bench_json, timed
 
 KEY = jax.random.PRNGKey(0)
+
+
+def _bench(rows, base, dispatched, oracle, interp):
+    rows.append((f"kernel/{base}", timed(dispatched)))
+    rows.append((f"oracle/{base}", timed(oracle)))
+    rows.append((f"interp/{base}", timed(interp, n_warmup=1, n_iter=3)))
 
 
 def run(quick: bool = False):
@@ -21,13 +40,15 @@ def run(quick: bool = False):
     k = jax.random.normal(jax.random.PRNGKey(1), (B, H, T, D))
     v = jax.random.normal(jax.random.PRNGKey(2), (B, H, T, D))
 
-    fa = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, block_q=64,
-                                                     block_k=64))
-    rows.append(("kernel/flash_attention_interp",
-                 timed(lambda: jax.block_until_ready(fa(q, k, v)))))
+    fa = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v))
     fr = jax.jit(lambda q, k, v: ref.flash_attention_ref(q, k, v))
-    rows.append(("oracle/attention_materialized",
-                 timed(lambda: jax.block_until_ready(fr(q, k, v)))))
+    fi = jax.jit(lambda q, k, v: ops.flash_attention(q, k, v, block_q=64,
+                                                     block_k=64,
+                                                     interpret=True))
+    _bench(rows, "flash_attention",
+           lambda: jax.block_until_ready(fa(q, k, v)),
+           lambda: jax.block_until_ready(fr(q, k, v)),
+           lambda: jax.block_until_ready(fi(q, k, v)))
     qb = q.transpose(0, 2, 1, 3)
     ca = jax.jit(lambda q, k, v: chunked_attention(q, k, v, chunk=64))
     rows.append(("prod/chunked_attention_jnp",
@@ -39,18 +60,37 @@ def run(quick: bool = False):
     vv = jax.random.normal(KEY, (n,))
     ww = jax.random.normal(jax.random.PRNGKey(3), (n,)) * 0.3
     gs = jax.jit(lambda v, w: ops.gaia_select(v, w, 0.5))
-    rows.append(("kernel/gaia_select_1M",
-                 timed(lambda: jax.block_until_ready(gs(vv, ww)))))
     gr = jax.jit(lambda v, w: ref.gaia_select_ref(v, w, 0.5))
-    rows.append(("oracle/gaia_select_1M",
-                 timed(lambda: jax.block_until_ready(gr(vv, ww)))))
+    gi = jax.jit(lambda v, w: ops.gaia_select(v, w, 0.5, block_rows=64,
+                                              interpret=True))
+    _bench(rows, "gaia_select_1M",
+           lambda: jax.block_until_ready(gs(vv, ww)),
+           lambda: jax.block_until_ready(gr(vv, ww)),
+           lambda: jax.block_until_ready(gi(vv, ww)))
 
     dg = jax.jit(lambda v: ops.dgc_sparsify(v, jnp.float32(0.999)))
-    rows.append(("kernel/dgc_sparsify_1M",
-                 timed(lambda: jax.block_until_ready(dg(vv)))))
+    dr = jax.jit(lambda v: ref.dgc_sparsify_ref(v, jnp.float32(0.999)))
+    di = jax.jit(lambda v: ops.dgc_sparsify(v, jnp.float32(0.999),
+                                            block_rows=64, interpret=True))
+    _bench(rows, "dgc_sparsify_1M",
+           lambda: jax.block_until_ready(dg(vv)),
+           lambda: jax.block_until_ready(dr(vv)),
+           lambda: jax.block_until_ready(di(vv)))
     dq = jax.jit(lambda v: ref.dgc_threshold_ref(v, 0.999))
     rows.append(("oracle/dgc_quantile_1M",
                  timed(lambda: jax.block_until_ready(dq(vv)))))
+
+    seed = jnp.int32(7)
+    rk = jax.jit(lambda v: ops.rand_k_sparsify(v, jnp.float32(0.001), seed))
+    rr = jax.jit(lambda v: ref.rand_k_select_ref(v, jnp.float32(0.001),
+                                                 seed))
+    ri = jax.jit(lambda v: ops.rand_k_sparsify(v, jnp.float32(0.001), seed,
+                                               block_rows=64,
+                                               interpret=True))
+    _bench(rows, "rand_k_1M",
+           lambda: jax.block_until_ready(rk(vv)),
+           lambda: jax.block_until_ready(rr(vv)),
+           lambda: jax.block_until_ready(ri(vv)))
 
     from repro.topology import ring
     topo = ring(8)
@@ -58,24 +98,39 @@ def run(quick: bool = False):
                               topo.neighbor_arrays())
     xs = jax.random.normal(KEY, (8, 1 << 17))        # 8 nodes x 128k params
     nm = jax.jit(lambda x: ops.neighbor_mix(x, nbr_idx, nbr_w, self_w))
-    rows.append(("kernel/neighbor_mix_ring8_128k",
-                 timed(lambda: jax.block_until_ready(nm(xs)))))
+    nr = jax.jit(lambda x: ref.neighbor_mix_padded_ref(x, nbr_idx, nbr_w,
+                                                       self_w))
+    ni = jax.jit(lambda x: ops.neighbor_mix(x, nbr_idx, nbr_w, self_w,
+                                            block_rows=64, interpret=True))
+    _bench(rows, "neighbor_mix_ring8_128k",
+           lambda: jax.block_until_ready(nm(xs)),
+           lambda: jax.block_until_ready(nr(xs)),
+           lambda: jax.block_until_ready(ni(xs)))
     W = jnp.asarray(topo.mixing, jnp.float32)
-    nr = jax.jit(lambda x: ref.neighbor_mix_ref(x, W))
+    nd = jax.jit(lambda x: ref.neighbor_mix_ref(x, W))
     rows.append(("oracle/neighbor_mix_dense",
-                 timed(lambda: jax.block_until_ready(nr(xs)))))
+                 timed(lambda: jax.block_until_ready(nd(xs)))))
 
-    x = jax.random.normal(KEY, (16, 16, 16, 64))
+    # per-node CIFAR batch at a late ResNet stage: many samples, small
+    # feature maps — the GroupNorm shape gossip training actually runs
+    x = jax.random.normal(KEY, (128, 8, 8, 64))
     sc, bi = jnp.ones(64), jnp.zeros(64)
     gn = jax.jit(lambda x: ops.group_norm(x, sc, bi, group_size=2))
-    rows.append(("kernel/group_norm",
-                 timed(lambda: jax.block_until_ready(gn(x)))))
     gnr = jax.jit(lambda x: ref.group_norm_ref(x, sc, bi, group_size=2))
-    rows.append(("oracle/group_norm",
-                 timed(lambda: jax.block_until_ready(gnr(x)))))
+    gni = jax.jit(lambda x: ops.group_norm(x, sc, bi, group_size=2,
+                                           interpret=True))
+    _bench(rows, "group_norm",
+           lambda: jax.block_until_ready(gn(x)),
+           lambda: jax.block_until_ready(gnr(x)),
+           lambda: jax.block_until_ready(gni(x)))
     return [dict(name=n, us_per_call=u) for n, u in rows]
 
 
 if __name__ == "__main__":
-    for r in run():
+    out = run()
+    for r in out:
         print(f"{r['name']},{r['us_per_call']:.1f},")
+    # standalone runs land the same artifact the run.py --json path
+    # emits (respects $BENCH_JSON_DIR; no-op when unset)
+    if os.environ.get("BENCH_JSON_DIR"):
+        print("wrote", save_bench_json("kernels", out))

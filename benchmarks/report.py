@@ -5,12 +5,32 @@
 - experiments/perf/perf_log.jsonl    -> §Perf iteration log
 
   PYTHONPATH=src python -m benchmarks.report
+
+Bench-trajectory modes (the per-commit ``BENCH_*.json`` artifacts CI
+uploads as ``bench-json-<sha>``):
+
+  # cross-commit trend table over any set of downloaded artifacts
+  python -m benchmarks.report --trend 'artifacts/*/BENCH_*.json'
+
+  # enforcement: fail when the kernels bench regresses
+  python -m benchmarks.report --gate out/BENCH_kernels.json \
+      [--baseline prev/BENCH_kernels.json] [--noise-band 0.5] \
+      [--min-speedup 8]
+
+The gate holds the kernel-overhaul line: every ``kernel/<op>`` row
+(the dispatched production path) must be <= its ``oracle/<op>`` jnp
+twin times (1 + noise band); the headline ops (``neighbor_mix``,
+``group_norm``) must additionally beat their ``interp/<op>`` old-path
+rows by ``--min-speedup``; and with ``--baseline`` no kernel row may
+regress beyond the noise band against the prior commit's artifact.
 """
 from __future__ import annotations
 
+import argparse
 import glob
 import json
 import os
+import sys
 
 ROOT = os.path.join(os.path.dirname(__file__), "..")
 COMBOS = os.path.join(ROOT, "experiments", "dryrun", "combos2")   # metric v2
@@ -308,5 +328,157 @@ def main():
     print(f"wrote {out}")
 
 
-if __name__ == "__main__":
+# ---------------------------------------------------- bench trajectory
+
+# the gate's headline ops: the dispatched path must beat the old
+# interpret path by --min-speedup on these (ISSUE 7 acceptance)
+HEADLINE_SPEEDUP_OPS = ("neighbor_mix_ring8_128k", "group_norm")
+
+
+def _load_bench(path: str) -> dict:
+    with open(path) as f:
+        data = json.load(f)
+    return {r["name"]: float(r["us_per_call"]) for r in data.get("rows", [])
+            if "us_per_call" in r}
+
+
+def _bench_files(spec: str):
+    """Expand a --trend/--gate spec: a file, a directory (its
+    BENCH_*.json members), or a glob."""
+    if os.path.isdir(spec):
+        return sorted(glob.glob(os.path.join(spec, "BENCH_*.json")))
+    hits = sorted(glob.glob(spec))
+    return hits
+
+
+def trend(spec: str) -> int:
+    """Cross-commit trend table: one section per bench name, one row per
+    (commit, timestamp), columns = that bench's row names (kernels) or
+    wall time + headline (experiment benches)."""
+    files = _bench_files(spec)
+    if not files:
+        print(f"no BENCH_*.json matched {spec!r}", file=sys.stderr)
+        return 1
+    by_bench = {}
+    for p in files:
+        try:
+            with open(p) as f:
+                data = json.load(f)
+        except (OSError, ValueError):
+            continue
+        by_bench.setdefault(data.get("name", "?"), []).append(data)
+    for name, records in sorted(by_bench.items()):
+        records.sort(key=lambda d: d.get("timestamp", 0.0))
+        print(f"## bench trend: {name}\n")
+        if name == "kernels":
+            cols = sorted({r["name"] for d in records
+                           for r in d.get("rows", [])
+                           if r["name"].startswith("kernel/")})
+            print("| commit | " + " | ".join(
+                c.split("/", 1)[1] + " us" for c in cols) + " |")
+            print("|---|" + "---|" * len(cols))
+            for d in records:
+                rows = {r["name"]: r.get("us_per_call") for r in d["rows"]}
+                print("| " + (d.get("commit", "")[:8] or "?") + " | " +
+                      " | ".join(f"{rows[c]:.0f}" if c in rows else ""
+                                 for c in cols) + " |")
+        else:
+            print("| commit | wall ms | headline |")
+            print("|---|---|---|")
+            for d in records:
+                print(f"| {(d.get('commit', '')[:8] or '?')} | "
+                      f"{d.get('us_per_call', 0.0) / 1e3:.0f} | "
+                      f"{d.get('derived', '')} |")
+        print()
+    return 0
+
+
+def gate(path: str, baseline: str = None, noise_band: float = 0.5,
+         min_speedup: float = 8.0) -> int:
+    """Fail (exit 1) when the kernels bench regresses — see module
+    docstring for the three rules."""
+    files = _bench_files(path)
+    kern = [p for p in files if p.endswith("BENCH_kernels.json")]
+    if not kern:
+        print(f"gate: no BENCH_kernels.json under {path!r}",
+              file=sys.stderr)
+        return 1
+    rows = _load_bench(kern[0])
+    failures = []
+    checked = 0
+    for name, us in sorted(rows.items()):
+        if not name.startswith("kernel/"):
+            continue
+        base = name.split("/", 1)[1]
+        oracle = rows.get(f"oracle/{base}")
+        if oracle is not None:
+            checked += 1
+            if us > oracle * (1.0 + noise_band):
+                failures.append(
+                    f"{name}: dispatched {us:.0f}us > oracle "
+                    f"{oracle:.0f}us x (1 + {noise_band})")
+        interp = rows.get(f"interp/{base}")
+        if interp is not None and base in HEADLINE_SPEEDUP_OPS:
+            speedup = interp / max(us, 1e-9)
+            if speedup < min_speedup:
+                failures.append(
+                    f"{name}: only {speedup:.1f}x over the old interpret "
+                    f"path ({interp:.0f}us), need >= {min_speedup}x")
+            else:
+                print(f"gate: {base} {speedup:.1f}x over old interpret "
+                      f"path (>= {min_speedup}x required)")
+    if baseline:
+        prev_files = [p for p in _bench_files(baseline)
+                      if p.endswith("BENCH_kernels.json")]
+        if prev_files:
+            prev = _load_bench(prev_files[0])
+            for name, us in sorted(rows.items()):
+                if not name.startswith("kernel/") or name not in prev:
+                    continue
+                if us > prev[name] * (1.0 + noise_band):
+                    failures.append(
+                        f"{name}: {us:.0f}us regressed beyond "
+                        f"{prev[name]:.0f}us x (1 + {noise_band}) "
+                        f"vs baseline")
+        else:
+            print(f"gate: baseline {baseline!r} has no "
+                  f"BENCH_kernels.json; skipping cross-commit check")
+    if failures:
+        print("\n".join("GATE FAIL: " + f for f in failures),
+              file=sys.stderr)
+        return 1
+    print(f"gate: OK ({checked} kernel rows <= oracle x "
+          f"(1 + {noise_band}))")
+    return 0
+
+
+def cli(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--trend", metavar="GLOB_OR_DIR",
+                    help="print a cross-commit trend table over "
+                         "BENCH_*.json artifacts")
+    ap.add_argument("--gate", metavar="FILE_OR_DIR",
+                    help="enforce the kernel-dispatch perf contract on a "
+                         "BENCH_kernels.json; exit 1 on regression")
+    ap.add_argument("--baseline", metavar="FILE_OR_DIR", default=None,
+                    help="prior commit's artifact for the cross-commit "
+                         "regression check (with --gate)")
+    ap.add_argument("--noise-band", type=float, default=0.5,
+                    help="allowed fractional slack on every ratio check "
+                         "(default 0.5: CI runner timing is noisy)")
+    ap.add_argument("--min-speedup", type=float, default=8.0,
+                    help="required kernel-vs-old-interpret speedup on the "
+                         "headline ops (default 8)")
+    args = ap.parse_args(argv)
+    if args.trend:
+        return trend(args.trend)
+    if args.gate:
+        return gate(args.gate, baseline=args.baseline,
+                    noise_band=args.noise_band,
+                    min_speedup=args.min_speedup)
     main()
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(cli())

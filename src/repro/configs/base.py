@@ -291,6 +291,7 @@ class CommConfig:
     dgc_sparsity: float = 0.999       # final sparsity (top 0.1% exchanged)
     dgc_warmup_epochs: int = 4
     dgc_clip: float = 1.0
+    dgc_compressor: str = "topk"      # topk | randk (seeded in-kernel mask)
     # SkewScout
     skewscout: bool = False
     travel_every: int = 500           # minibatches between model traveling

@@ -12,7 +12,8 @@ stack from ``s`` rounds ago), and every neighbor read gathers from slot
 synchronous D-PSGD; the *bound* is structural — a read deeper than the
 buffer cannot be expressed.
 
-The mixing reuses the fused Pallas ``neighbor_mix`` kernel: the buffer
+The mixing reuses the dispatched ``ops.neighbor_mix`` (src-gather
+variant; Pallas on TPU, measured winner elsewhere): the buffer
 is stacked into one ``((S + 1) * K, N)`` source matrix and the round's
 padded neighbor indices are offset by ``staleness * K`` — staleness
 values therefore ride inside the same *runtime* index operand as the

@@ -8,6 +8,12 @@ raises s over epochs: 75%, 93.75%, 98.4375%, 99.6%, 99.9%.
 
 ``sparsity`` is dynamic (traced), so both the warm-up schedule and SkewScout
 retuning require no recompilation.
+
+``compressor="randk"`` swaps the exact top-s% selection for seeded
+rand-k (the classic baseline top-k is measured against): the keep mask
+is a pure function of (seed, step, leaf, flat index) generated inside
+the select kernel (``kernels/rng.py``) — no materialized random arrays —
+and the same (seed, counter) stream masks ``v`` and ``u`` consistently.
 """
 from __future__ import annotations
 
@@ -19,6 +25,7 @@ import jax.numpy as jnp
 
 from repro.core.algorithms.base import (ModelFns, Params, pernode_grads,
                                         tree_mean0, tree_sum0, tmap)
+from repro.kernels import ops
 from repro.optim.sgd import global_norm
 
 WARMUP_SPARSITIES = (0.75, 0.9375, 0.984375, 0.996, 0.999)
@@ -35,11 +42,17 @@ class DGC:
 
     def __init__(self, fns: ModelFns, n_nodes: int, *, momentum: float = 0.9,
                  weight_decay: float = 0.0, clip: float = 1.0,
-                 sparsity: float = 0.999):
+                 sparsity: float = 0.999, compressor: str = "topk",
+                 seed: int = 0):
+        if compressor not in ("topk", "randk"):
+            raise ValueError(f"compressor={compressor!r}; expected "
+                             "'topk' or 'randk'")
         self.fns, self.K = fns, n_nodes
         self.m, self.wd = momentum, weight_decay
         self.clip = clip
         self.sparsity = sparsity
+        self.compressor = compressor
+        self.seed = seed
 
     def init(self, params: Params, mstate: Params) -> Dict[str, Params]:
         stack = lambda l: jnp.broadcast_to(l, (self.K,) + l.shape)
@@ -71,24 +84,48 @@ class DGC:
         vel = tmap(lambda u, gl: self.m * u + gl, state["vel"], g)
         acc = tmap(lambda v, u: v + u, state["acc"], vel)
 
-        # per-tensor, per-node top-(1-s) magnitude threshold
-        def threshold(v):
-            flat = jnp.abs(v.reshape(v.shape[0], -1))
-            return jnp.quantile(flat, s, axis=1)        # (K,)
-        def select(v):
-            t = threshold(v)
-            return (jnp.abs(v) > t.reshape((-1,) + (1,) * (v.ndim - 1))
-                    ).astype(v.dtype)
-        mask = tmap(select, acc)
-        shared = tmap(lambda v, m_: v * m_, acc, mask)
-        total = tree_sum0(shared)                        # sum over nodes
-        params = tmap(lambda w, t: w + t, state["params"], total)
-        # momentum factor masking: clear exchanged entries from v AND u
-        acc = tmap(lambda v, m_: v * (1 - m_), acc, mask)
-        vel = tmap(lambda u, m_: u * (1 - m_), vel, mask)
-
-        comm = sum(jnp.sum(m_) for m_ in jax.tree_util.tree_leaves(mask)
-                   ) / self.K
+        if self.compressor == "randk":
+            # seeded rand-k: each (step, leaf) gets its own counter
+            # stream, and replaying the stream on ``vel`` clears exactly
+            # the exchanged coordinates (momentum factor masking without
+            # a materialized mask).
+            keep = 1.0 - s
+            leaves_v, treedef = jax.tree_util.tree_flatten(acc)
+            leaves_u = treedef.flatten_up_to(vel)
+            sh, cl, counts = [], [], []
+            for li, (v, u) in enumerate(zip(leaves_v, leaves_u)):
+                leaf_seed = (jnp.asarray(step_idx, jnp.int32) * 1009
+                             + self.seed * 131 + li)
+                sv, cnt = ops.rand_k_sparsify(v, keep, leaf_seed)
+                su, _ = ops.rand_k_sparsify(u, keep, leaf_seed)
+                sh.append(sv)
+                cl.append(su)
+                counts.append(cnt)
+            shared = jax.tree_util.tree_unflatten(treedef, sh)
+            total = tree_sum0(shared)                    # sum over nodes
+            params = tmap(lambda w, t: w + t, state["params"], total)
+            acc = tmap(lambda v, sv: v - sv, acc, shared)
+            vel = jax.tree_util.tree_unflatten(
+                treedef, [u - su for u, su in zip(leaves_u, cl)])
+            comm = sum(c.astype(jnp.float32) for c in counts) / self.K
+        else:
+            # per-tensor, per-node top-(1-s) magnitude threshold
+            def threshold(v):
+                flat = jnp.abs(v.reshape(v.shape[0], -1))
+                return jnp.quantile(flat, s, axis=1)     # (K,)
+            def select(v):
+                t = threshold(v)
+                return (jnp.abs(v) > t.reshape((-1,) + (1,) * (v.ndim - 1))
+                        ).astype(v.dtype)
+            mask = tmap(select, acc)
+            shared = tmap(lambda v, m_: v * m_, acc, mask)
+            total = tree_sum0(shared)                    # sum over nodes
+            params = tmap(lambda w, t: w + t, state["params"], total)
+            # momentum factor masking: clear exchanged entries from v AND u
+            acc = tmap(lambda v, m_: v * (1 - m_), acc, mask)
+            vel = tmap(lambda u, m_: u * (1 - m_), vel, mask)
+            comm = sum(jnp.sum(m_)
+                       for m_ in jax.tree_util.tree_leaves(mask)) / self.K
         metrics = {"loss": jnp.mean(losses), "comm_floats": comm,
                    "resid_delta": _mean_rel(acc, params)}
         return ({"params": params, "mstate": new_ms, "vel": vel, "acc": acc},

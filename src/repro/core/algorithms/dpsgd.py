@@ -17,9 +17,12 @@ SkewScout topology ladder, via :meth:`DPSGD.set_schedule`) shares one
 operand shape and the step compiles exactly once per run
 (``trace_count`` asserts this in tests).
 
-The mixing itself runs as one fused Pallas gather-scale-accumulate over
-the flattened parameter stack (``kernels/neighbor_mix.py``) rather than
-K dense matmuls.
+The mixing itself runs as one fused gather-scale-accumulate over the
+flattened parameter stack via ``ops.neighbor_mix`` — the backend-aware
+dispatcher (``kernels/dispatch.py``) routes it to the Pallas kernel on
+TPU and to whichever of {Pallas, jnp padded-scatter oracle} measured
+faster elsewhere.  ``use_kernel=False`` bypasses ops entirely for a
+locally-built dense ``W @ X`` (debug path).
 """
 from __future__ import annotations
 

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 
 from repro.core.algorithms.base import (ModelFns, Params, pernode_grads,
                                         tree_mean0, tmap)
+from repro.kernels import ops
 
 
 class Gaia:
@@ -59,18 +60,22 @@ class Gaia:
         params = tmap(lambda w, u: w + u, state["params"], vel)
         acc = tmap(lambda v, u: v + u, state["acc"], vel)
 
-        # significance filter: |v / w| > thresh
-        def significant(v, w):
-            return (jnp.abs(v) > thresh * jnp.abs(w)).astype(v.dtype)
-        mask = tmap(significant, acc, params)
-        shared = tmap(lambda v, m_: v * m_, acc, mask)       # (K, ...)
+        # significance filter: |v / w| > thresh — the fused select kernel
+        # (or its dispatched jnp twin) returns (v * mask, count) per leaf,
+        # so the mask itself never materializes: the shared part is
+        # cleared exactly via acc - shared (shared = acc * mask).
+        leaves_v, treedef = jax.tree_util.tree_flatten(acc)
+        leaves_w = treedef.flatten_up_to(params)
+        picked = [ops.gaia_select(v, w, thresh)
+                  for v, w in zip(leaves_v, leaves_w)]
+        shared = jax.tree_util.tree_unflatten(treedef,
+                                              [p[0] for p in picked])
         total = tmap(lambda s: jnp.sum(s, axis=0, keepdims=True), shared)
         # apply everyone else's significant updates; clear own shared part
         params = tmap(lambda w, t, s: w + (t - s), params, total, shared)
-        acc = tmap(lambda v, m_: v * (1 - m_), acc, mask)
+        acc = tmap(lambda v, s: v - s, acc, shared)
 
-        comm = sum(jnp.sum(m_) for m_ in jax.tree_util.tree_leaves(mask)
-                   ) / self.K
+        comm = sum(p[1].astype(jnp.float32) for p in picked) / self.K
         metrics = {"loss": jnp.mean(losses), "comm_floats": comm,
                    "resid_delta": _mean_rel(acc, params)}
         return ({"params": params, "mstate": new_ms, "vel": vel, "acc": acc},

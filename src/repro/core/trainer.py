@@ -87,7 +87,9 @@ def make_algorithm(name: str, fns: ModelFns, n_nodes: int,
     if name == "dgc":
         return DGC(fns, n_nodes, momentum=momentum,
                    weight_decay=weight_decay, clip=comm.dgc_clip,
-                   sparsity=comm.dgc_sparsity)
+                   sparsity=comm.dgc_sparsity,
+                   compressor=getattr(comm, "dgc_compressor", "topk"),
+                   seed=seed)
     if name in GOSSIP_ALGOS:
         if topology is None:
             # standalone fallback; label-aware topologies need the label

@@ -1,0 +1,215 @@
+"""Backend-aware kernel dispatch: route every op to the path that
+actually wins on the backend we run on.
+
+The old policy was a blanket ``interpret = (backend != "tpu")`` switch:
+correct everywhere, but off-TPU the Pallas interpreter re-dispatches
+every kernel op per grid step and loses to the jnp oracles by 5–170x on
+exactly the paper's hot paths (gossip mixing, Gaia/DGC sparsification,
+GroupNorm).  This module replaces it with a per-(op, shape-bucket,
+dtype, backend) *measured* decision:
+
+* **TPU** — the compiled Mosaic path, block sizes from a shape
+  heuristic.  No timing: compiled Pallas is the whole point there.
+* **CPU / GPU** — a one-time timed trial races the candidate paths
+  (Pallas — interpret on CPU, compiled Triton on GPU, over a small
+  block-size sweep — against the jnp oracle from ``kernels/ref.py``)
+  and the winner is cached, so every later call (and every later
+  *process*, via the persisted cache file) dispatches with zero timing
+  and zero recompiles.
+
+Decisions are sticky: the cache is keyed by
+``backend/op/bucket`` and persisted as JSON to
+``out/kernel_dispatch_cache.json`` (override with
+``REPRO_DISPATCH_CACHE=<path>``; set it empty to keep decisions
+in-memory only).  ``KernelDispatch.trials`` counts timed trials the
+same way ``DPSGD.trace_count`` counts traces — tests assert it stops
+moving once the cache is warm.
+
+Overrides (no timing, no cache write):
+
+* ``REPRO_KERNEL_DISPATCH=auto|oracle|pallas|interpret|compiled`` —
+  global forced path (``pallas`` = whichever Pallas mode the backend
+  compiles).
+* ``REPRO_KERNEL_DISPATCH_<OP>`` (e.g. ``..._GAIA_SELECT``) — per-op
+  override, same values, wins over the global one.
+
+Timed trials run in a worker thread: JAX's trace state is thread-local,
+so a decision forced during the first trace of an outer jitted step
+(e.g. ``DPSGD._step``) still executes its candidates eagerly on
+concrete sample inputs instead of being swallowed by the trace.
+"""
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+
+_FORCE_VALUES = ("auto", "oracle", "pallas", "interpret", "compiled")
+_CACHE_ENV = "REPRO_DISPATCH_CACHE"
+_FORCE_ENV = "REPRO_KERNEL_DISPATCH"
+_DEFAULT_CACHE = os.path.join("out", "kernel_dispatch_cache.json")
+
+# a candidate whose first timed sample is already this many times the
+# best-so-far is abandoned after that sample (interpret at 1M elements
+# costs hundreds of ms per call; no need to average three of those)
+_ABANDON_RATIO = 10.0
+_N_TIMED = 2
+
+
+def size_bucket(n: int) -> str:
+    """Shape bucket: next power of two of the element count.  Decisions
+    are per-bucket, so e.g. 1M and 1.3M share one trial."""
+    n = max(int(n), 1)
+    return f"p{(n - 1).bit_length()}"
+
+
+class KernelDispatch:
+    """Measured, cached, overridable per-op path picker (see module
+    docstring).  One instance (``get_dispatcher()``) serves ops.py; tests
+    build their own around temp cache files."""
+
+    def __init__(self, cache_path: Optional[str] = None,
+                 backend: Optional[str] = None):
+        if cache_path is None:
+            cache_path = os.environ.get(_CACHE_ENV, _DEFAULT_CACHE)
+        self.cache_path = cache_path or None   # "" disables persistence
+        self.backend = backend or jax.default_backend()
+        self.trials = 0          # timed trials run (stickiness assertions)
+        self._lock = threading.Lock()
+        self.cache: Dict[str, Dict] = {}
+        self._load()
+
+    # ---- persistence ----
+    def _load(self) -> None:
+        if not self.cache_path or not os.path.exists(self.cache_path):
+            return
+        try:
+            with open(self.cache_path) as f:
+                data = json.load(f)
+            if isinstance(data, dict):
+                self.cache = data
+        except (OSError, ValueError):
+            self.cache = {}
+
+    def _save(self) -> None:
+        if not self.cache_path:
+            return
+        try:
+            d = os.path.dirname(self.cache_path)
+            if d:
+                os.makedirs(d, exist_ok=True)
+            tmp = self.cache_path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(self.cache, f, indent=1, sort_keys=True)
+            os.replace(tmp, self.cache_path)
+        except OSError:
+            pass                              # read-only tree: stay in-memory
+
+    # ---- overrides ----
+    def forced_path(self, op: str) -> Optional[str]:
+        """The env-forced path for ``op``, or None for auto."""
+        v = os.environ.get(f"{_FORCE_ENV}_{op.upper()}",
+                           os.environ.get(_FORCE_ENV, "auto")).lower()
+        if v not in _FORCE_VALUES:
+            raise ValueError(
+                f"{_FORCE_ENV}[_{op.upper()}]={v!r}; expected one of "
+                f"{_FORCE_VALUES}")
+        return None if v == "auto" else v
+
+    @staticmethod
+    def _match(force: str, labels) -> Optional[str]:
+        """First candidate label matching a forced path.  Labels are
+        ``oracle`` or ``<mode>:b<block>``; ``pallas`` matches any
+        non-oracle mode."""
+        for lab in labels:
+            mode = lab.split(":", 1)[0]
+            if mode == force or (force == "pallas" and mode != "oracle"):
+                return lab
+        return None
+
+    # ---- the decision ----
+    def decide(self, op: str, bucket: str,
+               candidates: Dict[str, Callable[[], object]],
+               default: str) -> str:
+        """Pick a candidate label for ``(op, bucket)``.
+
+        ``candidates`` maps label -> zero-arg callable running that path
+        on concrete sample inputs (used only if a timed trial is
+        needed).  ``default`` is the no-trial answer (TPU's compiled
+        label; also the fallback when a forced path has no candidate).
+        """
+        force = self.forced_path(op)
+        if force is not None:
+            return self._match(force, candidates) or default
+        if self.backend == "tpu":
+            return default                     # fixed policy: Mosaic
+        key = f"{self.backend}/{op}/{bucket}"
+        ent = self.cache.get(key)
+        if ent and ent.get("label") in candidates:
+            return ent["label"]
+        with self._lock:
+            ent = self.cache.get(key)          # raced trial already done?
+            if ent and ent.get("label") in candidates:
+                return ent["label"]
+            label, times = self._trial(candidates)
+            self.cache[key] = {"label": label, "us": times}
+            self._save()
+            return label
+
+    def _trial(self, candidates: Dict[str, Callable[[], object]]):
+        """Race the candidates eagerly in a worker thread (escapes any
+        ambient jit trace; see module docstring) and return
+        (winning label, per-label us)."""
+        self.trials += 1
+        times: Dict[str, float] = {}
+
+        def run() -> None:
+            best = float("inf")
+            for label, fn in candidates.items():
+                try:
+                    jax.block_until_ready(fn())        # compile + warm
+                    samples = []
+                    for _ in range(_N_TIMED):
+                        t0 = time.perf_counter()
+                        jax.block_until_ready(fn())
+                        samples.append(time.perf_counter() - t0)
+                        if samples[0] > _ABANDON_RATIO * best:
+                            break                      # hopeless: one sample
+                    t = min(samples)
+                except Exception:                      # path unsupported on
+                    t = float("inf")                   # this backend
+                times[label] = t * 1e6
+                best = min(best, t)
+
+        th = threading.Thread(target=run, daemon=True)
+        th.start()
+        th.join()
+        finite = {k: v for k, v in times.items() if v != float("inf")}
+        if not finite:
+            # nothing ran (e.g. no jit at all): fall back to the oracle
+            return next(iter(candidates)), times
+        return min(finite, key=finite.get), times
+
+
+_dispatcher: Optional[KernelDispatch] = None
+_dispatcher_lock = threading.Lock()
+
+
+def get_dispatcher() -> KernelDispatch:
+    """The process-wide dispatcher ops.py consults."""
+    global _dispatcher
+    with _dispatcher_lock:
+        if _dispatcher is None:
+            _dispatcher = KernelDispatch()
+        return _dispatcher
+
+
+def reset_dispatcher() -> None:
+    """Drop the process-wide dispatcher (tests; env changes)."""
+    global _dispatcher
+    with _dispatcher_lock:
+        _dispatcher = None

@@ -1,7 +1,28 @@
-"""jit'd public wrappers around the Pallas kernels.
+"""Backend-aware public wrappers around the Pallas kernels.
 
-``interpret`` defaults to True off-TPU so the same call sites work in this
-CPU container; on TPU backends the compiled Mosaic path is used.
+The old contract here was a blanket ``interpret = backend != "tpu"``
+switch: correct everywhere, but interpret-mode Pallas re-dispatches per
+grid step and loses to the jnp oracles by 5-170x off-TPU.  Every op now
+routes through ``kernels/dispatch.py``:
+
+1. explicit ``interpret=`` (and, where applicable, ``block_*=``)
+   arguments force the Pallas path exactly as before — tests and the
+   bench's "old path" rows use this, and it is the escape hatch;
+2. otherwise the dispatcher picks a path label for
+   (op, dtype, size-bucket, backend): ``"oracle"`` (the jnp twin from
+   ``kernels/ref.py``) or ``"<mode>:b<block>"`` where ``<mode>`` is the
+   Pallas mode that runs on this backend — ``interpret`` on CPU,
+   ``compiled`` (Triton / Mosaic) on GPU / TPU.  TPU always takes the
+   compiled label (no timing); CPU / GPU decisions come from a one-time
+   timed trial, cached in ``out/kernel_dispatch_cache.json``;
+3. block sizes are no longer hardcoded 64/128: the heuristic picks the
+   largest aligned power-of-two the shape supports, and the trial sweeps
+   a couple of candidates for the compiled path.
+
+Trial candidates run on zero-filled sample inputs of the real shape —
+every kernel here is data-independent — in a worker thread, so a
+decision forced during the first trace of an outer jitted step still
+times its candidates eagerly.
 """
 from __future__ import annotations
 
@@ -10,75 +31,370 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import dgc_topk as _dgc
+from repro.kernels import dispatch as _dispatch
 from repro.kernels import flash_attention as _fa
 from repro.kernels import gaia_select as _gaia
 from repro.kernels import group_norm as _gn
 from repro.kernels import neighbor_mix as _nm
+from repro.kernels import ref as _ref
+
+LANES = 128
 
 
 def _default_interpret() -> bool:
+    """The Pallas mode that runs on this backend (True = interpret).
+    Used when a caller forces the Pallas path without saying how."""
     return jax.default_backend() != "tpu"
 
+
+def _pallas_mode() -> str:
+    return "compiled" if jax.default_backend() in ("tpu", "gpu", "cuda",
+                                                   "rocm") else "interpret"
+
+
+def _block_rows_for(n: int, cap: int) -> int:
+    """Largest power-of-two block_rows <= min(rows(n), cap), >= 8."""
+    rows = max(-(-n // LANES), 8)
+    r = min(rows, cap)
+    return 1 << (r.bit_length() - 1)
+
+
+def _parse_label(label: str) -> Tuple[str, Optional[int]]:
+    mode, _, b = label.partition(":b")
+    return mode, (int(b) if b else None)
+
+
+def _decide(op: str, n: int, dtype, candidates, default: str) -> str:
+    bucket = f"{jnp.dtype(dtype).name}/{_dispatch.size_bucket(n)}"
+    return _dispatch.get_dispatcher().decide(op, bucket, candidates, default)
+
+
+@functools.lru_cache(maxsize=64)
+def _sample_cached(shape, dtype_name, fill):
+    return jax.block_until_ready(jnp.full(shape, fill, jnp.dtype(dtype_name)))
+
+
+def _z(shape, dt, fill=0.0):
+    """Device-resident trial input, memoized per (shape, dtype, fill) so
+    dispatch trials time the kernel — not a fresh host->device transfer
+    on every timed call (an 8 MB copy per call swamps a ~1 ms oracle and
+    poisons the decision)."""
+    shape = (shape,) if isinstance(shape, int) else tuple(shape)
+    return _sample_cached(shape, jnp.dtype(dt).name, fill)
+
+
+def _blocked_candidates(n: int, pallas_fn, oracle_fn):
+    """Candidates for the flat (rows, 128)-blocked kernel family.
+
+    ``pallas_fn(block_rows, interpret)`` runs the Pallas path on sample
+    inputs; ``oracle_fn()`` runs the jnp twin.  Interpret mode gets one
+    big-block candidate (per-grid-step overhead dominates, so fewer
+    steps is strictly better); compiled mode gets a small sweep.
+    Returns (candidates, default_label) — the default is the heuristic
+    compiled/interpret block, used on TPU without timing.
+    """
+    mode = _pallas_mode()
+    cands = {"oracle": oracle_fn}          # first: cheap best-so-far for
+    if mode == "interpret":                # the trial's early abandon
+        blocks = [_block_rows_for(n, 2048)]
+    else:
+        blocks = sorted({_block_rows_for(n, 64), _block_rows_for(n, 256)})
+    for b in blocks:
+        cands[f"{mode}:b{b}"] = functools.partial(pallas_fn, b,
+                                                  mode == "interpret")
+    return cands, f"{mode}:b{blocks[-1]}"
+
+
+# ---------------------------------------------------------------- attention
 
 @functools.partial(jax.jit, static_argnames=(
     "causal", "window", "logit_softcap", "scale", "block_q", "block_k",
     "interpret"))
-def flash_attention(q, k, v, *, causal: bool = True,
-                    window: Optional[int] = None,
-                    logit_softcap: Optional[float] = None,
-                    scale: Optional[float] = None,
-                    block_q: int = 128, block_k: int = 128,
-                    interpret: Optional[bool] = None) -> jnp.ndarray:
-    interpret = _default_interpret() if interpret is None else interpret
+def _fa_pallas(q, k, v, *, causal, window, logit_softcap, scale,
+               block_q, block_k, interpret):
     return _fa.flash_attention(
         q, k, v, causal=causal, window=window, logit_softcap=logit_softcap,
         scale=scale, block_q=block_q, block_k=block_k, interpret=interpret)
 
 
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "logit_softcap", "scale"))
+def _fa_oracle(q, k, v, *, causal, window, logit_softcap, scale):
+    return _ref.flash_attention_ref(
+        q, k, v, causal=causal, window=window, logit_softcap=logit_softcap,
+        scale=scale)
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    logit_softcap: Optional[float] = None,
+                    scale: Optional[float] = None,
+                    block_q: Optional[int] = None,
+                    block_k: Optional[int] = None,
+                    interpret: Optional[bool] = None) -> jnp.ndarray:
+    static = dict(causal=causal, window=window, logit_softcap=logit_softcap,
+                  scale=scale)
+    if interpret is not None:
+        return _fa_pallas(q, k, v, block_q=block_q or 128,
+                          block_k=block_k or 128, interpret=interpret,
+                          **static)
+    Tq, Tk = q.shape[2], k.shape[2]
+    mode = _pallas_mode()
+    if block_q is not None or block_k is not None:
+        sweeps = [(block_q or 128, block_k or 128)]
+    elif mode == "compiled":
+        sweeps = sorted({(min(64, Tq), min(64, Tk)),
+                         (min(128, Tq), min(128, Tk))})
+    else:
+        sweeps = [(min(128, Tq), min(128, Tk))]
+    shape, dt = q.shape, q.dtype
+    kshape = k.shape
+
+    def pallas_trial(bq, bk):
+        return _fa_pallas(_z(shape, dt), _z(kshape, dt),
+                          _z(kshape, dt), block_q=bq, block_k=bk,
+                          interpret=mode == "interpret", **static)
+
+    cands = {"oracle": lambda: _fa_oracle(
+        _z(shape, dt), _z(kshape, dt), _z(kshape, dt), **static)}
+    for bq, bk in sweeps:
+        cands[f"{mode}:b{bq}x{bk}"] = functools.partial(pallas_trial, bq, bk)
+    default = f"{mode}:b{sweeps[-1][0]}x{sweeps[-1][1]}"
+    label = _decide("flash_attention", q.size + 2 * k.size, dt, cands,
+                    default)
+    if label == "oracle":
+        return _fa_oracle(q, k, v, **static)
+    bq, bk = (int(x) for x in label.split(":b")[1].split("x"))
+    return _fa_pallas(q, k, v, block_q=bq, block_k=bk,
+                      interpret=label.startswith("interpret"), **static)
+
+
+# --------------------------------------------------------------------- gaia
+
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
-def gaia_select(v, w, threshold, *, block_rows: int = 64,
-                interpret: Optional[bool] = None):
-    interpret = _default_interpret() if interpret is None else interpret
+def _gaia_pallas(v, w, threshold, *, block_rows, interpret):
     return _gaia.gaia_select(v, w, threshold, block_rows=block_rows,
                              interpret=interpret)
 
 
+_gaia_oracle = jax.jit(_ref.gaia_select_ref)
+
+
+def gaia_select(v, w, threshold, *, block_rows: Optional[int] = None,
+                interpret: Optional[bool] = None):
+    """Gaia significance filter: (v * (|v| > T|w|), count)."""
+    if interpret is not None or block_rows is not None:
+        it = _default_interpret() if interpret is None else interpret
+        return _gaia_pallas(v, w, threshold, block_rows=block_rows or 64,
+                            interpret=it)
+    shape, dt = v.shape, v.dtype
+    cands, default = _blocked_candidates(
+        v.size,
+        lambda b, it: _gaia_pallas(_z(shape, dt), _z(shape, dt),
+                                   0.5, block_rows=b, interpret=it),
+        lambda: _gaia_oracle(_z(shape, dt), _z(shape, dt), 0.5))
+    label = _decide("gaia_select", v.size, dt, cands, default)
+    if label == "oracle":
+        return _gaia_oracle(v, w, threshold)
+    mode, b = _parse_label(label)
+    return _gaia_pallas(v, w, threshold, block_rows=b,
+                        interpret=mode == "interpret")
+
+
+# ---------------------------------------------------------------------- dgc
+
 @functools.partial(jax.jit, static_argnames=("n_bins", "block_rows",
                                              "interpret"))
-def dgc_sparsify(v, sparsity, *, n_bins: int = 256, block_rows: int = 64,
-                 interpret: Optional[bool] = None
-                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
-    """Full DGC top-s%: histogram -> threshold -> select.
-    Returns (selected, count, threshold)."""
-    interpret = _default_interpret() if interpret is None else interpret
-    v_max = jnp.max(jnp.abs(v)).astype(jnp.float32)
-    hist = _dgc.abs_histogram(v, v_max, n_bins=n_bins,
-                              block_rows=block_rows, interpret=interpret)
+def _dgc_pallas(v, sparsity, *, n_bins, block_rows, interpret):
+    """Histogram -> threshold -> select, with the |v| max folded into the
+    histogram kernel's first sweep (one pass over v, not two)."""
+    hist, v_max = _dgc.abs_histogram_fused(v, n_bins=n_bins,
+                                           block_rows=block_rows,
+                                           interpret=interpret)
     t = _dgc.threshold_from_histogram(hist, v_max, sparsity)
     sel, cnt = _dgc.dgc_select(v, t, block_rows=block_rows,
                                interpret=interpret)
     return sel, cnt, t
 
 
+@functools.partial(jax.jit, static_argnames=("n_bins",))
+def _dgc_oracle(v, sparsity, *, n_bins):
+    return _ref.dgc_sparsify_ref(v, sparsity, n_bins=n_bins)
+
+
+def dgc_sparsify(v, sparsity, *, n_bins: int = 256,
+                 block_rows: Optional[int] = None,
+                 interpret: Optional[bool] = None
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Full DGC top-s%: histogram -> threshold -> select.
+    Returns (selected, count, threshold).  Both paths quantize the
+    threshold through the same n_bins histogram, so dispatch never moves
+    the numbers (see ``ref.dgc_sparsify_ref``)."""
+    if interpret is not None or block_rows is not None:
+        it = _default_interpret() if interpret is None else interpret
+        return _dgc_pallas(v, sparsity, n_bins=n_bins,
+                           block_rows=block_rows or 64, interpret=it)
+    shape, dt = v.shape, v.dtype
+    cands, default = _blocked_candidates(
+        v.size,
+        lambda b, it: _dgc_pallas(_z(shape, dt), 0.99, n_bins=n_bins,
+                                  block_rows=b, interpret=it),
+        lambda: _dgc_oracle(_z(shape, dt), 0.99, n_bins=n_bins))
+    label = _decide("dgc_sparsify", v.size, dt, cands, default)
+    if label == "oracle":
+        return _dgc_oracle(v, sparsity, n_bins=n_bins)
+    mode, b = _parse_label(label)
+    return _dgc_pallas(v, sparsity, n_bins=n_bins, block_rows=b,
+                       interpret=mode == "interpret")
+
+
+# ------------------------------------------------------------------- rand-k
+
 @functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _randk_pallas(v, keep_prob, seed, *, block_rows, interpret):
+    return _dgc.rand_k_select(v, keep_prob, seed, block_rows=block_rows,
+                              interpret=interpret)
+
+
+_randk_oracle = jax.jit(_ref.rand_k_select_ref)
+
+
+def rand_k_sparsify(v, keep_prob, seed, *,
+                    block_rows: Optional[int] = None,
+                    interpret: Optional[bool] = None):
+    """Seeded rand-k sparsification: (v * mask, count) with
+    ``mask[i] = uniform01(seed, i) < keep_prob``.  The mask is generated
+    *in-kernel* from (seed, flat-index) counters (``kernels/rng.py``) —
+    no materialized random array — and is bit-exact on every path, so
+    dispatch can never change which coordinates ship."""
+    if interpret is not None or block_rows is not None:
+        it = _default_interpret() if interpret is None else interpret
+        return _randk_pallas(v, keep_prob, seed, block_rows=block_rows or 64,
+                             interpret=it)
+    shape, dt = v.shape, v.dtype
+    cands, default = _blocked_candidates(
+        v.size,
+        lambda b, it: _randk_pallas(_z(shape, dt), 0.01, 1,
+                                    block_rows=b, interpret=it),
+        lambda: _randk_oracle(_z(shape, dt), 0.01, 1))
+    label = _decide("rand_k_sparsify", v.size, dt, cands, default)
+    if label == "oracle":
+        return _randk_oracle(v, keep_prob, seed)
+    mode, b = _parse_label(label)
+    return _randk_pallas(v, keep_prob, seed, block_rows=b,
+                         interpret=mode == "interpret")
+
+
+# ------------------------------------------------------------- neighbor mix
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _nm_pallas(x, nbr_idx, nbr_w, self_w, *, block_rows, interpret):
+    return _nm.neighbor_mix(x, nbr_idx, nbr_w, self_w,
+                            block_rows=block_rows, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def _nm_src_pallas(x, nbr_idx, nbr_w, self_w, src, *, block_rows,
+                   interpret):
+    return _nm.neighbor_mix(x, nbr_idx, nbr_w, self_w, src=src,
+                            block_rows=block_rows, interpret=interpret)
+
+
+_nm_oracle = jax.jit(lambda x, i, w, s: _ref.neighbor_mix_padded_ref(
+    x, i, w, s))
+_nm_src_oracle = jax.jit(lambda x, i, w, s, src: _ref.neighbor_mix_padded_ref(
+    x, i, w, s, src))
+
+
 def neighbor_mix(x, nbr_idx, nbr_w, self_w, *, src=None,
-                 block_rows: int = 64,
+                 block_rows: Optional[int] = None,
                  interpret: Optional[bool] = None) -> jnp.ndarray:
     """Sparse gossip averaging y[k] = W[k,k]*x[k] + sum_j W[k,j]*x[j]
     over padded neighbor lists (see Topology.neighbor_arrays).  With
     ``src`` (M, N), neighbor rows are gathered from ``src`` instead of
     ``x`` — AD-PSGD's stale mixing over a flattened snapshot buffer."""
-    interpret = _default_interpret() if interpret is None else interpret
-    return _nm.neighbor_mix(x, nbr_idx, nbr_w, self_w, src=src,
-                            block_rows=block_rows, interpret=interpret)
+    if interpret is not None or block_rows is not None:
+        it = _default_interpret() if interpret is None else interpret
+        if src is None:
+            return _nm_pallas(x, nbr_idx, nbr_w, self_w,
+                              block_rows=block_rows or 64, interpret=it)
+        return _nm_src_pallas(x, nbr_idx, nbr_w, self_w, src,
+                              block_rows=block_rows or 64, interpret=it)
+    K, N = x.shape
+    D = nbr_idx.shape[1]
+    dt = x.dtype
+    zi = functools.partial(_z, (K, D))
+    if src is None:
+        cands, default = _blocked_candidates(
+            N,
+            lambda b, it: _nm_pallas(
+                _z((K, N), dt), zi(np.int32), zi(np.float32),
+                _z(K, np.float32), block_rows=b, interpret=it),
+            lambda: _nm_oracle(_z((K, N), dt), zi(np.int32),
+                               zi(np.float32), _z(K, np.float32)))
+        label = _decide("neighbor_mix", x.size, dt, cands, default)
+        if label == "oracle":
+            return _nm_oracle(x, nbr_idx, nbr_w, self_w)
+        mode, b = _parse_label(label)
+        return _nm_pallas(x, nbr_idx, nbr_w, self_w, block_rows=b,
+                          interpret=mode == "interpret")
+    M = src.shape[0]
+    cands, default = _blocked_candidates(
+        N,
+        lambda b, it: _nm_src_pallas(
+            _z((K, N), dt), zi(np.int32), zi(np.float32),
+            _z(K, np.float32), _z((M, N), src.dtype),
+            block_rows=b, interpret=it),
+        lambda: _nm_src_oracle(_z((K, N), dt), zi(np.int32),
+                               zi(np.float32), _z(K, np.float32),
+                               _z((M, N), src.dtype)))
+    label = _decide("neighbor_mix_src", x.size + src.size, dt, cands,
+                    default)
+    if label == "oracle":
+        return _nm_src_oracle(x, nbr_idx, nbr_w, self_w, src)
+    mode, b = _parse_label(label)
+    return _nm_src_pallas(x, nbr_idx, nbr_w, self_w, src, block_rows=b,
+                          interpret=mode == "interpret")
 
+
+# --------------------------------------------------------------- group norm
 
 @functools.partial(jax.jit, static_argnames=("group_size", "eps",
                                              "interpret"))
-def group_norm(x, scale, bias, *, group_size: int = 2, eps: float = 1e-5,
-               interpret: Optional[bool] = None) -> jnp.ndarray:
-    interpret = _default_interpret() if interpret is None else interpret
+def _gn_pallas(x, scale, bias, *, group_size, eps, interpret):
     return _gn.group_norm(x, scale, bias, group_size=group_size, eps=eps,
                           interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("group_size", "eps"))
+def _gn_oracle(x, scale, bias, *, group_size, eps):
+    return _ref.group_norm_ref(x, scale, bias, group_size=group_size,
+                               eps=eps)
+
+
+def group_norm(x, scale, bias, *, group_size: int = 2, eps: float = 1e-5,
+               interpret: Optional[bool] = None) -> jnp.ndarray:
+    if interpret is not None:
+        return _gn_pallas(x, scale, bias, group_size=group_size, eps=eps,
+                          interpret=interpret)
+    mode = _pallas_mode()
+    shape, dt = x.shape, x.dtype
+    C = shape[-1]
+    static = dict(group_size=group_size, eps=eps)
+    cands = {
+        "oracle": lambda: _gn_oracle(_z(shape, dt),
+                                     _z(C, np.float32, 1.0),
+                                     _z(C, np.float32), **static),
+        mode: lambda: _gn_pallas(_z(shape, dt),
+                                 _z(C, np.float32, 1.0),
+                                 _z(C, np.float32),
+                                 interpret=mode == "interpret", **static),
+    }
+    label = _decide("group_norm", x.size, dt, cands, mode)
+    if label == "oracle":
+        return _gn_oracle(x, scale, bias, **static)
+    return _gn_pallas(x, scale, bias, interpret=label == "interpret",
+                      **static)

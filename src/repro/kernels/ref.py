@@ -1,11 +1,16 @@
 """Pure-jnp oracles for every Pallas kernel.  Tests assert_allclose the
-kernels (interpret=True on CPU) against these."""
+kernels (interpret=True on CPU) against these — and off-TPU the dispatch
+layer (``kernels/dispatch.py``) routes production calls to whichever of
+{Pallas, oracle} measured faster, so these are first-class execution
+paths, not just test fixtures."""
 from __future__ import annotations
 
 from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels import rng
 
 
 def flash_attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
@@ -59,6 +64,67 @@ def abs_histogram_ref(v: jnp.ndarray, n_bins: int, v_max: jnp.ndarray
     idx = jnp.clip((a / jnp.maximum(v_max, 1e-30) * n_bins).astype(jnp.int32),
                    0, n_bins - 1)
     return jnp.zeros((n_bins,), jnp.int32).at[idx].add(1)
+
+
+def dgc_sparsify_ref(v: jnp.ndarray, sparsity: jnp.ndarray, *,
+                     n_bins: int = 256
+                     ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Histogram-thresholded DGC oracle — the *same* quantization family
+    as the kernel path (``dgc_topk``), so dispatch may route to either
+    without moving the threshold: (selected, count, threshold).
+
+    The bin is found by bisection on cumulative counts (log2(n_bins)
+    compare-and-sum passes) instead of materializing the histogram —
+    XLA's CPU scatter-add makes a full 1M-element histogram ~10x slower
+    than 8 streaming passes.  The predicate ``cum[b] >= target`` (in
+    float32, like ``threshold_from_histogram``'s searchsorted) is
+    monotone in ``b``, so bisection lands on the identical bin and the
+    threshold is bit-equal to the kernel path's."""
+    a = jnp.abs(v.reshape(-1)).astype(jnp.float32)
+    v_max = jnp.max(a)
+    idx = jnp.clip((a / jnp.maximum(v_max, 1e-30) * n_bins
+                    ).astype(jnp.int32), 0, n_bins - 1)
+    target = sparsity * jnp.float32(a.size)
+    lo = jnp.int32(0)
+    hi = jnp.int32(n_bins - 1)
+    for _ in range(max(n_bins.bit_length() - 1, 1)):
+        mid = (lo + hi) // 2
+        reached = jnp.sum(idx <= mid).astype(jnp.float32) >= target
+        hi = jnp.where(reached, mid, hi)
+        lo = jnp.where(reached, lo, mid + 1)
+    t = (hi.astype(jnp.float32) + 1.0) / n_bins * v_max
+    sel, cnt = dgc_select_ref(v, t)
+    return sel, cnt, t
+
+
+def rand_k_select_ref(v: jnp.ndarray, keep_prob: jnp.ndarray,
+                      seed) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Materialized-generator baseline for the in-kernel seeded rand-k
+    mask: uniforms at every flat index from the same (seed, counter)
+    hash, so the mask is bit-identical to the kernel's."""
+    n = v.size
+    seed = jnp.asarray(seed, jnp.int32).astype(jnp.uint32)
+    u = rng.uniform01(seed, jnp.arange(n, dtype=jnp.int32))
+    mask = (u < keep_prob).reshape(v.shape)
+    return v * mask.astype(v.dtype), jnp.sum(mask).astype(jnp.int32)
+
+
+def neighbor_mix_padded_ref(x: jnp.ndarray, nbr_idx: jnp.ndarray,
+                            nbr_w: jnp.ndarray, self_w: jnp.ndarray,
+                            src: Optional[jnp.ndarray] = None
+                            ) -> jnp.ndarray:
+    """Dense oracle over the kernel's own padded-neighbor operands: the
+    runtime (K, D) index/weight lists are scattered into a dense mixing
+    matrix and applied as one matmul (padding rows carry weight 0, so
+    they scatter nothing).  With ``src`` this is the stale-mixing
+    gather, self term on ``x`` — same operands as the kernel."""
+    K = x.shape[0]
+    rows = src if src is not None else x
+    W = jnp.zeros((K, rows.shape[0]), jnp.float32).at[
+        jnp.arange(K)[:, None], nbr_idx].add(nbr_w)
+    out = jnp.matmul(W, rows.astype(jnp.float32)) \
+        + self_w[:, None] * x.astype(jnp.float32)
+    return out.astype(x.dtype)
 
 
 def neighbor_mix_ref(x: jnp.ndarray, mixing: jnp.ndarray) -> jnp.ndarray:

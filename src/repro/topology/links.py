@@ -26,14 +26,20 @@ stragglers — the regime where async gossip strictly beats stop-and-wait
 even on an all-LAN fabric (Lian et al., AD-PSGD).
 
 Seeding and replay: every draw is a pure function of
-``(seed, edge, activation index)`` — a fresh ``np.random.Generator``
-keyed by that tuple — so a rebuilt model (same seed) replaying the same
-sequence of ledger calls produces bit-identical sampled times, in any
-interleaving of edges.  The Markov state is a fold over the keyed draws,
-so it replays too.  With all three knobs at zero, :meth:`sample` returns
-the class-constant arrays unchanged (bitwise), which is what lets a
-"sampled" ledger at zero rates reproduce the constant-profile ledger
-exactly.
+``(seed, edge, activation index)`` — a counter-based hash stream from
+``kernels/rng.py`` (the same lowbias32 stream the Pallas kernels
+generate in-kernel), evaluated vectorized over all of a round's active
+edges at once instead of constructing one ``np.random.Generator`` per
+edge per activation.  Activation ``n`` of an edge owns uniform counters
+``[4n, 4n+4)`` on that edge's round stream: the jitter normal consumes
+``4n``/``4n+1`` (Box–Muller), the Markov transition uniform is ``4n+2``,
+and ``4n+3`` is reserved.  A rebuilt model (same seed) replaying the
+same sequence of ledger calls therefore produces bit-identical sampled
+times, in any interleaving of edges; the Markov state is a fold over the
+keyed draws, so it replays too.  With all three knobs at zero,
+:meth:`sample` returns the class-constant arrays unchanged (bitwise),
+which is what lets a "sampled" ledger at zero rates reproduce the
+constant-profile ledger exactly.
 
 Consumed by :class:`~repro.topology.costs.CommLedger` (``link_model=``):
 gossip, exchange, and probe rounds all price sampled per-edge times, and
@@ -47,6 +53,7 @@ from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.kernels import rng
 from repro.topology.costs import LinkProfile
 
 Edge = Tuple[int, int]
@@ -61,6 +68,7 @@ _TAG_ROUND = 0x0A
 class _EdgeState:
     """Mutable per-link sampling state (replayable: a pure fold over the
     keyed draws, advanced once per activation)."""
+    key: int = 0              # cached per-edge round-stream key
     lat_mult: float = 1.0     # persistent per-edge base draw (hetero)
     bw_mult: float = 1.0
     n: int = 0                # activations so far (the draw counter)
@@ -103,40 +111,18 @@ class LinkModel:
                 or self.straggler_rate > 0)
 
     # ---- draws ----
-    def _rng(self, tag: int, e: Edge, n: int) -> np.random.Generator:
-        """A fresh generator keyed by (seed, tag, edge, draw index) —
-        the pure-function property that makes replay bit-identical."""
-        return np.random.default_rng([self.seed, tag, e[0], e[1], n])
-
     def _state(self, e: Edge) -> _EdgeState:
         st = self._edges.get(e)
         if st is None:
-            st = _EdgeState()
+            st = _EdgeState(key=rng.fold_key(self.seed, _TAG_ROUND,
+                                             e[0], e[1]))
             if self.hetero > 0:
-                z = self._rng(_TAG_BASE, e, 0).standard_normal(2)
+                base = rng.fold_key(self.seed, _TAG_BASE, e[0], e[1])
+                z = rng.normal01(np.uint32(base), np.arange(2))
                 st.lat_mult = float(np.exp(self.hetero * z[0]))
                 st.bw_mult = float(np.exp(-self.hetero * z[1]))
             self._edges[e] = st
         return st
-
-    def _activate(self, e: Edge, st: _EdgeState) -> float:
-        """One activation of edge ``e``: returns the cost multiplier for
-        this round (jitter x transient slowdown) and advances the edge's
-        counter + Markov state."""
-        rng = self._rng(_TAG_ROUND, e, st.n)
-        st.n += 1
-        self.activations += 1
-        mult = 1.0
-        if self.jitter > 0:
-            mult *= float(np.exp(self.jitter * rng.standard_normal()))
-        if self.straggler_rate > 0:
-            if st.slow:
-                self.slow_activations += 1
-                mult *= self.straggler_slowdown
-                st.slow = float(rng.random()) >= self.straggler_exit
-            else:
-                st.slow = float(rng.random()) < self.straggler_rate
-        return mult
 
     def sample(self, edges: Sequence[Edge], lat: np.ndarray,
                bw: np.ndarray, active: np.ndarray
@@ -144,17 +130,46 @@ class LinkModel:
         """Sampled (latency, bandwidth) arrays for one activation of the
         ``active`` edges, starting from the graph's class-constant
         arrays.  Inactive edges keep the constants (their cost is masked
-        by the caller anyway) and do not advance their counters."""
+        by the caller anyway) and do not advance their counters.
+
+        All active edges draw in one vectorized hash evaluation: keys
+        and counters are gathered from the per-edge states, the jitter
+        normals and Markov uniforms come from one ``kernels/rng.py``
+        batch each, and only the state write-back walks the edges."""
         if not self.stochastic:
             return lat, bw
         s_lat = lat.astype(np.float64).copy()
         s_bw = bw.astype(np.float64).copy()
-        for n in np.flatnonzero(active):
-            e = edges[n]
-            st = self._state(e)
-            mult = self._activate(e, st)
-            s_lat[n] = lat[n] * st.lat_mult * mult
-            s_bw[n] = bw[n] * st.bw_mult / mult
+        idx = np.flatnonzero(active)
+        if idx.size == 0:
+            return s_lat, s_bw
+        states = [self._state(edges[n]) for n in idx]
+        keys = np.array([st.key for st in states], np.uint32)
+        ctr = np.array([st.n for st in states], np.int64)
+        # activation n owns uniform counters [4n, 4n+4) on the edge's
+        # round stream: Box-Muller jitter at 4n/4n+1, Markov u at 4n+2
+        mult = np.ones(idx.size, np.float64)
+        if self.jitter > 0:
+            z = rng.normal01(keys, 2 * ctr)
+            mult *= np.exp(self.jitter * z)
+        if self.straggler_rate > 0:
+            u = rng.uniform01(keys, (4 * ctr + 2).astype(np.uint32)
+                              ).astype(np.float64)
+            slow = np.array([st.slow for st in states], bool)
+            mult = np.where(slow, mult * self.straggler_slowdown, mult)
+            self.slow_activations += int(np.sum(slow))
+            next_slow = np.where(slow, u >= self.straggler_exit,
+                                 u < self.straggler_rate)
+        else:
+            next_slow = np.array([st.slow for st in states], bool)
+        self.activations += idx.size
+        for j, st in enumerate(states):
+            st.n += 1
+            st.slow = bool(next_slow[j])
+        base_lat = np.array([st.lat_mult for st in states], np.float64)
+        base_bw = np.array([st.bw_mult for st in states], np.float64)
+        s_lat[idx] = lat[idx] * base_lat * mult
+        s_bw[idx] = bw[idx] * base_bw / mult
         return s_lat, s_bw
 
     # ---- reporting ----

@@ -1,0 +1,279 @@
+"""Backend-aware dispatch: every routed path computes the same numbers.
+
+Covers the three invariants the kernel-speed overhaul must not break:
+
+* **path equivalence** — for each op, forced-oracle, forced-Pallas and
+  auto-dispatched calls agree (bit-exact where the op has integer /
+  select semantics, allclose for float reductions);
+* **in-kernel RNG** — seeded masks generated from (seed, counter)
+  hashes inside the kernel are bit-identical to the materialized
+  generator baseline, so dispatch can never change which coordinates
+  ship;
+* **stickiness** — one timed trial per (op, bucket); warm caches (in
+  memory or reloaded from the JSON file) never re-time.
+"""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import dispatch, ops, ref, rng
+from repro.kernels.dgc_topk import (abs_histogram, abs_histogram_fused,
+                                    threshold_from_histogram)
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(autouse=True)
+def _isolated_dispatch(monkeypatch):
+    """Keep tests off the real persisted cache and reset the process-wide
+    dispatcher around every test (decisions here are test-local)."""
+    monkeypatch.setenv("REPRO_DISPATCH_CACHE", "")
+    monkeypatch.delenv("REPRO_KERNEL_DISPATCH", raising=False)
+    dispatch.reset_dispatcher()
+    yield
+    dispatch.reset_dispatcher()
+
+
+def _force(monkeypatch, value):
+    monkeypatch.setenv("REPRO_KERNEL_DISPATCH", value)
+    dispatch.reset_dispatcher()
+
+
+def _three_ways(monkeypatch, fn):
+    """Run ``fn`` under forced-oracle, forced-Pallas and auto dispatch."""
+    _force(monkeypatch, "oracle")
+    o = fn()
+    _force(monkeypatch, "pallas")
+    p = fn()
+    monkeypatch.delenv("REPRO_KERNEL_DISPATCH")
+    dispatch.reset_dispatcher()
+    a = fn()
+    return o, p, a
+
+
+def test_gaia_select_paths_bit_exact(monkeypatch):
+    v = jax.random.normal(KEY, (4096 + 17,))
+    w = jax.random.normal(jax.random.PRNGKey(1), v.shape) * 0.3
+    o, p, a = _three_ways(monkeypatch,
+                          lambda: ops.gaia_select(v, w, 0.7))
+    for sel, cnt in (p, a):
+        np.testing.assert_array_equal(np.asarray(sel), np.asarray(o[0]))
+        assert int(cnt) == int(o[1])
+
+
+def test_dgc_sparsify_paths_bit_exact(monkeypatch):
+    v = jax.random.normal(KEY, (8192 + 77,)) * \
+        jax.random.gamma(jax.random.PRNGKey(2), 1.0, (8192 + 77,))
+    o, p, a = _three_ways(monkeypatch,
+                          lambda: ops.dgc_sparsify(v, 0.99))
+    for sel, cnt, t in (p, a):
+        assert float(t) == float(o[2])         # same quantized threshold
+        assert int(cnt) == int(o[1])
+        np.testing.assert_array_equal(np.asarray(sel), np.asarray(o[0]))
+
+
+def test_rand_k_paths_bit_exact(monkeypatch):
+    v = jax.random.normal(KEY, (4096 + 5,))
+    o, p, a = _three_ways(
+        monkeypatch, lambda: ops.rand_k_sparsify(v, 0.05, 123))
+    for sel, cnt in (p, a):
+        np.testing.assert_array_equal(np.asarray(sel), np.asarray(o[0]))
+        assert int(cnt) == int(o[1])
+
+
+def _ring(K, D=2):
+    nbr = np.stack([(np.arange(K) - 1) % K, (np.arange(K) + 1) % K], 1)
+    w = np.full((K, D), 1.0 / 3, np.float32)
+    return jnp.asarray(nbr, jnp.int32), jnp.asarray(w), \
+        jnp.full((K,), 1.0 / 3, jnp.float32)
+
+
+def test_neighbor_mix_paths_close(monkeypatch):
+    K = 8
+    nbr, w, sw = _ring(K)
+    x = jax.random.normal(KEY, (K, 512))
+    o, p, a = _three_ways(
+        monkeypatch, lambda: ops.neighbor_mix(x, nbr, w, sw))
+    for y in (p, a):
+        np.testing.assert_allclose(np.asarray(y), np.asarray(o),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_neighbor_mix_src_paths_close(monkeypatch):
+    K, M = 8, 24
+    nbr = jax.random.randint(jax.random.PRNGKey(3), (K, 2), 0, M)
+    w = jnp.full((K, 2), 0.25, jnp.float32)
+    sw = jnp.full((K,), 0.5, jnp.float32)
+    x = jax.random.normal(KEY, (K, 384))
+    src = jax.random.normal(jax.random.PRNGKey(4), (M, 384))
+    o, p, a = _three_ways(
+        monkeypatch, lambda: ops.neighbor_mix(x, nbr, w, sw, src=src))
+    for y in (p, a):
+        np.testing.assert_allclose(np.asarray(y), np.asarray(o),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_group_norm_paths_close(monkeypatch):
+    x = jax.random.normal(KEY, (4, 8, 8, 64))
+    sc = jnp.ones(64) * 1.3
+    bi = jnp.zeros(64) + 0.1
+    o, p, a = _three_ways(
+        monkeypatch, lambda: ops.group_norm(x, sc, bi, group_size=2))
+    for y in (p, a):
+        np.testing.assert_allclose(np.asarray(y), np.asarray(o),
+                                   atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_paths_close(monkeypatch):
+    q = jax.random.normal(KEY, (1, 2, 128, 64))
+    k = jax.random.normal(jax.random.PRNGKey(5), (1, 2, 128, 64))
+    v = jax.random.normal(jax.random.PRNGKey(6), (1, 2, 128, 64))
+    o, p, a = _three_ways(
+        monkeypatch, lambda: ops.flash_attention(q, k, v, causal=True))
+    for y in (p, a):
+        np.testing.assert_allclose(np.asarray(y), np.asarray(o),
+                                   atol=2e-5, rtol=2e-5)
+
+
+# ------------------------------------------------------------ in-kernel RNG
+
+def test_rng_uniform_bit_exact_numpy_vs_jnp():
+    ctr = np.arange(4096, dtype=np.int32)
+    u_np = rng.uniform01(np.uint32(42), ctr)
+    u_j = np.asarray(rng.uniform01(jnp.uint32(42),
+                                   jnp.asarray(ctr)))
+    np.testing.assert_array_equal(u_np, u_j)
+    assert 0.0 <= u_np.min() and u_np.max() < 1.0
+
+
+def test_in_kernel_rand_k_matches_materialized_generator():
+    """The kernel draws uniforms from (seed, flat-index) counters on the
+    fly; the oracle materializes the full array from the same hash.  The
+    masks must be bit-identical."""
+    v = jax.random.normal(KEY, (2048 + 9,))
+    for seed in (0, 7, 2**31 - 1):
+        sel_k, cnt_k = ops.rand_k_sparsify(v, 0.1, seed, interpret=True,
+                                           block_rows=64)
+        sel_r, cnt_r = ref.rand_k_select_ref(v, 0.1, seed)
+        np.testing.assert_array_equal(np.asarray(sel_k), np.asarray(sel_r))
+        assert int(cnt_k) == int(cnt_r)
+
+
+def test_rand_k_streams_differ_by_seed():
+    v = jnp.ones((4096,))
+    _, c1 = ops.rand_k_sparsify(v, 0.5, 1, interpret=True)
+    m1, _ = ops.rand_k_sparsify(v, 0.5, 1, interpret=True)
+    m2, _ = ops.rand_k_sparsify(v, 0.5, 2, interpret=True)
+    assert not np.array_equal(np.asarray(m1), np.asarray(m2))
+    assert abs(int(c1) - 2048) < 200           # unbiased keep ratio
+
+
+# ---------------------------------------------- fused v_max fold (histogram)
+
+@pytest.mark.parametrize("n", [1000, 4096, 8192 + 333])
+def test_fused_histogram_matches_two_pass(n):
+    """Folding the |v| max into the histogram kernel's first sweep must
+    leave the histogram, v_max — and therefore the DGC threshold and
+    count — bit-identical to the old separate-pre-pass path."""
+    v = jax.random.normal(KEY, (n,)) * 3.0
+    hist_f, vmax_f = abs_histogram_fused(v, n_bins=256, block_rows=64,
+                                         interpret=True)
+    vmax = jnp.max(jnp.abs(v)).astype(jnp.float32)
+    hist = abs_histogram(v, vmax, n_bins=256, block_rows=64, interpret=True)
+    assert float(vmax_f) == float(vmax)
+    np.testing.assert_array_equal(np.asarray(hist_f), np.asarray(hist))
+    t_f = threshold_from_histogram(hist_f, vmax_f, jnp.float32(0.95))
+    t = threshold_from_histogram(hist, vmax, jnp.float32(0.95))
+    assert float(t_f) == float(t)
+
+
+def test_bisection_oracle_matches_histogram_family():
+    """`ref.dgc_sparsify_ref` finds the bin by bisection on cumulative
+    counts; it must land on the same quantized threshold as the explicit
+    histogram + searchsorted."""
+    v = jax.random.normal(KEY, (50_000,)) * \
+        jax.random.gamma(jax.random.PRNGKey(8), 0.7, (50_000,))
+    for sp in (0.5, 0.9, 0.99, 0.999):
+        _, _, t = ref.dgc_sparsify_ref(v, jnp.float32(sp))
+        vm = jnp.max(jnp.abs(v)).astype(jnp.float32)
+        hist = ref.abs_histogram_ref(v, 256, vm)
+        t_h = threshold_from_histogram(hist, vm, jnp.float32(sp))
+        assert float(t) == float(t_h)
+
+
+# ------------------------------------------------------------- stickiness
+
+def test_one_trial_then_sticky(monkeypatch, tmp_path):
+    cache = tmp_path / "dispatch.json"
+    monkeypatch.setenv("REPRO_DISPATCH_CACHE", str(cache))
+    dispatch.reset_dispatcher()
+    v = jax.random.normal(KEY, (2048,))
+    w = jnp.ones((2048,))
+    ops.gaia_select(v, w, 0.5)
+    d = dispatch.get_dispatcher()
+    assert d.trials == 1
+    for _ in range(3):                         # same bucket: no re-timing
+        ops.gaia_select(v, w, 0.5)
+    assert d.trials == 1
+    data = json.loads(cache.read_text())
+    assert len(data) == 1
+    (key, ent), = data.items()
+    backend = jax.default_backend()
+    assert key.startswith(f"{backend}/gaia_select/float32/")
+    assert ent["label"] in ent["us"]
+
+    # a fresh process (fresh dispatcher) reloads the file: zero trials
+    dispatch.reset_dispatcher()
+    ops.gaia_select(v, w, 0.5)
+    assert dispatch.get_dispatcher().trials == 0
+
+
+def test_distinct_buckets_get_distinct_trials(monkeypatch):
+    d = dispatch.get_dispatcher()
+    v = jax.random.normal(KEY, (1024,))
+    ops.gaia_select(v, jnp.ones((1024,)), 0.5)
+    t1 = d.trials
+    big = jax.random.normal(KEY, (64 * 1024,))
+    ops.gaia_select(big, jnp.ones((64 * 1024,)), 0.5)
+    assert d.trials == t1 + 1                  # new size bucket → one trial
+
+
+# -------------------------------------------------------------- overrides
+
+def test_forced_paths_skip_trials(monkeypatch):
+    _force(monkeypatch, "oracle")
+    v = jax.random.normal(KEY, (4096,))
+    ops.gaia_select(v, jnp.ones((4096,)), 0.5)
+    assert dispatch.get_dispatcher().trials == 0
+    _force(monkeypatch, "pallas")
+    ops.gaia_select(v, jnp.ones((4096,)), 0.5)
+    assert dispatch.get_dispatcher().trials == 0
+
+
+def test_per_op_override_beats_global(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_DISPATCH", "pallas")
+    monkeypatch.setenv("REPRO_KERNEL_DISPATCH_GAIA_SELECT", "oracle")
+    dispatch.reset_dispatcher()
+    d = dispatch.get_dispatcher()
+    assert d.forced_path("gaia_select") == "oracle"
+    assert d.forced_path("dgc_sparsify") == "pallas"
+
+
+def test_invalid_override_raises(monkeypatch):
+    monkeypatch.setenv("REPRO_KERNEL_DISPATCH", "fastest")
+    dispatch.reset_dispatcher()
+    with pytest.raises(ValueError, match="fastest"):
+        dispatch.get_dispatcher().forced_path("gaia_select")
+
+
+def test_match_semantics():
+    m = dispatch.KernelDispatch._match
+    labels = ("oracle", "interpret:b256", "compiled:b64")
+    assert m("oracle", labels) == "oracle"
+    assert m("pallas", labels) == "interpret:b256"
+    assert m("interpret", labels) == "interpret:b256"
+    assert m("compiled", labels) == "compiled:b64"
+    assert m("compiled", ("oracle", "interpret:b8")) is None
