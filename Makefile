@@ -5,7 +5,7 @@ BENCH_JSON_DIR ?= out
 export BENCH_JSON_DIR
 
 .PHONY: test test-fast bench-smoke bench-smoke-async bench-smoke-links \
-	bench-smoke-kernels dryrun-smoke lint
+	bench-smoke-kernels dryrun-smoke lint lint-deep
 
 # tier-1 verify: the full test suite
 test:
@@ -47,6 +47,14 @@ dryrun-smoke:
 	  --reduced --mesh 2,2,2 --strategy dpsgd --topology ring
 	$(PYTHON) -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k \
 	  --reduced --mesh 2,2,2 --strategy adpsgd --topology tv-dcliques
+
+# repo static analysis (hard CI gate): AST invariant lints, kernel
+# registry parity, and the HLO graph audit of the compiled pod-gossip
+# step.  Findings land in $(BENCH_JSON_DIR)/AUDIT.json (uploaded with
+# the bench artifacts); suppress per-line with `# repro-allow: <rule>`
+# or grandfather via `python -m repro.analysis --update-baseline`.
+lint-deep:
+	$(PYTHON) -m repro.analysis --json $(BENCH_JSON_DIR)/AUDIT.json
 
 # ruff (pinned in requirements.txt); containers without it fall back to
 # the old pyflakes-level compileall check instead of failing the target

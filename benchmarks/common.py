@@ -57,13 +57,13 @@ def git_commit() -> str:
     sha = os.environ.get("GITHUB_SHA", "")
     if sha:
         return sha
+    import subprocess
     try:
-        import subprocess
         return subprocess.run(
             ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
             cwd=os.path.dirname(__file__), timeout=10,
         ).stdout.strip()
-    except Exception:
+    except (OSError, subprocess.SubprocessError):
         return ""
 
 

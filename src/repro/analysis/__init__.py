@@ -1,0 +1,36 @@
+"""`repro.analysis` — the static-analysis subsystem.
+
+Three passes, one CLI (``python -m repro.analysis``), wired into
+``make lint-deep`` and the CI fast gate:
+
+* :mod:`repro.analysis.astlint` — AST invariant lints (RA1xx):
+  unkeyed randomness, host syncs in jitted code, jit-in-loop
+  recompilation, broad excepts.
+* :mod:`repro.analysis.parity` — kernel registry parity (PA3xx): every
+  public op in ``kernels/ops.py`` must have its ref oracle, dispatch
+  entry, bench row, and a test.
+* :mod:`repro.analysis.graph_audit` — compiled-graph audit (GA2xx)
+  over the partitioned HLO: pod-axis discipline, wire-dtype widening,
+  host callbacks, donation drift.  Built on the HLO parser
+  (:mod:`repro.analysis.hlo`, moved here from
+  ``repro.launch.hlo_analysis``).
+
+Findings are suppressible per line (``# repro-allow: <rule>``) and
+grandfatherable via a baseline file (see :mod:`repro.analysis.base`).
+
+This module imports no JAX — the AST and parity passes run anywhere;
+only the CLI's graph-compile mode touches the launch stack.
+"""
+from repro.analysis.base import (Finding, apply_baseline, load_baseline,
+                                 write_baseline)
+from repro.analysis import astlint, graph_audit, parity
+from repro.analysis.astlint import lint_file, lint_paths
+from repro.analysis.parity import check_parity
+from repro.analysis.graph_audit import GraphAudit, audit_hlo
+
+#: every rule id -> short name, across the three passes
+ALL_RULES = {**astlint.RULES, **parity.RULES, **graph_audit.RULES}
+
+__all__ = ["Finding", "apply_baseline", "load_baseline", "write_baseline",
+           "lint_file", "lint_paths", "check_parity", "GraphAudit",
+           "audit_hlo", "ALL_RULES"]

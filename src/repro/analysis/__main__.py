@@ -1,0 +1,165 @@
+"""CLI runner: ``python -m repro.analysis`` — the lint-deep gate.
+
+Runs the AST lints and the registry-parity check, then (unless
+``--skip-graph``) the graph auditor: either over a saved HLO text
+(``--graph-hlo``) or by lowering + compiling the reduced pod-gossip
+train step on a tiny forced-host-device mesh, exactly like the CI
+dryrun smoke.  Emits ``out/AUDIT.json`` and exits non-zero on any
+finding not grandfathered by the baseline file.
+
+  PYTHONPATH=src python -m repro.analysis                   # full gate
+  PYTHONPATH=src python -m repro.analysis --skip-graph      # AST+parity
+  PYTHONPATH=src python -m repro.analysis --graph-hlo step.hlo \
+      --devices-per-pod 2 --wire-dtype bf16
+  PYTHONPATH=src python -m repro.analysis --update-baseline # grandfather
+
+Baseline: ``.lint-deep-baseline.json`` at the repo root (JSON list of
+finding fingerprints).  Baselined findings are reported but do not
+fail the gate; ``--update-baseline`` rewrites the file from the
+current findings.  Per-line suppressions: ``# repro-allow: <rule>``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import List, Optional
+
+from repro.analysis import (ALL_RULES, Finding, apply_baseline, astlint,
+                            check_parity, graph_audit, load_baseline,
+                            write_baseline)
+
+BASELINE_NAME = ".lint-deep-baseline.json"
+
+#: the graph pass's auto-compile target: the same reduced pod-gossip
+#: combo the CI dryrun smoke exercises (2 pods x 2 data x 2 model on
+#: forced host devices)
+_GRAPH_ARCH = "qwen3-0.6b"
+_GRAPH_SHAPE = "train_4k"
+_GRAPH_STRATEGY = "dpsgd"
+_GRAPH_TOPOLOGY = "ring"
+_GRAPH_MESH = "2,2,2"
+
+
+def _repo_root() -> str:
+    """<root>/src/repro/analysis/__main__.py -> <root>."""
+    here = os.path.abspath(os.path.dirname(__file__))
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))
+
+
+def _graph_pass_compile(verbose: bool) -> graph_audit.GraphAudit:
+    """Lower + compile the reduced gossip step and audit its HLO.
+    Imported late: ``repro.launch.dryrun`` must set XLA_FLAGS before
+    anything touches jax."""
+    from repro.launch.dryrun import _parse_mesh, dryrun_one
+    from repro.launch.mesh import devices_per_pod
+    mesh = _parse_mesh(_GRAPH_MESH)
+    rep = dryrun_one(_GRAPH_ARCH, _GRAPH_SHAPE, reduced=True, mesh=mesh,
+                     strategy=_GRAPH_STRATEGY, topology=_GRAPH_TOPOLOGY,
+                     return_hlo=True, verbose=verbose)
+    tag = (f"dryrun:{_GRAPH_ARCH}/{_GRAPH_SHAPE}/{_GRAPH_STRATEGY}/"
+           f"{_GRAPH_TOPOLOGY}@{_GRAPH_MESH}")
+    return graph_audit.audit_hlo(
+        rep["_hlo"], tag=tag, devices_per_pod=devices_per_pod(mesh),
+        expect_donation=True)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo static analysis: AST lints, registry parity, "
+                    "HLO graph audit")
+    ap.add_argument("--root", default=_repo_root(),
+                    help="repo root (default: inferred from the package)")
+    ap.add_argument("--skip-graph", action="store_true",
+                    help="AST + parity only (no compile, no jax)")
+    ap.add_argument("--graph-hlo", default=None,
+                    help="audit this saved HLO text instead of compiling")
+    ap.add_argument("--devices-per-pod", type=int, default=None,
+                    help="pod size for --graph-hlo pod-axis checks")
+    ap.add_argument("--wire-dtype", default=None,
+                    help="expected wire dtype for --graph-hlo (e.g. bf16;"
+                         " default: inferred from entry parameters)")
+    ap.add_argument("--expect-donation", action="store_true",
+                    help="--graph-hlo: fail if no input_output_alias map")
+    ap.add_argument("--json", dest="json_out", default=None,
+                    help="write the machine-readable audit here "
+                         "(default: <root>/out/AUDIT.json)")
+    ap.add_argument("--baseline", default=None,
+                    help=f"fingerprint baseline (default: "
+                         f"<root>/{BASELINE_NAME})")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="grandfather the current findings and exit 0")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args(argv)
+
+    root = os.path.abspath(args.root)
+    t0 = time.time()
+    findings: List[Finding] = []
+
+    findings += astlint.lint_paths(root)
+    n_ast = len(findings)
+    findings += check_parity(root)
+    n_parity = len(findings) - n_ast
+
+    graph_summary = None
+    if args.graph_hlo:
+        with open(args.graph_hlo, encoding="utf-8") as f:
+            text = f.read()
+        ga = graph_audit.audit_hlo(
+            text, tag=f"hlo:{os.path.basename(args.graph_hlo)}",
+            devices_per_pod=args.devices_per_pod,
+            expected_wire_dtype=args.wire_dtype,
+            expect_donation=args.expect_donation)
+        findings += ga.findings
+        graph_summary = ga.to_json()
+    elif not args.skip_graph:
+        ga = _graph_pass_compile(verbose=not args.quiet)
+        findings += ga.findings
+        graph_summary = ga.to_json()
+
+    baseline_path = args.baseline or os.path.join(root, BASELINE_NAME)
+    if args.update_baseline:
+        write_baseline(baseline_path, findings)
+        print(f"[analysis] baselined {len(findings)} finding(s) -> "
+              f"{baseline_path}")
+        return 0
+    apply_baseline(findings, load_baseline(baseline_path))
+    failing = [f for f in findings if not f.baselined]
+
+    json_out = args.json_out or os.path.join(root, "out", "AUDIT.json")
+    payload = {
+        "ok": not failing,
+        "elapsed_s": round(time.time() - t0, 2),
+        "counts": {"ast": n_ast, "parity": n_parity,
+                   "graph": len(findings) - n_ast - n_parity,
+                   "baselined": len(findings) - len(failing)},
+        "rules": ALL_RULES,
+        "findings": [f.to_json() for f in findings],
+        "graph": graph_summary,
+    }
+    d = os.path.dirname(json_out)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    with open(json_out, "w", encoding="utf-8") as f:
+        json.dump(payload, f, indent=1)
+
+    for f in findings:
+        print(f"[analysis] {f.format()}")
+    graph_n = payload["counts"]["graph"]
+    print(f"[analysis] ast={n_ast} parity={n_parity} graph={graph_n} "
+          f"({len(findings) - len(failing)} baselined) in "
+          f"{payload['elapsed_s']}s -> {json_out}")
+    if failing:
+        print(f"[analysis] FAIL: {len(failing)} finding(s); suppress a "
+              "line with `# repro-allow: <rule>` or grandfather with "
+              "--update-baseline")
+        return 1
+    print("[analysis] OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,298 @@
+"""AST invariant lints: the statically-detectable half of every
+correctness incident this repo has shipped a fix for.
+
+Rules (ids are stable; suppress per-line with ``# repro-allow: <id>``):
+
+* **RA101 unkeyed-randomness** — ``np.random.<fn>()`` module-level draws
+  (global mutable RNG state) and argless ``default_rng()``.  Every draw
+  in this repo must be a pure function of an explicit seed — Li et
+  al.'s non-IID silos study (PAPERS.md) shows unreproducible
+  partition/seed handling invalidates whole experiment grids, and the
+  seeded-replay tests (``tests/test_links.py``) only hold when nothing
+  draws from ambient state.  Keyed constructions
+  (``default_rng(seed)``, ``Generator(PCG64(seed))``) pass;
+  ``kernels/rng.py`` (the counter-hash RNG all in-kernel draws key
+  from) is allow-listed wholesale.
+* **RA102 host-sync-in-jit** — ``.item()``, or ``float()``/``int()``/
+  ``bool()``/``np.asarray()``/``np.array()`` applied directly to a
+  function parameter, inside a jit-decorated function (or a lambda
+  handed straight to ``jax.jit``).  On traced values these force a
+  device->host sync per call (or a tracer leak); scalars that must be
+  read back belong outside the jitted step.
+* **RA103 jit-in-loop** — ``jax.jit(...)`` called (or a jit-decorated
+  ``def``) inside a ``for``/``while`` body.  A fresh jit per iteration
+  retraces and recompiles every round — the compile-once discipline the
+  ``trace_count`` tests enforce dynamically, checked statically.
+* **RA104 broad-except** — bare ``except:`` / ``except Exception`` /
+  ``except BaseException``.  The launch-path drift incidents (PR 4) hid
+  behind exactly this kind of swallow-everything handler; sites that
+  genuinely mean "any failure = this path is unsupported" carry an
+  inline ``# repro-allow: RA104`` with their justification.
+"""
+from __future__ import annotations
+
+import ast
+import fnmatch
+import os
+from typing import Dict, List, Optional, Sequence
+
+from repro.analysis.base import (Finding, SourceFile, iter_py_files,
+                                 load_source)
+
+RULES: Dict[str, str] = {
+    "RA100": "syntax-error",
+    "RA101": "unkeyed-randomness",
+    "RA102": "host-sync-in-jit",
+    "RA103": "jit-in-loop",
+    "RA104": "broad-except",
+}
+
+#: directories linted by default (repo-relative)
+DEFAULT_SUBDIRS = ("src/repro", "benchmarks", "examples")
+
+#: per-rule path allow-list (repo-relative glob): the whole file is
+#: exempt from that rule.  kernels/rng.py IS the keyed RNG substrate —
+#: its tests-of-randomness idioms are the one place raw draws belong.
+RULE_ALLOW_PATHS: Dict[str, Sequence[str]] = {
+    "RA101": ("src/repro/kernels/rng.py",),
+}
+
+#: np.random attributes that are keyed-RNG *constructors*, not draws
+#: from the module-level global generator
+_KEYED_CONSTRUCTORS = {"default_rng", "Generator", "SeedSequence",
+                       "PCG64", "Philox", "SFC64", "MT19937",
+                       "BitGenerator", "RandomState"}
+
+_HOST_CASTS = {"float", "int", "bool"}
+_NP_HOST_FNS = {"asarray", "array"}
+
+
+def _is_np_random_attr(node: ast.AST) -> Optional[str]:
+    """If ``node`` is ``np.random.<X>`` / ``numpy.random.<X>``, return X."""
+    if not isinstance(node, ast.Attribute):
+        return None
+    v = node.value
+    if (isinstance(v, ast.Attribute) and v.attr == "random"
+            and isinstance(v.value, ast.Name)
+            and v.value.id in ("np", "numpy")):
+        return node.attr
+    return None
+
+
+def _mentions_jit(node: ast.AST) -> bool:
+    """Does this (decorator) expression reference a ``jit`` name —
+    ``jax.jit``, bare ``jit``, ``functools.partial(jax.jit, ...)``?"""
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and sub.attr == "jit":
+            return True
+        if isinstance(sub, ast.Name) and sub.id == "jit":
+            return True
+    return False
+
+
+def _is_jit_call(node: ast.Call) -> bool:
+    """Is this call ``jax.jit(...)`` / ``jit(...)`` (not a decorated-def
+    helper like ``functools.partial``)?"""
+    f = node.func
+    if isinstance(f, ast.Attribute) and f.attr == "jit":
+        return True
+    if isinstance(f, ast.Name) and f.id == "jit":
+        return True
+    return False
+
+
+def _root_name(node: ast.AST) -> Optional[str]:
+    """The base Name of a Name/Attribute/Subscript chain, else None."""
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        node = node.value
+    if isinstance(node, ast.Name):
+        return node.id
+    return None
+
+
+def _param_names(fn: ast.AST) -> List[str]:
+    a = fn.args
+    names = [p.arg for p in (a.posonlyargs + a.args + a.kwonlyargs)]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, src: SourceFile):
+        self.src = src
+        self.findings: List[Finding] = []
+        self._loop_depth = 0
+        # stack of per-jit-context parameter-name sets; non-empty =>
+        # currently inside traced code
+        self._jit_params: List[set] = []
+
+    def _emit(self, rule: str, node: ast.AST, message: str) -> None:
+        f = self.src.finding(rule, getattr(node, "lineno", 0), message)
+        if f is not None:
+            self.findings.append(f)
+
+    # ---- loops (RA103 context) ----
+    def visit_For(self, node):
+        self._loop_depth += 1
+        self.generic_visit(node)
+        self._loop_depth -= 1
+
+    visit_AsyncFor = visit_For
+
+    def visit_While(self, node):
+        self._loop_depth += 1
+        self.generic_visit(node)
+        self._loop_depth -= 1
+
+    # ---- functions (jit context + RA103 for decorated defs) ----
+    def _visit_fn(self, node):
+        jitted = any(_mentions_jit(d) for d in node.decorator_list)
+        if jitted and self._loop_depth:
+            self._emit("RA103", node,
+                       f"jit-decorated `{node.name}` defined inside a "
+                       "loop: retraces/recompiles every iteration "
+                       "(compile once, pass runtime operands instead)")
+        if jitted:
+            self._jit_params.append(set(_param_names(node)))
+        # a nested def body runs at its own call time, not in this loop
+        saved, self._loop_depth = self._loop_depth, 0
+        self.generic_visit(node)
+        self._loop_depth = saved
+        if jitted:
+            self._jit_params.pop()
+
+    visit_FunctionDef = _visit_fn
+    visit_AsyncFunctionDef = _visit_fn
+
+    # ---- except handlers (RA104) ----
+    def visit_ExceptHandler(self, node):
+        broad = node.type is None
+        types = []
+        if isinstance(node.type, ast.Tuple):
+            types = node.type.elts
+        elif node.type is not None:
+            types = [node.type]
+        for t in types:
+            name = t.attr if isinstance(t, ast.Attribute) else \
+                t.id if isinstance(t, ast.Name) else ""
+            if name in ("Exception", "BaseException"):
+                broad = True
+        if broad:
+            what = "bare `except:`" if node.type is None else \
+                "`except Exception`"
+            self._emit("RA104", node,
+                       f"{what} swallows every failure mode — catch "
+                       "concrete exception types, or justify with "
+                       "`# repro-allow: RA104`")
+        self.generic_visit(node)
+
+    # ---- calls (RA101, RA102, RA103) ----
+    def visit_Call(self, node):
+        # RA101: np.random.<draw>(...) and argless default_rng()
+        attr = _is_np_random_attr(node.func)
+        if attr is not None:
+            if attr == "default_rng" and not node.args and not node.keywords:
+                self._emit("RA101", node,
+                           "argless `np.random.default_rng()` draws from "
+                           "OS entropy — pass an explicit seed")
+            elif attr == "seed":
+                self._emit("RA101", node,
+                           "`np.random.seed` mutates global RNG state — "
+                           "use an explicitly keyed `default_rng(seed)`")
+            elif attr not in _KEYED_CONSTRUCTORS:
+                self._emit("RA101", node,
+                           f"`np.random.{attr}` draws from the global "
+                           "generator — use an explicitly keyed "
+                           "`default_rng(seed)`")
+        elif (isinstance(node.func, ast.Name)
+              and node.func.id == "default_rng"
+              and not node.args and not node.keywords):
+            self._emit("RA101", node,
+                       "argless `default_rng()` draws from OS entropy — "
+                       "pass an explicit seed")
+
+        # RA103: jax.jit(...) invoked inside a loop body
+        if _is_jit_call(node) and self._loop_depth:
+            self._emit("RA103", node,
+                       "`jax.jit(...)` called inside a loop: a fresh "
+                       "jit per iteration recompiles every round "
+                       "(hoist it; make changing values runtime operands)")
+
+        # RA102: host syncs in traced code
+        if self._jit_params:
+            params = self._jit_params[-1]
+            if (isinstance(node.func, ast.Attribute)
+                    and node.func.attr == "item"
+                    and not node.args and not node.keywords):
+                self._emit("RA102", node,
+                           "`.item()` inside a jitted function forces a "
+                           "device->host sync per call (or leaks a "
+                           "tracer) — return the array instead")
+            fname = node.func.id if isinstance(node.func, ast.Name) else None
+            np_attr = None
+            if (isinstance(node.func, ast.Attribute)
+                    and isinstance(node.func.value, ast.Name)
+                    and node.func.value.id in ("np", "numpy")):
+                np_attr = node.func.attr
+            hazard = (fname in _HOST_CASTS and fname) or \
+                (np_attr in _NP_HOST_FNS and f"np.{np_attr}")
+            if hazard and node.args:
+                root = _root_name(node.args[0])
+                if root in params:
+                    self._emit("RA102", node,
+                               f"`{hazard}(...)` applied to traced "
+                               f"operand `{root}` inside a jitted "
+                               "function — host materialization of a "
+                               "tracer; keep it a jnp value")
+
+        # a lambda handed straight to jax.jit traces with the lambda's
+        # own params — lint its body in jit context
+        if _is_jit_call(node):
+            for arg in node.args:
+                if isinstance(arg, ast.Lambda):
+                    self._jit_params.append(set(_param_names(arg)))
+                    self.generic_visit(arg)
+                    self._jit_params.pop()
+                else:
+                    self.visit(arg)
+            for kw in node.keywords:
+                self.visit(kw)
+            return
+        self.generic_visit(node)
+
+
+def lint_source(src: SourceFile) -> List[Finding]:
+    """All AST findings for one parsed file (path allow-lists applied)."""
+    try:
+        tree = ast.parse(src.text, filename=src.path)
+    except SyntaxError as e:
+        return [Finding(rule="RA100", path=src.rel,
+                        line=e.lineno or 0,
+                        message=f"syntax error: {e.msg}",
+                        source="")]
+    linter = _Linter(src)
+    linter.visit(tree)
+    out = []
+    for f in linter.findings:
+        allows = RULE_ALLOW_PATHS.get(f.rule, ())
+        if any(fnmatch.fnmatch(src.rel, pat) for pat in allows):
+            continue
+        out.append(f)
+    return out
+
+
+def lint_paths(root: str, subdirs: Sequence[str] = DEFAULT_SUBDIRS
+               ) -> List[Finding]:
+    """Lint every .py file under ``root/<subdir>``."""
+    findings: List[Finding] = []
+    for path in iter_py_files(root, subdirs):
+        findings.extend(lint_source(load_source(path, root)))
+    return findings
+
+
+def lint_file(path: str, root: Optional[str] = None) -> List[Finding]:
+    """Lint a single file (tests plant violations through this)."""
+    return lint_source(load_source(path, root or os.path.dirname(path)))

@@ -1,0 +1,159 @@
+"""Registry-parity check: a kernel op cannot ship half-wired.
+
+Every public op in ``kernels/ops.py`` is a four-legged contract:
+
+* **PA301** a jnp oracle in ``kernels/ref.py`` — the dispatch candidate
+  the kernel must never lose to, and the equivalence baseline tests
+  compare against;
+* **PA302** a dispatch decision (``_decide("<op>", ...)``) — otherwise
+  the op silently bypasses the measured backend routing;
+* **PA303** a ``benchmarks/kernels_bench.py`` row — otherwise the perf
+  gate (``report.py --gate``) cannot see it regress;
+* **PA304** at least one test referencing it — otherwise nothing pins
+  its numerics.
+
+Detection is structural (AST over ops.py, resolving one level of
+module-level helper indirection — ``_gaia_oracle = jax.jit(
+_ref.gaia_select_ref)`` counts as an oracle reference), so the check
+needs no imports and works on a planted tree in tests.
+"""
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Set
+
+from repro.analysis.base import Finding, iter_py_files
+
+RULES = {
+    "PA301": "missing-ref-oracle",
+    "PA302": "missing-dispatch-entry",
+    "PA303": "missing-bench-row",
+    "PA304": "missing-test-reference",
+}
+
+OPS_PATH = os.path.join("src", "repro", "kernels", "ops.py")
+REF_PATH = os.path.join("src", "repro", "kernels", "ref.py")
+BENCH_PATH = os.path.join("benchmarks", "kernels_bench.py")
+TESTS_DIR = "tests"
+
+#: the module alias ops.py imports the oracles under
+_REF_ALIASES = ("_ref", "ref")
+
+
+@dataclass
+class OpWiring:
+    """What one public op in ops.py is statically wired to."""
+    name: str
+    lineno: int
+    ref_fns: Set[str] = field(default_factory=set)   # _ref.<X> reached
+    dispatch_keys: Set[str] = field(default_factory=set)  # _decide("<k>")
+
+
+def _collect_refs(node: ast.AST, wiring: OpWiring,
+                  helper_names: Set[str]) -> Set[str]:
+    """Scan one function/assignment body: record ``_ref.X`` attribute
+    loads and ``_decide("key", ...)`` literals into ``wiring``; return
+    the module-level helper names it references (for the BFS)."""
+    used: Set[str] = set()
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Attribute) and \
+                isinstance(sub.value, ast.Name) and \
+                sub.value.id in _REF_ALIASES:
+            wiring.ref_fns.add(sub.attr)
+        if isinstance(sub, ast.Call):
+            f = sub.func
+            if isinstance(f, ast.Name) and f.id == "_decide" and sub.args:
+                a0 = sub.args[0]
+                if isinstance(a0, ast.Constant) and isinstance(a0.value, str):
+                    wiring.dispatch_keys.add(a0.value)
+        if isinstance(sub, ast.Name) and sub.id in helper_names:
+            used.add(sub.id)
+    return used
+
+
+def op_wirings(ops_source: str) -> List[OpWiring]:
+    """Public ops of an ops.py source and their reachable wiring."""
+    tree = ast.parse(ops_source)
+    helpers: Dict[str, ast.AST] = {}
+    publics: List[ast.AST] = []
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if node.name.startswith("_"):
+                helpers[node.name] = node
+            else:
+                publics.append(node)
+        elif isinstance(node, ast.Assign):
+            for t in node.targets:
+                if isinstance(t, ast.Name) and t.id.startswith("_"):
+                    helpers[t.id] = node
+    out = []
+    for fn in publics:
+        w = OpWiring(name=fn.name, lineno=fn.lineno)
+        seen: Set[str] = set()
+        frontier = [fn]
+        while frontier:
+            node = frontier.pop()
+            for used in _collect_refs(node, w, set(helpers)):
+                if used not in seen:
+                    seen.add(used)
+                    frontier.append(helpers[used])
+        out.append(w)
+    return out
+
+
+def _read(path: str) -> Optional[str]:
+    if not os.path.exists(path):
+        return None
+    with open(path, encoding="utf-8") as f:
+        return f.read()
+
+
+def check_parity(root: str, *,
+                 ops_path: str = OPS_PATH, ref_path: str = REF_PATH,
+                 bench_path: str = BENCH_PATH,
+                 tests_dir: str = TESTS_DIR) -> List[Finding]:
+    """Parity findings for the tree rooted at ``root`` (paths
+    root-relative so tests can point this at a planted layout)."""
+    findings: List[Finding] = []
+    rel = ops_path.replace(os.sep, "/")
+    ops_src = _read(os.path.join(root, ops_path))
+    if ops_src is None:
+        return [Finding(rule="PA301", path=rel, line=0,
+                        message=f"ops module {ops_path} not found",
+                        source=ops_path)]
+    ref_src = _read(os.path.join(root, ref_path)) or ""
+    ref_fns = {n.name for n in ast.parse(ref_src).body
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+    bench_src = _read(os.path.join(root, bench_path)) or ""
+    test_srcs = [_read(p) or "" for p in
+                 iter_py_files(root, (tests_dir,))]
+
+    for w in op_wirings(ops_src):
+        resolved = w.ref_fns & ref_fns
+        if not resolved:
+            missing = ", ".join(sorted(w.ref_fns)) or "none referenced"
+            findings.append(Finding(
+                rule="PA301", path=rel, line=w.lineno, source=w.name,
+                message=f"op `{w.name}` has no oracle in "
+                        f"{ref_path} ({missing})"))
+        if not w.dispatch_keys:
+            findings.append(Finding(
+                rule="PA302", path=rel, line=w.lineno, source=w.name,
+                message=f"op `{w.name}` never consults the dispatcher "
+                        "(`_decide(\"<op>\", ...)`) — it bypasses "
+                        "backend-aware routing"))
+        if not re.search(rf"\bops\.{w.name}\b", bench_src):
+            findings.append(Finding(
+                rule="PA303", path=rel, line=w.lineno, source=w.name,
+                message=f"op `{w.name}` has no row in {bench_path} — "
+                        "the perf gate cannot see it regress"))
+        pat = re.compile(rf"\b{w.name}\b")
+        if not any(pat.search(src) for src in test_srcs):
+            findings.append(Finding(
+                rule="PA304", path=rel, line=w.lineno, source=w.name,
+                message=f"op `{w.name}` is referenced by no test under "
+                        f"{tests_dir}/ — nothing pins its numerics"))
+    return findings

@@ -311,7 +311,8 @@ def train_decentralized(cnn_cfg: CNNConfig, algo_name: str,
             scout.record_step(cf)
             rep = scout.maybe_travel(
                 t, algo, state,
-                lambda node: loader.sample_train_subset(node, 256, seed=t))
+                lambda node, _t=t: loader.sample_train_subset(
+                    node, 256, seed=_t))
             if rep is not None:
                 # model traveling overhead: the scout booked each
                 # probe's shipment on the edge it crossed

@@ -97,7 +97,7 @@ def derive_roofline(arch: str, shape: str, mesh_name: str, n_chips: int,
                     note: str = "") -> Roofline:
     # trip-count-aware per-device analysis (XLA's cost_analysis visits
     # while bodies once — useless for scan-over-layers programs)
-    from repro.launch import hlo_analysis
+    from repro.analysis import hlo as hlo_analysis
     hc = hlo_analysis.analyze(hlo_text)
     flops = hc.flops
     byts = hc.bytes_accessed

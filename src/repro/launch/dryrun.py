@@ -21,9 +21,11 @@ from typing import Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import graph_audit
+from repro.analysis import hlo as hlo_analysis
 from repro.configs.base import CommConfig, INPUT_SHAPES
 from repro.configs.registry import ARCH_IDS, get_config
-from repro.launch import analysis, hlo_analysis
+from repro.launch import analysis
 from repro.launch.mesh import (devices_per_pod, make_production_mesh,
                                n_pods as mesh_n_pods)
 from repro.launch.sharding import (batch_shardings, cache_shardings,
@@ -205,12 +207,27 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                     "report cannot classify (send/recv, broadcast, or "
                     "unparseable groups) — cross-pod byte totals would "
                     "silently understate the exchange")
+    audit = None
+    if shape.mode == "train" and pods > 1:
+        # the general graph audit (repro.analysis.graph_audit): wire
+        # dtype, host callbacks, donation drift on top of the pod-axis
+        # checks above.  Gossip strategies hard-fail on any finding —
+        # the bf16-widening incident PR 4 fixed is exactly GA202.
+        ga = graph_audit.audit_hlo(
+            hlo, tag=f"{arch}/{shape_name}/{strategy}",
+            devices_per_pod=devices_per_pod(mesh), expect_donation=True)
+        audit = ga.to_json()
+        if strategy in GOSSIP_STRATEGIES and ga.findings:
+            raise RuntimeError(
+                f"{strategy}: graph audit failed — "
+                + "; ".join(f"{f.rule} {f.message}" for f in ga.findings))
     report = {
         "arch": arch, "shape": shape_name, "mesh": mesh_name,
         "mode": shape.mode, "strategy": strategy if shape.mode == "train"
         else None,
         "ok": True,
         "pod_exchange": pod_exchange,
+        "audit": audit,
         "memory": mem_summary,
         "cost": {k: float(v) for k, v in (cost or {}).items()
                  if isinstance(v, (int, float))},
@@ -331,7 +348,8 @@ def main(argv=None) -> int:
                 else:
                     rep.pop("_hlo")
             reports.append(rep)
-        except Exception as e:  # noqa: BLE001 — report and continue
+        except Exception as e:  # repro-allow: RA104 — sweep driver:
+            #                     record the failure row and keep going
             traceback.print_exc()
             rep = {"arch": a, "shape": s, "ok": False,
                    "error": f"{type(e).__name__}: {e}"}

@@ -13,7 +13,7 @@ the evidence).
 import argparse
 import sys
 
-from repro.launch import hlo_analysis
+from repro.analysis import hlo as hlo_analysis
 
 
 def main(argv=None):
