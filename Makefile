@@ -5,7 +5,7 @@ BENCH_JSON_DIR ?= out
 export BENCH_JSON_DIR
 
 .PHONY: test test-fast bench-smoke bench-smoke-async bench-smoke-links \
-	bench-smoke-kernels dryrun-smoke lint lint-deep
+	bench-smoke-kernels dryrun-smoke lint lint-deep lint-deep-full
 
 # tier-1 verify: the full test suite
 test:
@@ -41,20 +41,32 @@ bench-smoke-links:
 
 # launch-path gossip smoke: lower + compile the pod-gossip train step on
 # a tiny CPU mesh; fails if the cross-pod exchange stops lowering to
-# pod-axis collective-permutes (ring + tv-dcliques fabrics)
+# pod-axis collective-permutes (ring + tv-dcliques fabrics).
+# --strict-audit: ANY graph-audit finding aborts, not just gossip ones.
 dryrun-smoke:
 	$(PYTHON) -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k \
-	  --reduced --mesh 2,2,2 --strategy dpsgd --topology ring
+	  --reduced --mesh 2,2,2 --strategy dpsgd --topology ring --strict-audit
 	$(PYTHON) -m repro.launch.dryrun --arch qwen3-0.6b --shape train_4k \
-	  --reduced --mesh 2,2,2 --strategy adpsgd --topology tv-dcliques
+	  --reduced --mesh 2,2,2 --strategy adpsgd --topology tv-dcliques \
+	  --strict-audit
 
 # repo static analysis (hard CI gate): AST invariant lints, kernel
-# registry parity, and the HLO graph audit of the compiled pod-gossip
-# step.  Findings land in $(BENCH_JSON_DIR)/AUDIT.json (uploaded with
-# the bench artifacts); suppress per-line with `# repro-allow: <rule>`
-# or grandfather via `python -m repro.analysis --update-baseline`.
+# registry parity, the jaxpr dataflow sweep over every strategy x
+# topology combo (trace-only, cheap), and the HLO graph audit of the
+# compiled pod-gossip smoke combo.  Findings land in
+# $(BENCH_JSON_DIR)/AUDIT.json (uploaded with the bench artifacts);
+# suppress per-line with `# repro-allow: <rule>` or grandfather via
+# `python -m repro.analysis --update-baseline`.
 lint-deep:
-	$(PYTHON) -m repro.analysis --json $(BENCH_JSON_DIR)/AUDIT.json
+	$(PYTHON) -m repro.analysis --fail-on-stale \
+	  --json $(BENCH_JSON_DIR)/AUDIT.json
+
+# the full matrix: additionally compile + HLO-audit EVERY combo (22
+# graphs, minutes not seconds) and emit the complete coverage matrix —
+# the CI full job's gate
+lint-deep-full:
+	$(PYTHON) -m repro.analysis --all-combos --fail-on-stale \
+	  --json $(BENCH_JSON_DIR)/AUDIT.json
 
 # ruff (pinned in requirements.txt); containers without it fall back to
 # the old pyflakes-level compileall check instead of failing the target

@@ -1,6 +1,6 @@
 """`repro.analysis` — the static-analysis subsystem.
 
-Three passes, one CLI (``python -m repro.analysis``), wired into
+Four passes, one CLI (``python -m repro.analysis``), wired into
 ``make lint-deep`` and the CI fast gate:
 
 * :mod:`repro.analysis.astlint` — AST invariant lints (RA1xx):
@@ -14,6 +14,12 @@ Three passes, one CLI (``python -m repro.analysis``), wired into
   host callbacks, donation drift.  Built on the HLO parser
   (:mod:`repro.analysis.hlo`, moved here from
   ``repro.launch.hlo_analysis``).
+* :mod:`repro.analysis.jaxpr_audit` — pre-lowering dataflow audit
+  (JA4xx) over ``jax.make_jaxpr`` output: host callbacks, wire-dtype
+  widening into collectives, off-pod-axis collectives, large closed
+  constants, unkeyed RNG — caught at trace time, before XLA folds
+  them.  Cheap enough to sweep every strategy x topology combo
+  (``audit_combos``).
 
 Findings are suppressible per line (``# repro-allow: <rule>``) and
 grandfatherable via a baseline file (see :mod:`repro.analysis.base`).
@@ -23,14 +29,18 @@ only the CLI's graph-compile mode touches the launch stack.
 """
 from repro.analysis.base import (Finding, apply_baseline, load_baseline,
                                  write_baseline)
-from repro.analysis import astlint, graph_audit, parity
+from repro.analysis import astlint, graph_audit, jaxpr_audit, parity
 from repro.analysis.astlint import lint_file, lint_paths
 from repro.analysis.parity import check_parity
 from repro.analysis.graph_audit import GraphAudit, audit_hlo
+from repro.analysis.jaxpr_audit import (JaxprAudit, audit_combos,
+                                        audit_jaxpr)
 
-#: every rule id -> short name, across the three passes
-ALL_RULES = {**astlint.RULES, **parity.RULES, **graph_audit.RULES}
+#: every rule id -> short name, across the four passes
+ALL_RULES = {**astlint.RULES, **parity.RULES, **graph_audit.RULES,
+             **jaxpr_audit.RULES}
 
 __all__ = ["Finding", "apply_baseline", "load_baseline", "write_baseline",
            "lint_file", "lint_paths", "check_parity", "GraphAudit",
-           "audit_hlo", "ALL_RULES"]
+           "audit_hlo", "JaxprAudit", "audit_combos", "audit_jaxpr",
+           "ALL_RULES"]

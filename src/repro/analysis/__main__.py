@@ -1,13 +1,23 @@
 """CLI runner: ``python -m repro.analysis`` — the lint-deep gate.
 
 Runs the AST lints and the registry-parity check, then (unless
-``--skip-graph``) the graph auditor: either over a saved HLO text
-(``--graph-hlo``) or by lowering + compiling the reduced pod-gossip
-train step on a tiny forced-host-device mesh, exactly like the CI
-dryrun smoke.  Emits ``out/AUDIT.json`` and exits non-zero on any
-finding not grandfathered by the baseline file.
+``--skip-graph``) the two graph passes:
 
-  PYTHONPATH=src python -m repro.analysis                   # full gate
+* the **jaxpr sweep** — trace + audit every strategy x topology combo
+  plus the prefill/decode graphs (JA4xx, pre-lowering, no XLA: the
+  whole matrix costs less than one compile);
+* the **HLO audit** (GA2xx, post-XLA) — either over a saved HLO text
+  (``--graph-hlo``), the single reduced pod-gossip combo the CI dryrun
+  smoke compiles (default), or the entire audit matrix
+  (``--all-combos``, the CI full job).
+
+Emits ``out/AUDIT.json`` — findings, the rule registry, and a coverage
+matrix (combo -> rules run -> findings) so CI can assert nothing in the
+matrix is silently unaudited — and exits non-zero on any finding not
+grandfathered by the baseline file.
+
+  PYTHONPATH=src python -m repro.analysis                   # fast gate
+  PYTHONPATH=src python -m repro.analysis --all-combos      # full matrix
   PYTHONPATH=src python -m repro.analysis --skip-graph      # AST+parity
   PYTHONPATH=src python -m repro.analysis --graph-hlo step.hlo \
       --devices-per-pod 2 --wire-dtype bf16
@@ -16,7 +26,10 @@ finding not grandfathered by the baseline file.
 Baseline: ``.lint-deep-baseline.json`` at the repo root (JSON list of
 finding fingerprints).  Baselined findings are reported but do not
 fail the gate; ``--update-baseline`` rewrites the file from the
-current findings.  Per-line suppressions: ``# repro-allow: <rule>``.
+current findings (pruning stale entries); ``--fail-on-stale`` turns
+stale entries — fingerprints matching no current finding — into a
+failure so they cannot accumulate.  Per-line suppressions:
+``# repro-allow: <rule>``.
 """
 from __future__ import annotations
 
@@ -25,22 +38,20 @@ import json
 import os
 import sys
 import time
-from typing import List, Optional
+from typing import Dict, List, Optional, Tuple
 
 from repro.analysis import (ALL_RULES, Finding, apply_baseline, astlint,
-                            check_parity, graph_audit, load_baseline,
-                            write_baseline)
+                            check_parity, graph_audit, jaxpr_audit,
+                            load_baseline, write_baseline)
 
 BASELINE_NAME = ".lint-deep-baseline.json"
 
-#: the graph pass's auto-compile target: the same reduced pod-gossip
-#: combo the CI dryrun smoke exercises (2 pods x 2 data x 2 model on
-#: forced host devices)
-_GRAPH_ARCH = "qwen3-0.6b"
+#: the default (fast-gate) HLO compile target: the same reduced
+#: pod-gossip combo the CI dryrun smoke exercises (2 pods x 2 data x
+#: 2 model on forced host devices)
 _GRAPH_SHAPE = "train_4k"
 _GRAPH_STRATEGY = "dpsgd"
 _GRAPH_TOPOLOGY = "ring"
-_GRAPH_MESH = "2,2,2"
 
 
 def _repo_root() -> str:
@@ -49,32 +60,57 @@ def _repo_root() -> str:
     return os.path.dirname(os.path.dirname(os.path.dirname(here)))
 
 
-def _graph_pass_compile(verbose: bool) -> graph_audit.GraphAudit:
-    """Lower + compile the reduced gossip step and audit its HLO.
-    Imported late: ``repro.launch.dryrun`` must set XLA_FLAGS before
-    anything touches jax."""
-    from repro.launch.dryrun import _parse_mesh, dryrun_one
-    from repro.launch.mesh import devices_per_pod
-    mesh = _parse_mesh(_GRAPH_MESH)
-    rep = dryrun_one(_GRAPH_ARCH, _GRAPH_SHAPE, reduced=True, mesh=mesh,
-                     strategy=_GRAPH_STRATEGY, topology=_GRAPH_TOPOLOGY,
-                     return_hlo=True, verbose=verbose)
-    tag = (f"dryrun:{_GRAPH_ARCH}/{_GRAPH_SHAPE}/{_GRAPH_STRATEGY}/"
-           f"{_GRAPH_TOPOLOGY}@{_GRAPH_MESH}")
-    return graph_audit.audit_hlo(
-        rep["_hlo"], tag=tag, devices_per_pod=devices_per_pod(mesh),
-        expect_donation=True)
+def _from_json(d: Dict) -> Finding:
+    return Finding(rule=d["rule"], path=d["path"], line=d["line"],
+                   message=d["message"], source=d["source"])
+
+
+def _graph_pass_compile(combos, verbose: bool
+                        ) -> List[Tuple[str, Optional[Dict],
+                                        List[Finding], Optional[str]]]:
+    """Lower + compile each combo and audit its HLO (via the audit
+    ``dryrun_one`` runs on every graph).  Returns
+    ``[(combo, audit_json, findings, error)]`` — a combo that fails to
+    compile stays in the matrix as an errored row.  Imported late:
+    ``repro.launch.dryrun`` must set XLA_FLAGS before anything touches
+    jax."""
+    from repro.launch import dryrun
+    mesh = dryrun._parse_mesh(dryrun.SWEEP_MESH)
+    rows = []
+    for shape_name, strat, topo in combos:
+        combo = f"{shape_name}/{strat or '-'}/{topo or '-'}"
+        try:
+            rep = dryrun.dryrun_one(
+                dryrun.SWEEP_ARCH, shape_name, reduced=True, mesh=mesh,
+                strategy=strat, topology=topo, verbose=verbose,
+                audit_fail="none")
+            aj = rep["audit"]
+            rows.append((combo, aj,
+                         [_from_json(d) for d in aj["findings"]], None))
+        except Exception as e:  # repro-allow: RA104 — matrix driver: a
+            #                     broken combo must stay a visible row,
+            #                     not abort the remaining compiles
+            rows.append((combo, None, [], f"{type(e).__name__}: {e}"))
+            if verbose:
+                print(f"[analysis] {combo}: compile FAILED "
+                      f"({type(e).__name__}: {e})")
+    return rows
 
 
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="repo static analysis: AST lints, registry parity, "
-                    "HLO graph audit")
+                    "jaxpr dataflow audit, HLO graph audit")
     ap.add_argument("--root", default=_repo_root(),
                     help="repo root (default: inferred from the package)")
     ap.add_argument("--skip-graph", action="store_true",
-                    help="AST + parity only (no compile, no jax)")
+                    help="AST + parity only (no trace, no compile, "
+                         "no jax)")
+    ap.add_argument("--all-combos", action="store_true",
+                    help="compile + HLO-audit EVERY combo in the audit "
+                         "matrix instead of the single smoke combo "
+                         "(the jaxpr sweep always covers the matrix)")
     ap.add_argument("--graph-hlo", default=None,
                     help="audit this saved HLO text instead of compiling")
     ap.add_argument("--devices-per-pod", type=int, default=None,
@@ -84,6 +120,9 @@ def main(argv: Optional[List[str]] = None) -> int:
                          " default: inferred from entry parameters)")
     ap.add_argument("--expect-donation", action="store_true",
                     help="--graph-hlo: fail if no input_output_alias map")
+    ap.add_argument("--const-threshold", type=int,
+                    default=jaxpr_audit.CONST_THRESHOLD_BYTES,
+                    help="JA404 closed-constant size threshold in bytes")
     ap.add_argument("--json", dest="json_out", default=None,
                     help="write the machine-readable audit here "
                          "(default: <root>/out/AUDIT.json)")
@@ -91,7 +130,11 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help=f"fingerprint baseline (default: "
                          f"<root>/{BASELINE_NAME})")
     ap.add_argument("--update-baseline", action="store_true",
-                    help="grandfather the current findings and exit 0")
+                    help="grandfather the current findings (pruning "
+                         "stale fingerprints) and exit 0")
+    ap.add_argument("--fail-on-stale", action="store_true",
+                    help="fail when the baseline carries fingerprints "
+                         "matching no current finding (CI hygiene)")
     ap.add_argument("-q", "--quiet", action="store_true")
     args = ap.parse_args(argv)
 
@@ -104,7 +147,19 @@ def main(argv: Optional[List[str]] = None) -> int:
     findings += check_parity(root)
     n_parity = len(findings) - n_ast
 
+    # ---- jaxpr sweep: the whole matrix, every run (trace-only) ----
+    jaxpr_rows = None
+    if not args.skip_graph and not args.graph_hlo:
+        jaxpr_rows = jaxpr_audit.audit_combos(
+            const_threshold_bytes=args.const_threshold,
+            verbose=not args.quiet)
+        for _, ja in jaxpr_rows:
+            findings += ja.findings
+    n_jaxpr = len(findings) - n_ast - n_parity
+
+    # ---- HLO audit: saved text, smoke combo, or the full matrix ----
     graph_summary = None
+    graph_rows = None
     if args.graph_hlo:
         with open(args.graph_hlo, encoding="utf-8") as f:
             text = f.read()
@@ -116,29 +171,65 @@ def main(argv: Optional[List[str]] = None) -> int:
         findings += ga.findings
         graph_summary = ga.to_json()
     elif not args.skip_graph:
-        ga = _graph_pass_compile(verbose=not args.quiet)
-        findings += ga.findings
-        graph_summary = ga.to_json()
+        from repro.launch.dryrun import iter_combos
+        combos = (list(iter_combos()) if args.all_combos
+                  else [(_GRAPH_SHAPE, _GRAPH_STRATEGY, _GRAPH_TOPOLOGY)])
+        graph_rows = _graph_pass_compile(combos, verbose=not args.quiet)
+        for _, _, fs, _ in graph_rows:
+            findings += fs
+        if len(graph_rows) == 1:
+            graph_summary = graph_rows[0][1]
+    n_graph = len(findings) - n_ast - n_parity - n_jaxpr
 
     baseline_path = args.baseline or os.path.join(root, BASELINE_NAME)
     if args.update_baseline:
+        stale = apply_baseline(findings, load_baseline(baseline_path))
         write_baseline(baseline_path, findings)
-        print(f"[analysis] baselined {len(findings)} finding(s) -> "
+        print(f"[analysis] baselined {len(findings)} finding(s) "
+              f"({len(stale)} stale fingerprint(s) pruned) -> "
               f"{baseline_path}")
         return 0
-    apply_baseline(findings, load_baseline(baseline_path))
+    stale = apply_baseline(findings, load_baseline(baseline_path))
     failing = [f for f in findings if not f.baselined]
+    compile_errors = [(c, err) for c, _, _, err in (graph_rows or [])
+                      if err]
 
+    # the coverage matrix: one row per combo, jaxpr + (when compiled)
+    # HLO columns — built AFTER apply_baseline so the rows carry the
+    # baselined flags CI consumes
+    coverage = None
+    if jaxpr_rows is not None:
+        hlo_by_combo = {c: (aj, fs, err)
+                        for c, aj, fs, err in (graph_rows or [])}
+        coverage = []
+        for combo, ja in jaxpr_rows:
+            row = {"combo": combo,
+                   "jaxpr": {"rules": sorted(jaxpr_audit.RULES),
+                             **ja.to_json()},
+                   "hlo": None}
+            if combo in hlo_by_combo:
+                aj, fs, err = hlo_by_combo[combo]
+                row["hlo"] = {"rules": sorted(graph_audit.RULES),
+                              "error": err, **(aj or {})}
+                if aj is not None:
+                    row["hlo"]["findings"] = [f.to_json() for f in fs]
+            coverage.append(row)
+
+    ok = (not failing and not compile_errors
+          and not (stale and args.fail_on_stale))
     json_out = args.json_out or os.path.join(root, "out", "AUDIT.json")
     payload = {
-        "ok": not failing,
+        "ok": ok,
         "elapsed_s": round(time.time() - t0, 2),
-        "counts": {"ast": n_ast, "parity": n_parity,
-                   "graph": len(findings) - n_ast - n_parity,
+        "counts": {"ast": n_ast, "parity": n_parity, "jaxpr": n_jaxpr,
+                   "graph": n_graph,
                    "baselined": len(findings) - len(failing)},
+        "stale_baseline": stale,
+        "compile_errors": [f"{c}: {e}" for c, e in compile_errors],
         "rules": ALL_RULES,
         "findings": [f.to_json() for f in findings],
         "graph": graph_summary,
+        "coverage": coverage,
     }
     d = os.path.dirname(json_out)
     if d:
@@ -148,14 +239,24 @@ def main(argv: Optional[List[str]] = None) -> int:
 
     for f in findings:
         print(f"[analysis] {f.format()}")
-    graph_n = payload["counts"]["graph"]
-    print(f"[analysis] ast={n_ast} parity={n_parity} graph={graph_n} "
-          f"({len(findings) - len(failing)} baselined) in "
-          f"{payload['elapsed_s']}s -> {json_out}")
+    for fp in stale:
+        print(f"[analysis] stale baseline fingerprint: {fp!r} matches "
+              "no current finding (prune with --update-baseline)")
+    print(f"[analysis] ast={n_ast} parity={n_parity} jaxpr={n_jaxpr} "
+          f"graph={n_graph} ({len(findings) - len(failing)} baselined, "
+          f"{len(stale)} stale) in {payload['elapsed_s']}s -> {json_out}")
     if failing:
         print(f"[analysis] FAIL: {len(failing)} finding(s); suppress a "
               "line with `# repro-allow: <rule>` or grandfather with "
               "--update-baseline")
+        return 1
+    if compile_errors:
+        print(f"[analysis] FAIL: {len(compile_errors)} combo(s) failed "
+              "to compile — the matrix has unaudited rows")
+        return 1
+    if stale and args.fail_on_stale:
+        print(f"[analysis] FAIL: {len(stale)} stale baseline "
+              "fingerprint(s); prune with --update-baseline")
         return 1
     print("[analysis] OK")
     return 0

@@ -148,10 +148,18 @@ def write_baseline(path: str, findings: Iterable[Finding]) -> None:
 
 
 def apply_baseline(findings: List[Finding], baseline: List[str]
-                   ) -> List[Finding]:
-    """Mark findings whose fingerprint is grandfathered.  Returns the
-    same list; failing findings are the non-baselined ones."""
+                   ) -> List[str]:
+    """Mark findings whose fingerprint is grandfathered (in place).
+
+    Returns the **stale** fingerprints — baseline entries that matched
+    no current finding.  Stale entries accumulate silently as flagged
+    lines are fixed or rewritten; the CLI reports them, prunes them on
+    ``--update-baseline``, and fails on them under ``--fail-on-stale``.
+    """
     known = set(baseline)
+    hit = set()
     for f in findings:
         f.baselined = f.fingerprint in known
-    return findings
+        if f.baselined:
+            hit.add(f.fingerprint)
+    return sorted(known - hit)

@@ -140,6 +140,7 @@ def parse_alias_map(text: str) -> Optional[List[Tuple[List[int], int,
 class GraphAudit:
     """Findings + the machine-readable summary for AUDIT.json."""
     tag: str
+    combo: Optional[str] = None
     findings: List[Finding] = field(default_factory=list)
     pod_exchange: Optional[hlo.PodExchange] = None
     expected_wire_dtype: Optional[str] = None
@@ -166,7 +167,7 @@ class GraphAudit:
                 "unparsed": p.unparsed,
             }
         return {
-            "tag": self.tag, "ok": self.ok,
+            "tag": self.tag, "combo": self.combo, "ok": self.ok,
             "pod_exchange": pex,
             "expected_wire_dtype": self.expected_wire_dtype,
             "cross_pod_dtype_bytes": self.cross_pod_dtype_bytes,
@@ -203,19 +204,28 @@ def infer_wire_dtype(comps: Dict[str, hlo.Computation]) -> Optional[str]:
 
 
 def audit_hlo(text: str, *, tag: str = "<hlo>",
+              combo: Optional[str] = None,
               devices_per_pod: Optional[int] = None,
               expected_wire_dtype: Optional[str] = None,
+              check_wire_dtype: bool = True,
+              check_pod_axis: bool = True,
               expect_donation: bool = False) -> GraphAudit:
     """Audit one partitioned HLO module.
 
+    ``combo`` labels the sweep row (``shape/strategy/topology``) this
+    module came from — the coverage matrix in AUDIT.json keys on it.
     ``devices_per_pod`` enables the pod-axis / cross-pod rules (GA201,
     GA202 restricted to cross-pod transfers, GA205); without it GA202
     considers every collective-permute a wire transfer.
+    ``check_pod_axis=False`` disables GA201 while keeping the
+    pod-exchange report and GA205: the coordinate-preservation
+    invariant is a *gossip-exchange* contract — non-gossip strategies
+    legitimately let GSPMD reshard with arbitrary cross-pod permutes.
     ``expect_donation`` turns a missing ``input_output_alias`` map into
     a GA204 finding (train steps donate their state; serve/prefill
     don't have to).
     """
-    rep = GraphAudit(tag=tag)
+    rep = GraphAudit(tag=tag, combo=combo)
     comps = hlo.parse_module(text)
     mult = hlo._multiplicities(comps)
 
@@ -227,7 +237,7 @@ def audit_hlo(text: str, *, tag: str = "<hlo>",
     if devices_per_pod is not None:
         pex = hlo.pod_exchange_report(text, devices_per_pod)
         rep.pod_exchange = pex
-        if not pex.pod_axis_only:
+        if check_pod_axis and not pex.pod_axis_only:
             emit("GA201",
                  "cross-pod collective-permute pair does not preserve "
                  "the intra-pod device coordinate — gossip is leaking "
@@ -241,8 +251,8 @@ def audit_hlo(text: str, *, tag: str = "<hlo>",
 
     # ---- wire dtype (GA202) ----
     expected = expected_wire_dtype or infer_wire_dtype(comps)
-    rep.expected_wire_dtype = expected
-    if expected in _FLOAT_BYTES:
+    rep.expected_wire_dtype = expected if check_wire_dtype else None
+    if check_wire_dtype and expected in _FLOAT_BYTES:
         exp_b = _FLOAT_BYTES[expected]
         for comp in comps.values():
             m = mult.get(comp.name, 0.0)

@@ -12,6 +12,12 @@ Every public op in ``kernels/ops.py`` is a four-legged contract:
 * **PA304** at least one test referencing it — otherwise nothing pins
   its numerics.
 
+Plus one meta-rule over the analysis subsystem itself:
+
+* **PA305** every rule id in ``repro.analysis.ALL_RULES`` must appear
+  in ``tests/test_analysis.py`` — a rule with no planted-violation
+  test can silently stop firing.
+
 Detection is structural (AST over ops.py, resolving one level of
 module-level helper indirection — ``_gaia_oracle = jax.jit(
 _ref.gaia_select_ref)`` counts as an oracle reference), so the check
@@ -32,7 +38,10 @@ RULES = {
     "PA302": "missing-dispatch-entry",
     "PA303": "missing-bench-row",
     "PA304": "missing-test-reference",
+    "PA305": "untested-analysis-rule",
 }
+
+ANALYSIS_TESTS = os.path.join("tests", "test_analysis.py")
 
 OPS_PATH = os.path.join("src", "repro", "kernels", "ops.py")
 REF_PATH = os.path.join("src", "repro", "kernels", "ref.py")
@@ -156,4 +165,30 @@ def check_parity(root: str, *,
                 rule="PA304", path=rel, line=w.lineno, source=w.name,
                 message=f"op `{w.name}` is referenced by no test under "
                         f"{tests_dir}/ — nothing pins its numerics"))
+    findings += _check_rule_tests(root)
     return findings
+
+
+def _check_rule_tests(root: str) -> List[Finding]:
+    """PA305: every registered rule id needs a planted-violation test.
+
+    Skipped when ``root`` has no ``tests/test_analysis.py`` — the
+    planted trees the parity tests build intentionally have no analysis
+    tests, and a partial checkout should not red-herring."""
+    path = os.path.join(root, ANALYSIS_TESTS)
+    test_src = _read(path)
+    if test_src is None:
+        return []
+    # late import: repro.analysis imports this module at its own import
+    from repro.analysis import ALL_RULES
+    rel = ANALYSIS_TESTS.replace(os.sep, "/")
+    out: List[Finding] = []
+    for rule in sorted(ALL_RULES):
+        if not re.search(rf"\b{rule}\b", test_src):
+            out.append(Finding(
+                rule="PA305", path=rel, line=0, source=rule,
+                message=f"rule {rule} ({ALL_RULES[rule]}) appears "
+                        f"nowhere in {rel} — a rule with no "
+                        "planted-violation test can silently stop "
+                        "firing"))
+    return out

@@ -32,16 +32,48 @@ from repro.launch.sharding import (batch_shardings, cache_shardings,
                                    param_shardings,
                                    train_state_shardings)
 from repro.launch.specs import input_specs
-from repro.launch.steps import (GOSSIP_STRATEGIES, gossip_operands,
-                                make_prefill_step, make_serve_step,
-                                make_train_step, train_state_shape)
-from repro.models.model import init_cache, init_model
+from repro.launch.steps import (GOSSIP_STRATEGIES, cache_shape,
+                                gossip_operands, make_prefill_step,
+                                make_serve_step, make_train_step,
+                                param_shape, train_state_shape)
 from repro.models.shard_hints import activation_sharding
 from repro.topology.graphs import build_demo_schedule
 
 SDS = jax.ShapeDtypeStruct
 
 STRATEGIES = ("bsp", "gaia", "fedavg", "dgc") + GOSSIP_STRATEGIES
+
+#: every fabric a gossip strategy can ride — the topology half of the
+#: audit matrix (STRATEGIES x GOSSIP_TOPOLOGIES, non-gossip strategies
+#: compile the same graph for every fabric so they sweep once)
+GOSSIP_TOPOLOGIES = ("ring", "torus", "full", "random", "geo-wan",
+                     "dcliques", "tv-dcliques", "random-matching")
+
+#: the all-combos sweep target: the reduced smoke config on the tiny
+#: forced-host-device multi-pod mesh CI compiles (2 pods x 2 data x
+#: 2 model) — same combo family the dryrun smoke has gated since PR 4
+SWEEP_ARCH = "qwen3-0.6b"
+SWEEP_SHAPE = "train_4k"
+SWEEP_MESH = "2,2,2"
+
+#: which graph-audit findings abort a dryrun: "gossip" (default — hard
+#: incidents on the gossip exchange path), "all" (--strict-audit: any
+#: strategy, serve/prefill included), "none" (collect only; the
+#: analysis CLI applies its own baseline semantics)
+AUDIT_FAIL_MODES = ("gossip", "all", "none")
+
+
+def iter_combos(include_serve: bool = True):
+    """The audit matrix: ``(shape_name, strategy, topology)`` rows —
+    every strategy x topology combo the launch path can compile, plus
+    the prefill/serve graphs (strategy/topology ``None`` there)."""
+    for s in STRATEGIES:
+        for t in (GOSSIP_TOPOLOGIES if s in GOSSIP_STRATEGIES
+                  else (None,)):
+            yield (SWEEP_SHAPE, s, t)
+    if include_serve:
+        yield ("prefill_32k", None, None)
+        yield ("decode_32k", None, None)
 
 
 def _with_shardings(shapes, shardings):
@@ -62,12 +94,117 @@ def _parse_mesh(spec: Optional[str]):
     return jax.make_mesh(dims, axes)
 
 
+def build_step(arch: str, shape_name: str, *,
+               strategy: Optional[str] = "gaia",
+               topology: Optional[str] = "ring",
+               staleness: Optional[int] = None, max_staleness: int = 2,
+               chunk: int = 512, remat: bool = True,
+               reduced: bool = False, mesh=None) -> Tuple:
+    """Construct one combo's ``(step, args, jit_kwargs)`` — the single
+    builder behind both graph passes: ``dryrun_one`` jits + lowers +
+    compiles it (post-XLA HLO audit), the jaxpr sweep
+    (:func:`trace_combo` / ``repro.analysis.jaxpr_audit``) runs
+    ``jax.make_jaxpr`` on the raw step (pre-lowering audit).  Must be
+    called inside ``with mesh, activation_sharding(mesh)``.
+
+    ``strategy``/``topology`` may be ``None`` for serve-side shapes
+    (prefill/decode), where no communication strategy applies."""
+    cfg = get_config(arch)
+    if reduced:
+        cfg = cfg.reduced()
+    shape = INPUT_SHAPES[shape_name]
+    pods = mesh_n_pods(mesh)
+    comm = CommConfig(strategy=strategy or "bsp",
+                      topology=topology or "ring",
+                      max_staleness=max_staleness)
+    long_mode = shape_name == "long_500k"
+
+    if shape.mode == "train":
+        state_shape = train_state_shape(cfg, comm, pods)
+        state_shardings = train_state_shardings(state_shape, mesh)
+        batch_shapes = input_specs(cfg, shape_name, n_pods=pods)
+        b_shardings = batch_shardings(batch_shapes, mesh,
+                                      pod_stacked=True)
+        step = make_train_step(cfg, comm, mesh=mesh, remat=remat,
+                               chunk=chunk)
+        args = (_with_shardings(state_shape, state_shardings),
+                _with_shardings(batch_shapes, b_shardings),
+                SDS((), jnp.int32))
+        in_sh: Tuple = (state_shardings, b_shardings, None)
+        if strategy in GOSSIP_STRATEGIES:
+            # round-0 operands of the real fabric (label-aware
+            # builders get the synthetic full-skew histogram): the
+            # values are runtime operands, so one compile serves the
+            # whole schedule
+            sched = build_demo_schedule(topology, pods)
+            args += (gossip_operands(
+                sched, 0,
+                staleness=(max_staleness if staleness is None
+                           else staleness)
+                if strategy == "adpsgd" else None,
+                max_staleness=max_staleness),)
+            in_sh += (None,)
+        return step, args, {"in_shardings": in_sh,
+                            "donate_argnums": (0,)}
+    if shape.mode == "prefill":
+        p_shape = param_shape(cfg)
+        p_shardings = param_shardings(p_shape, mesh)
+        batch_shapes = input_specs(cfg, shape_name)
+        b_shardings = batch_shardings(batch_shapes, mesh,
+                                      pod_stacked=False)
+        step = make_prefill_step(cfg, chunk=chunk)
+        args = (_with_shardings(p_shape, p_shardings),
+                _with_shardings(batch_shapes, b_shardings))
+        return step, args, {"in_shardings": (p_shardings, b_shardings)}
+    # decode
+    p_shape = param_shape(cfg)
+    p_shardings = param_shardings(p_shape, mesh)
+    c_shape = cache_shape(cfg, shape.global_batch, shape.seq_len,
+                          long_mode)
+    c_shardings = cache_shardings(
+        c_shape, mesh, batch_sharded=shape.global_batch >= 8)
+    batch_shapes = input_specs(cfg, shape_name)
+    b_shardings = batch_shardings(batch_shapes, mesh,
+                                  pod_stacked=False)
+    step = make_serve_step(cfg)
+    args = (_with_shardings(p_shape, p_shardings),
+            _with_shardings(c_shape, c_shardings),
+            _with_shardings(batch_shapes, b_shardings))
+    return step, args, {"in_shardings": (p_shardings, c_shardings,
+                                         b_shardings),
+                        "donate_argnums": (1,)}
+
+
+def trace_combo(arch: str, shape_name: str, *,
+                strategy: Optional[str] = None,
+                topology: Optional[str] = None,
+                staleness: Optional[int] = None, max_staleness: int = 2,
+                chunk: int = 512, remat: bool = True,
+                reduced: bool = True, mesh=None):
+    """Closed jaxpr of one combo's step — the pre-lowering artifact the
+    jaxpr audit walks.  Never invokes XLA: tracing the whole audit
+    matrix costs less than compiling one combo."""
+    mesh = mesh or make_production_mesh(multi_pod=True)
+    with mesh, activation_sharding(mesh):
+        step, args, _ = build_step(
+            arch, shape_name, strategy=strategy, topology=topology,
+            staleness=staleness, max_staleness=max_staleness,
+            chunk=chunk, remat=remat, reduced=reduced, mesh=mesh)
+        return jax.make_jaxpr(step)(*args)
+
+
 def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
-               strategy: str = "gaia", topology: str = "ring",
+               strategy: Optional[str] = "gaia",
+               topology: Optional[str] = "ring",
                staleness: Optional[int] = None, max_staleness: int = 2,
                chunk: int = 512, remat: bool = True, verbose: bool = True,
                reduced: bool = False, mesh=None,
-               return_hlo: bool = False) -> Dict:
+               return_hlo: bool = False,
+               audit_fail: str = "gossip") -> Dict:
+    if audit_fail not in AUDIT_FAIL_MODES:
+        raise ValueError(
+            f"audit_fail {audit_fail!r}: expected one of "
+            f"{AUDIT_FAIL_MODES}")
     cfg = get_config(arch)
     if reduced:
         cfg = cfg.reduced()
@@ -75,68 +212,13 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
     mesh = mesh or make_production_mesh(multi_pod=multi_pod)
     pods = mesh_n_pods(mesh)
     mesh_name = "x".join(str(s) for s in mesh.devices.shape)
-    comm = CommConfig(strategy=strategy, topology=topology,
-                      max_staleness=max_staleness)
-    long_mode = shape_name == "long_500k"
 
     with mesh, activation_sharding(mesh):
-        if shape.mode == "train":
-            state_shape = train_state_shape(cfg, comm, pods)
-            state_shardings = train_state_shardings(state_shape, mesh)
-            batch_shapes = input_specs(cfg, shape_name, n_pods=pods)
-            b_shardings = batch_shardings(batch_shapes, mesh,
-                                          pod_stacked=True)
-            step = make_train_step(cfg, comm, mesh=mesh, remat=remat,
-                                   chunk=chunk)
-            args = (_with_shardings(state_shape, state_shardings),
-                    _with_shardings(batch_shapes, b_shardings),
-                    SDS((), jnp.int32))
-            in_sh: Tuple = (state_shardings, b_shardings, None)
-            if strategy in GOSSIP_STRATEGIES:
-                # round-0 operands of the real fabric (label-aware
-                # builders get the synthetic full-skew histogram): the
-                # values are runtime operands, so one compile serves the
-                # whole schedule
-                sched = build_demo_schedule(topology, pods)
-                args += (gossip_operands(
-                    sched, 0,
-                    staleness=(max_staleness if staleness is None
-                               else staleness)
-                    if strategy == "adpsgd" else None,
-                    max_staleness=max_staleness),)
-                in_sh += (None,)
-            jitted = jax.jit(step, in_shardings=in_sh, donate_argnums=(0,))
-        elif shape.mode == "prefill":
-            p_shape = jax.eval_shape(
-                lambda: init_model(jax.random.PRNGKey(0), cfg))
-            p_shardings = param_shardings(p_shape, mesh)
-            batch_shapes = input_specs(cfg, shape_name)
-            b_shardings = batch_shardings(batch_shapes, mesh,
-                                          pod_stacked=False)
-            step = make_prefill_step(cfg, chunk=chunk)
-            jitted = jax.jit(step, in_shardings=(p_shardings, b_shardings))
-            args = (_with_shardings(p_shape, p_shardings),
-                    _with_shardings(batch_shapes, b_shardings))
-        else:  # decode
-            p_shape = jax.eval_shape(
-                lambda: init_model(jax.random.PRNGKey(0), cfg))
-            p_shardings = param_shardings(p_shape, mesh)
-            cache_shape = jax.eval_shape(
-                lambda: init_cache(cfg, shape.global_batch, shape.seq_len,
-                                   long_mode))
-            c_shardings = cache_shardings(
-                cache_shape, mesh, batch_sharded=shape.global_batch >= 8)
-            batch_shapes = input_specs(cfg, shape_name)
-            b_shardings = batch_shardings(batch_shapes, mesh,
-                                          pod_stacked=False)
-            step = make_serve_step(cfg)
-            jitted = jax.jit(
-                step, in_shardings=(p_shardings, c_shardings, b_shardings),
-                donate_argnums=(1,))
-            args = (_with_shardings(p_shape, p_shardings),
-                    _with_shardings(cache_shape, c_shardings),
-                    _with_shardings(batch_shapes, b_shardings))
-
+        step, args, jit_kwargs = build_step(
+            arch, shape_name, strategy=strategy, topology=topology,
+            staleness=staleness, max_staleness=max_staleness,
+            chunk=chunk, remat=remat, reduced=reduced, mesh=mesh)
+        jitted = jax.jit(step, **jit_kwargs)
         lowered = jitted.lower(*args)
         compiled = lowered.compile()
         mem = compiled.memory_analysis()
@@ -207,20 +289,38 @@ def dryrun_one(arch: str, shape_name: str, *, multi_pod: bool = False,
                     "report cannot classify (send/recv, broadcast, or "
                     "unparseable groups) — cross-pod byte totals would "
                     "silently understate the exchange")
-    audit = None
-    if shape.mode == "train" and pods > 1:
-        # the general graph audit (repro.analysis.graph_audit): wire
-        # dtype, host callbacks, donation drift on top of the pod-axis
-        # checks above.  Gossip strategies hard-fail on any finding —
-        # the bf16-widening incident PR 4 fixed is exactly GA202.
-        ga = graph_audit.audit_hlo(
-            hlo, tag=f"{arch}/{shape_name}/{strategy}",
-            devices_per_pod=devices_per_pod(mesh), expect_donation=True)
-        audit = ga.to_json()
-        if strategy in GOSSIP_STRATEGIES and ga.findings:
-            raise RuntimeError(
-                f"{strategy}: graph audit failed — "
-                + "; ".join(f"{f.rule} {f.message}" for f in ga.findings))
+    # the general graph audit (repro.analysis.graph_audit): wire
+    # dtype, host callbacks, donation drift on top of the pod-axis
+    # checks above — now on every mode, serve/prefill included.
+    # Gossip strategies hard-fail on any finding (the bf16-widening
+    # incident PR 4 fixed is exactly GA202); --strict-audit
+    # (audit_fail="all") extends the hard fail to every graph.
+    # pod-axis classification (GA201/GA205) and the wire-dtype rule
+    # (GA202) only make sense where a gossip exchange could exist: the
+    # multi-pod train graph.  Serve/prefill graphs reshard with
+    # arbitrary GSPMD permutes, so there we audit host callbacks
+    # (GA203) and donation drift (GA204) only.  GA201's
+    # coordinate-preservation invariant is narrower still — it is a
+    # contract on the *gossip* exchange; reduction-based strategies
+    # (bsp/gaia/fedavg/dgc) let GSPMD reshard across pods however it
+    # likes, so GA201 is scoped to GOSSIP_STRATEGIES.
+    combo = f"{shape_name}/{strategy or '-'}/{topology or '-'}"
+    train_graph = shape.mode == "train" and pods > 1
+    ga = graph_audit.audit_hlo(
+        hlo, tag=f"{arch}/{shape_name}/{strategy or shape.mode}",
+        combo=combo,
+        devices_per_pod=devices_per_pod(mesh) if train_graph else None,
+        check_wire_dtype=train_graph,
+        check_pod_axis=strategy in GOSSIP_STRATEGIES,
+        expect_donation=shape.mode == "train")
+    audit = ga.to_json()
+    hard_fail = audit_fail == "all" or (
+        audit_fail == "gossip" and shape.mode == "train"
+        and strategy in GOSSIP_STRATEGIES)
+    if hard_fail and ga.findings:
+        raise RuntimeError(
+            f"{strategy or shape.mode}: graph audit failed — "
+            + "; ".join(f"{f.rule} {f.message}" for f in ga.findings))
     report = {
         "arch": arch, "shape": shape_name, "mesh": mesh_name,
         "mode": shape.mode, "strategy": strategy if shape.mode == "train"
@@ -269,6 +369,15 @@ def main(argv=None) -> int:
     ap.add_argument("--shape", default=None,
                     choices=list(INPUT_SHAPES) + [None])
     ap.add_argument("--all", action="store_true")
+    ap.add_argument("--all-combos", action="store_true",
+                    help="compile + graph-audit the whole audit matrix "
+                         "(iter_combos): every strategy x topology "
+                         "combo plus prefill/decode, reduced config on "
+                         f"the {SWEEP_MESH} mesh")
+    ap.add_argument("--strict-audit", action="store_true",
+                    help="fail on ANY graph-audit finding, serve/"
+                         "prefill graphs included (default: only "
+                         "gossip strategies hard-fail)")
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--strategy", default="gaia", choices=list(STRATEGIES))
     ap.add_argument("--topology", default="ring",
@@ -298,31 +407,47 @@ def main(argv=None) -> int:
     except ValueError as e:
         ap.error(str(e))
 
+    # combo rows: (arch, shape, strategy, topology)
     combos = []
-    if args.all:
+    if args.all_combos:
+        args.mesh = args.mesh or SWEEP_MESH
+        mesh_override = mesh_override or _parse_mesh(args.mesh)
+        args.reduced = True
+        for sh, st, tp in iter_combos():
+            combos.append((SWEEP_ARCH, sh, st, tp))
+    elif args.all:
         for a in ARCH_IDS:
             for s in INPUT_SHAPES:
-                combos.append((a, s))
+                combos.append((a, s, args.strategy, args.topology))
     else:
-        assert args.arch and args.shape, "--arch/--shape or --all"
-        combos = [(args.arch, args.shape)]
+        assert args.arch and args.shape, \
+            "--arch/--shape, --all, or --all-combos"
+        combos = [(args.arch, args.shape, args.strategy, args.topology)]
+    # no communication strategy applies to serve-side graphs
+    combos = [(a, s, strat, topo) if INPUT_SHAPES[s].mode == "train"
+              else (a, s, None, None) for a, s, strat, topo in combos]
 
-    # the cache tag must carry every report-changing knob, or a cached
-    # JSON from a different configuration is silently returned as this
-    # run's result (and the gossip pod-axis verification never runs)
-    cfg_tag = "__".join(
-        [args.strategy, "multi" if args.multi_pod else "single"]
-        + ([f"mesh{args.mesh.replace(',', 'x')}"] if args.mesh else [])
-        + (["reduced"] if args.reduced else [])
-        + ([f"chunk{args.chunk}"] if args.chunk != 512 else [])
-        + (["noremat"] if args.no_remat else [])
-        + ([f"{args.topology}",
-            f"s{args.staleness}of{args.max_staleness}"]
-           if args.strategy in GOSSIP_STRATEGIES else []))
+    audit_fail = "all" if args.strict_audit else "gossip"
+
+    def cfg_tag(strategy, topology):
+        # the cache tag must carry every report-changing knob, or a
+        # cached JSON from a different configuration is silently
+        # returned as this run's result (and the gossip pod-axis
+        # verification never runs)
+        return "__".join(
+            [strategy or "serve", "multi" if args.multi_pod else "single"]
+            + ([f"mesh{args.mesh.replace(',', 'x')}"] if args.mesh else [])
+            + (["reduced"] if args.reduced else [])
+            + ([f"chunk{args.chunk}"] if args.chunk != 512 else [])
+            + (["noremat"] if args.no_remat else [])
+            + (["strict"] if args.strict_audit else [])
+            + ([f"{topology}",
+                f"s{args.staleness}of{args.max_staleness}"]
+               if strategy in GOSSIP_STRATEGIES else []))
 
     reports, failures = [], []
-    for a, s in combos:
-        tag = f"{a}__{s}__{cfg_tag}"
+    for a, s, strat, topo in combos:
+        tag = f"{a}__{s}__{cfg_tag(strat, topo)}"
         path = os.path.join(args.outdir, tag + ".json") if args.outdir else None
         if path and os.path.exists(path):
             with open(path) as f:
@@ -332,12 +457,12 @@ def main(argv=None) -> int:
             continue
         try:
             rep = dryrun_one(
-                a, s, multi_pod=args.multi_pod, strategy=args.strategy,
-                topology=args.topology, staleness=args.staleness,
+                a, s, multi_pod=args.multi_pod, strategy=strat,
+                topology=topo, staleness=args.staleness,
                 max_staleness=args.max_staleness,
                 reduced=args.reduced, mesh=mesh_override,
                 chunk=args.chunk, remat=not args.no_remat,
-                return_hlo=args.save_hlo)
+                return_hlo=args.save_hlo, audit_fail=audit_fail)
             if args.save_hlo and "_hlo" in rep:
                 import gzip
                 if args.outdir:

@@ -50,7 +50,8 @@ from jax.sharding import PartitionSpec as P
 from repro.compat import SHARD_MAP_CHECK_KW as _CHECK_KW
 from repro.compat import shard_map as _shard_map
 from repro.configs.base import CommConfig, ModelConfig
-from repro.models.model import decode_step, forward, loss_fn
+from repro.models.model import (decode_step, forward, init_cache,
+                                init_model, loss_fn)
 from repro.topology.graphs import Topology, TopologySchedule, as_schedule
 
 Params = Any
@@ -89,13 +90,23 @@ def make_train_state(params: Params, comm: CommConfig, n_pods: int) -> Dict:
     return state
 
 
+def param_shape(cfg: ModelConfig):
+    """Abstract parameter pytree (the serve/prefill state) — the one
+    shape source the dryrun sweep and the jaxpr audit both trace from."""
+    return jax.eval_shape(lambda: init_model(jax.random.PRNGKey(0), cfg))
+
+
+def cache_shape(cfg: ModelConfig, global_batch: int, seq_len: int,
+                long_mode: bool = False):
+    """Abstract decode-cache pytree for :func:`make_serve_step`."""
+    return jax.eval_shape(
+        lambda: init_cache(cfg, global_batch, seq_len, long_mode))
+
+
 def train_state_shape(cfg: ModelConfig, comm: CommConfig, n_pods: int
                       ) -> Dict:
-    from repro.models.model import init_model
-    p_shape = jax.eval_shape(
-        lambda: init_model(jax.random.PRNGKey(0), cfg))
     return jax.eval_shape(
-        lambda p: make_train_state(p, comm, n_pods), p_shape)
+        lambda p: make_train_state(p, comm, n_pods), param_shape(cfg))
 
 
 # ---------------------------------------------------------------------------
@@ -469,6 +480,9 @@ def make_train_step(cfg: ModelConfig, comm: CommConfig, *,
 # ---------------------------------------------------------------------------
 
 def make_prefill_step(cfg: ModelConfig, *, chunk: int = 512) -> Callable:
+    """Prefill step.  Audited alongside the train graphs (jaxpr + HLO
+    passes): donation is optional for serve-side graphs, host callbacks
+    and off-pod-axis collectives are not."""
     def prefill_step(params, batch):
         logits, _ = forward(params, cfg, batch, remat=False, chunk=chunk)
         return logits[:, -1]                       # next-token logits

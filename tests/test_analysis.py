@@ -1,20 +1,25 @@
 """Static-analysis gate: planted violations are caught with the right
 rule id (unkeyed np.random draw -> RA101, half-registered kernel op ->
-PA301-304, f32-widened bf16 exchange -> GA202, off-axis permute ->
-GA201, host callback -> GA203, donation drift -> GA204), suppression
-comments and the baseline grandfather findings, and the real repo is
-clean under every pass."""
+PA301-304, untested rule id -> PA305, f32-widened bf16 exchange ->
+GA202, off-axis permute -> GA201, host callback -> GA203, donation
+drift -> GA204, plus the jaxpr-level JA400-405 twins caught before
+lowering), suppression comments and the baseline grandfather findings,
+and the real repo is clean under every pass."""
 import json
 import os
 import subprocess
 import sys
 import textwrap
 
+import jax
+import jax.numpy as jnp
+import numpy as np
 import pytest
+from jax import lax
 
-from repro.analysis import (ALL_RULES, apply_baseline, astlint, audit_hlo,
-                            check_parity, lint_file, load_baseline,
-                            write_baseline)
+from repro.analysis import (ALL_RULES, apply_baseline, astlint,
+                            audit_hlo, audit_jaxpr, check_parity,
+                            lint_file, load_baseline, write_baseline)
 from repro.analysis.base import Finding, is_suppressed
 
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -203,6 +208,21 @@ class TestBaseline:
         apply_baseline([edited], fps)
         assert not edited.baselined
 
+    def test_stale_fingerprints_returned(self, tmp_path):
+        f1 = Finding(rule="RA104", path="a.py", line=3, message="m",
+                     source="except Exception:")
+        f2 = Finding(rule="RA101", path="b.py", line=9, message="m",
+                     source="np.random.seed(0)")
+        bl = tmp_path / "baseline.json"
+        write_baseline(str(bl), [f1, f2])
+        fps = load_baseline(str(bl))
+        # f2's flagged line was since fixed: its fingerprint is stale
+        stale = apply_baseline([f1], fps)
+        assert stale == [f2.fingerprint]
+        assert f1.baselined
+        # nothing stale when every entry still matches
+        assert apply_baseline([f1, f2], fps) == []
+
 
 # ---------------------------------------------------------------- PA30x
 
@@ -294,6 +314,23 @@ def wired_op(x):
         fs = check_parity(root)
         assert not any(f.rule == "PA301" and f.source == "wired_op"
                        for f in fs)
+
+    def test_untested_analysis_rule_is_pa305(self, tmp_path):
+        root = plant_tree(tmp_path)
+        (tmp_path / "tests" / "test_analysis.py").write_text(
+            "# this planted gate only ever mentions RA101\n")
+        pa305 = {f.source for f in check_parity(root)
+                 if f.rule == "PA305"}
+        # every registered rule the planted file omits is flagged...
+        assert {"GA202", "JA402", "PA305"} <= pa305
+        # ...but the one it mentions is not
+        assert "RA101" not in pa305
+
+    def test_pa305_skipped_without_analysis_tests(self, tmp_path):
+        # the default planted tree has no tests/test_analysis.py: the
+        # meta-rule must not red-herring a partial layout
+        root = plant_tree(tmp_path)
+        assert not any(f.rule == "PA305" for f in check_parity(root))
 
 
 # ---------------------------------------------------------------- GA20x
@@ -388,6 +425,128 @@ class TestGraphAudit:
                           "host_callbacks", "donated_pairs"}
 
 
+# ---------------------------------------------------------------- JA4xx
+
+POD_ENV = [("pod", 2)]
+PERM = [(0, 1), (1, 0)]
+
+
+def jaxpr_of(fn, *avals, axis_env=None):
+    return jax.make_jaxpr(fn, axis_env=axis_env or POD_ENV)(*avals)
+
+
+def aval(*shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+class TestJaxprAudit:
+    def test_clean_gossip_like_step_passes(self):
+        def step(x):
+            return lax.ppermute(x, "pod", PERM)
+        a = audit_jaxpr(jaxpr_of(step, aval(8, 8, dtype=jnp.bfloat16)))
+        assert a.ok, [f.format() for f in a.findings]
+        assert a.n_collectives == 1 and a.collective_axes == ["pod"]
+
+    def test_debug_print_is_ja401(self):
+        def step(x):
+            jax.debug.print("loss {}", x.sum())
+            return x * 2
+        a = audit_jaxpr(jaxpr_of(step, aval(4)))
+        assert "JA401" in [f.rule for f in a.findings]
+
+    def test_pure_callback_is_ja401(self):
+        def step(x):
+            return jax.pure_callback(lambda v: v, aval(4), x)
+        a = audit_jaxpr(jaxpr_of(step, aval(4)))
+        assert "JA401" in [f.rule for f in a.findings]
+
+    def test_widen_into_collective_is_ja402(self):
+        # the adpsgd wire bug, pre-lowering: a bf16 leaf widened to f32
+        # right before the exchange — XLA would fold the convert into
+        # the collective lowering, the jaxpr still shows it
+        def step(x):
+            return lax.ppermute(x.astype(jnp.float32), "pod", PERM)
+        a = audit_jaxpr(jaxpr_of(step, aval(8, 8, dtype=jnp.bfloat16)))
+        assert [f.rule for f in a.findings] == ["JA402"]
+        assert "convert_element_type" in a.findings[0].message
+
+    def test_accumulate_then_narrow_is_clean(self):
+        # the legitimate pattern: accumulate in f32, narrow back to the
+        # leaf dtype BEFORE the wire — the operand itself is bf16, so
+        # no finding even though a widening convert exists upstream
+        def step(x):
+            acc = (x.astype(jnp.float32) * 2.0).astype(x.dtype)
+            return lax.ppermute(acc, "pod", PERM)
+        a = audit_jaxpr(jaxpr_of(step, aval(8, 8, dtype=jnp.bfloat16)))
+        assert a.ok, [f.format() for f in a.findings]
+
+    def test_off_pod_axis_collective_is_ja403(self):
+        def step(x):
+            return lax.psum(x, "data")
+        a = audit_jaxpr(jaxpr_of(step, aval(8),
+                                 axis_env=[("pod", 2), ("data", 2)]))
+        assert [f.rule for f in a.findings] == ["JA403"]
+        assert "'data'" in a.findings[0].message
+
+    def test_large_closed_constant_is_ja404(self):
+        big = np.ones((64, 64), np.float32)          # 16 KiB
+
+        def step(x):
+            return x @ jnp.asarray(big)
+        a = audit_jaxpr(jaxpr_of(step, aval(8, 64)),
+                        const_threshold_bytes=1024)
+        assert [f.rule for f in a.findings] == ["JA404"]
+        assert a.max_const_bytes == big.nbytes
+        # the same const under the default 1 MiB threshold is fine
+        assert audit_jaxpr(jaxpr_of(step, aval(8, 64))).ok
+
+    def test_const_seed_rng_is_ja405_exactly_once(self):
+        # PRNGKey(0) baked into the trace: the step replays the same
+        # stream every call.  The whole seed->wrap->sample chain must
+        # collapse to ONE finding at the root, not one per RNG prim.
+        def step(x):
+            return x + jax.random.normal(jax.random.PRNGKey(0), x.shape)
+        a = audit_jaxpr(jaxpr_of(step, aval(4)))
+        assert [f.rule for f in a.findings] == ["JA405"]
+        assert a.n_rng_prims >= 1
+
+    def test_key_threaded_through_args_is_clean(self):
+        def step(x, key):
+            return x + jax.random.normal(key, x.shape)
+        a = audit_jaxpr(jaxpr_of(step, aval(4),
+                                 aval(2, dtype=jnp.uint32)))
+        assert a.ok, [f.format() for f in a.findings]
+
+    @pytest.mark.slow
+    def test_broken_combo_is_ja400_row(self):
+        # own process: audit_combos builds the 8-device forced-host
+        # mesh, so jax must not have been initialized by another test
+        code = textwrap.dedent("""
+            from repro.analysis import audit_combos
+            rows = audit_combos(
+                combos=[("train_4k", "dpsgd", "not-a-topology")])
+            (combo, a), = rows
+            assert combo == "train_4k/dpsgd/not-a-topology", combo
+            assert a.error is not None
+            assert [f.rule for f in a.findings] == ["JA400"], a.findings
+            print("JA400_ROW_OK")
+        """)
+        r = subprocess.run(
+            [sys.executable, "-c", code], capture_output=True, text=True,
+            env=dict(os.environ,
+                     PYTHONPATH=os.path.join(REPO_ROOT, "src")),
+            cwd=REPO_ROOT, timeout=300)
+        assert "JA400_ROW_OK" in r.stdout, r.stdout + r.stderr
+
+    def test_to_json_shape(self):
+        def step(x):
+            return lax.ppermute(x, "pod", PERM)
+        j = audit_jaxpr(jaxpr_of(step, aval(4, 4))).to_json()
+        assert j["ok"] and j["n_collectives"] == 1
+        assert set(j) >= {"tag", "findings", "collective_axes",
+                          "max_const_bytes", "n_rng_prims", "error"}
+
+
 # ------------------------------------------------------------- the repo
 
 class TestRepoIsClean:
@@ -398,7 +557,32 @@ class TestRepoIsClean:
         assert [f.format() for f in check_parity(REPO_ROOT)] == []
 
     def test_rule_ids_unique_across_passes(self):
-        assert len(ALL_RULES) == 4 + 4 + 5 + 1  # RA100 + RA/PA/GA sets
+        # RA100-104, PA301-305, GA201-205, JA400-405
+        assert len(ALL_RULES) == 5 + 5 + 5 + 6
+
+    @pytest.mark.slow
+    def test_jaxpr_sweep_covers_matrix_and_is_clean(self):
+        # own process: the sweep traces on the 8-device forced-host
+        # mesh (launch-test convention — see launch_gossip_script.py)
+        code = textwrap.dedent("""
+            from repro.analysis import audit_combos
+            rows = audit_combos()
+            combos = [c for c, _ in rows]
+            assert len(combos) == len(set(combos)) == 22, combos
+            assert "prefill_32k/-/-" in combos
+            assert "decode_32k/-/-" in combos
+            assert "train_4k/adpsgd/tv-dcliques" in combos
+            bad = [(c, a.error or [f.format() for f in a.findings])
+                   for c, a in rows if not a.ok]
+            assert bad == [], bad
+            print("JAXPR_SWEEP_CLEAN_OK")
+        """)
+        r = subprocess.run(
+            [sys.executable, "-c", code], capture_output=True, text=True,
+            env=dict(os.environ,
+                     PYTHONPATH=os.path.join(REPO_ROOT, "src")),
+            cwd=REPO_ROOT, timeout=300)
+        assert "JAXPR_SWEEP_CLEAN_OK" in r.stdout, r.stdout + r.stderr
 
     @pytest.mark.slow
     def test_cli_skip_graph_exits_zero(self, tmp_path):
@@ -413,3 +597,82 @@ class TestRepoIsClean:
         assert r.returncode == 0, r.stdout + r.stderr
         payload = json.loads(out.read_text())
         assert payload["ok"] and payload["counts"]["ast"] == 0
+
+    @pytest.mark.slow
+    def test_cli_graph_hlo_end_to_end(self, tmp_path):
+        """Crafted HLO in -> exit code + AUDIT.json schema out, then
+        the same violation grandfathered via the baseline."""
+        env = dict(os.environ,
+                   PYTHONPATH=os.path.join(REPO_ROOT, "src"))
+        hlo = tmp_path / "step.hlo"
+        hlo.write_text(planted_hlo(dtype="f32", out_dtype="f32",
+                                   alias=False))
+        out = tmp_path / "AUDIT.json"
+        bl = tmp_path / "baseline.json"
+        cmd = [sys.executable, "-m", "repro.analysis",
+               "--graph-hlo", str(hlo), "--devices-per-pod", "2",
+               "--json", str(out), "--baseline", str(bl)]
+        r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                           cwd=REPO_ROOT, timeout=180)
+        assert r.returncode == 1, r.stdout + r.stderr
+        payload = json.loads(out.read_text())
+        assert not payload["ok"]
+        assert payload["counts"]["graph"] == 1
+        assert payload["counts"]["jaxpr"] == 0   # --graph-hlo: no sweep
+        assert payload["counts"]["baselined"] == 0
+        assert [f["rule"] for f in payload["findings"]] == ["GA202"]
+        assert payload["graph"]["findings"], "graph block carries them"
+        assert set(payload["rules"]) == set(ALL_RULES)
+        # grandfather the finding, rerun: baselined semantics, exit 0
+        r2 = subprocess.run(cmd + ["--update-baseline"],
+                            capture_output=True, text=True, env=env,
+                            cwd=REPO_ROOT, timeout=180)
+        assert r2.returncode == 0, r2.stdout + r2.stderr
+        r3 = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                            cwd=REPO_ROOT, timeout=180)
+        assert r3.returncode == 0, r3.stdout + r3.stderr
+        payload3 = json.loads(out.read_text())
+        assert payload3["ok"] and payload3["counts"]["baselined"] == 1
+        assert payload3["findings"][0]["baselined"]
+
+    @pytest.mark.slow
+    def test_cli_default_gate_clean_with_coverage(self, tmp_path):
+        """The full default gate (AST + parity + jaxpr sweep + smoke
+        compile) is clean on the repo and writes the coverage matrix."""
+        env = dict(os.environ,
+                   PYTHONPATH=os.path.join(REPO_ROOT, "src"))
+        out = tmp_path / "AUDIT.json"
+        r = subprocess.run(
+            [sys.executable, "-m", "repro.analysis", "-q",
+             "--json", str(out)],
+            capture_output=True, text=True, env=env, cwd=REPO_ROOT,
+            timeout=420)
+        assert r.returncode == 0, r.stdout + r.stderr
+        payload = json.loads(out.read_text())
+        assert payload["ok"] and payload["stale_baseline"] == []
+        cov = payload["coverage"]
+        assert len(cov) == 22
+        smoke = [row for row in cov
+                 if row["combo"] == "train_4k/dpsgd/ring"]
+        assert smoke and smoke[0]["hlo"] is not None
+        assert smoke[0]["hlo"]["ok"] and "GA201" in smoke[0]["hlo"]["rules"]
+        assert all(row["jaxpr"]["ok"] for row in cov)
+
+    @pytest.mark.slow
+    def test_cli_fail_on_stale(self, tmp_path):
+        env = dict(os.environ,
+                   PYTHONPATH=os.path.join(REPO_ROOT, "src"))
+        bl = tmp_path / "baseline.json"
+        bl.write_text('["XX999|nowhere.py|long gone line"]\n')
+        out = tmp_path / "AUDIT.json"
+        cmd = [sys.executable, "-m", "repro.analysis", "--skip-graph",
+               "--json", str(out), "--baseline", str(bl)]
+        r = subprocess.run(cmd, capture_output=True, text=True, env=env,
+                           cwd=REPO_ROOT, timeout=180)
+        assert r.returncode == 0, r.stdout + r.stderr   # stale = warn
+        assert json.loads(out.read_text())["stale_baseline"] == \
+            ["XX999|nowhere.py|long gone line"]
+        r2 = subprocess.run(cmd + ["--fail-on-stale"], capture_output=True,
+                            text=True, env=env, cwd=REPO_ROOT, timeout=180)
+        assert r2.returncode == 1, r2.stdout + r2.stderr
+        assert "stale" in r2.stdout
