@@ -5,7 +5,8 @@ BENCH_JSON_DIR ?= out
 export BENCH_JSON_DIR
 
 .PHONY: test test-fast bench-smoke bench-smoke-async bench-smoke-links \
-	bench-smoke-kernels dryrun-smoke lint lint-deep lint-deep-full
+	bench-smoke-kernels bench-smoke-scale dryrun-smoke lint lint-deep \
+	lint-deep-full
 
 # tier-1 verify: the full test suite
 test:
@@ -38,6 +39,14 @@ bench-smoke-async:
 # at accuracy within noise (the occasional-straggler headline claim)
 bench-smoke-links:
 	$(PYTHON) -m benchmarks.fig_topology --smoke-links
+
+# fabric scale smoke + gate: price 50 gossip rounds on the 10k-node
+# hier-cliques fabric (sampled links, 10% participation, ledger-only)
+# and assert the array-native ledger stays inside its host-time budget;
+# drops $(BENCH_JSON_DIR)/BENCH_scale.json for the cross-commit gate
+bench-smoke-scale:
+	$(PYTHON) -m benchmarks.fig_topology --smoke-scale
+	$(PYTHON) -m benchmarks.report --gate $(BENCH_JSON_DIR)/BENCH_scale.json
 
 # launch-path gossip smoke: lower + compile the pod-gossip train step on
 # a tiny CPU mesh; fails if the cross-pod exchange stops lowering to

@@ -32,10 +32,11 @@ claim, unmeasurable under class-constant link pricing.
 from __future__ import annotations
 
 import argparse
+import time
 
 import numpy as np
 
-from repro.configs.base import CommConfig
+from repro.configs.base import CommConfig, FabricConfig, LinkConfig
 from repro.configs.cnn_zoo import CNN_ZOO
 from repro.core.partition import partition_label_skew
 from repro.core.trainer import train_decentralized
@@ -93,8 +94,9 @@ def run(quick: bool = False):
             idx = partition_label_skew(ds.y, K, skew, seed=1)
             parts = [(ds.x[i], ds.y[i]) for i in idx]
         for topo in TOPOLOGIES:
-            comm = CommConfig(strategy="dpsgd", topology=topo,
-                              link_profile="geo-wan")
+            comm = CommConfig(strategy="dpsgd",
+                              fabric=FabricConfig(topology=topo,
+                                                  profile="geo-wan"))
             r = train_decentralized(
                 CNN_ZOO["gn-lenet"], "dpsgd", parts, (val.x, val.y),
                 comm=comm, steps=steps, batch=20, lr=LR,
@@ -118,8 +120,10 @@ def run(quick: bool = False):
     sval = synth_images(600 if quick else 1000, seed=99, **SCHED_DATA)
     parts = _exclusive_parts(sds, SCHED_K, SCHED_CLASSES)
     for name in SCHEDULES:
-        comm = CommConfig(strategy="dpsgd", topology=name,
-                          link_profile="geo-wan", rewire_floats=64.0)
+        comm = CommConfig(strategy="dpsgd",
+                          fabric=FabricConfig(topology=name,
+                                              profile="geo-wan",
+                                              rewire_floats=64.0))
         r = train_decentralized(
             CNN_ZOO["gn-lenet"], "dpsgd", parts, (sval.x, sval.y),
             comm=comm, steps=steps, batch=20, lr=SCHED_LR,
@@ -161,8 +165,9 @@ def run_async(parts=None, ds_val=None, steps: int = 100):
         parts = _exclusive_parts(ds)
     rows = []
     for mode, algo, async_gossip in ASYNC_MODES:
-        comm = CommConfig(strategy=algo, topology="geo-wan",
-                          link_profile="geo-wan",
+        comm = CommConfig(strategy=algo,
+                          fabric=FabricConfig(topology="geo-wan",
+                                              profile="geo-wan"),
                           async_gossip=async_gossip, max_staleness=2)
         r = train_decentralized(
             CNN_ZOO["gn-lenet"], algo, parts, (ds_val.x, ds_val.y),
@@ -202,11 +207,13 @@ def run_straggler(parts=None, ds_val=None, steps: int = 100,
     rows = []
     for rate in rates:
         for mode, algo, async_gossip in ASYNC_MODES:
-            comm = CommConfig(strategy=algo, topology="ring",
-                              link_profile="datacenter",
-                              link_model="sampled", straggler_rate=rate,
-                              straggler_slowdown=STRAGGLER_SLOWDOWN,
-                              async_gossip=async_gossip, max_staleness=2)
+            comm = CommConfig(
+                strategy=algo,
+                fabric=FabricConfig(
+                    topology="ring", profile="datacenter",
+                    link=LinkConfig(model="sampled", straggler_rate=rate,
+                                    straggler_slowdown=STRAGGLER_SLOWDOWN)),
+                async_gossip=async_gossip, max_staleness=2)
             r = train_decentralized(
                 CNN_ZOO["gn-lenet"], algo, parts, (ds_val.x, ds_val.y),
                 comm=comm, steps=steps, batch=20, lr=LR,
@@ -262,6 +269,59 @@ def smoke_links():
     return rows
 
 
+def smoke_scale(rounds: int = 50, budget_s: float = 10.0):
+    """Array-native fabric scale smoke (the ``--smoke-scale`` CI entry):
+    price ``rounds`` gossip rounds on a 10k-node hier-cliques fabric —
+    stochastic sampled links, 10% partial participation, async ledger,
+    no training — and assert the whole thing fits in ``budget_s`` host
+    seconds.  A 1k-node config rides along so the JSON shows per-round
+    cost growing with *active edges*, not node count squared (the
+    O(active edges) contract of the array ledger)."""
+    from repro.topology import (LINK_PROFILES, CommLedger, Participation,
+                                hierarchical_cliques, make_link_model)
+    model_floats = 1e6
+    rows = []
+    for n_nodes, clique in ((1000, 10), (10000, 25)):
+        topo = hierarchical_cliques(n_nodes, clique)
+        fabric = FabricConfig(
+            topology="hier-cliques", profile="geo-wan",
+            link=LinkConfig(model="sampled", jitter=0.1,
+                            straggler_rate=0.05),
+            participation=0.1)
+        profile = LINK_PROFILES[fabric.profile]
+        links = make_link_model(fabric.link, profile, seed=0)
+        part = Participation(n_nodes, fabric.participation, seed=0)
+        led = CommLedger(topo, profile, config=fabric, async_mode=True,
+                         link_model=links, participation=part)
+        t0 = time.perf_counter()
+        for t in range(rounds):
+            led.record_gossip(model_floats, t=t)
+        wall = time.perf_counter() - t0
+        v = led.view()
+        active = int(np.count_nonzero(v.edge_traffic))
+        rows.append(dict(nodes=n_nodes, edges=len(topo.edges),
+                         active_edges=active, rounds=rounds,
+                         per_round_ms=wall / rounds * 1e3, wall_s=wall,
+                         wan_mfloats=v.wan_floats / 1e6,
+                         sim_time_s=v.sim_time_s))
+        print(f"[fig_topology] scale K={n_nodes}: {len(topo.edges)} "
+              f"edges, {active} active, {wall/rounds*1e3:.2f}ms/round "
+              f"({wall:.2f}s total)", flush=True)
+    big = rows[-1]
+    assert big["wall_s"] < budget_s, \
+        (f"10k-node ledger took {big['wall_s']:.2f}s for {rounds} "
+         f"rounds (budget {budget_s}s)")
+    # 10% participation must actually mask traffic: with both endpoints
+    # sampled independently, most edges never fire in 50 rounds
+    assert big["active_edges"] < big["edges"], rows
+    save_rows("fig_topology_scale_smoke", rows)
+    save_bench_json("scale", rows,
+                    derived=f"10k={big['per_round_ms']:.2f}ms/round "
+                            f"wall={big['wall_s']:.2f}s "
+                            f"active={big['active_edges']}")
+    return rows
+
+
 if __name__ == "__main__":
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke-async", action="store_true",
@@ -270,11 +330,16 @@ if __name__ == "__main__":
     ap.add_argument("--smoke-links", action="store_true",
                     help="stochastic-link CI smoke (transient stragglers "
                          "on an all-LAN fabric, asserts async < sync)")
+    ap.add_argument("--smoke-scale", action="store_true",
+                    help="array-ledger scale smoke (10k-node hier-cliques "
+                         "fabric, 50 priced rounds under 10s host time)")
     ap.add_argument("--quick", action="store_true")
     args = ap.parse_args()
     if args.smoke_async:
         smoke_async()
     elif args.smoke_links:
         smoke_links()
+    elif args.smoke_scale:
+        smoke_scale()
     else:
         run(quick=args.quick)

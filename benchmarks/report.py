@@ -393,18 +393,79 @@ def trend(spec: str) -> int:
     return 0
 
 
+def _load_scale_rows(path: str) -> dict:
+    """BENCH_scale.json rows keyed by node count."""
+    with open(path) as f:
+        data = json.load(f)
+    return {int(r["nodes"]): r for r in data.get("rows", [])
+            if "nodes" in r}
+
+
+def _gate_scale(files, baseline, noise_band, budget_s):
+    """Ledger-overhead rules for the fabric scale smoke
+    (``BENCH_scale.json`` from ``fig_topology --smoke-scale``): the 10k
+    hier-cliques pricing run must stay under its host-time budget, and
+    with a baseline artifact no node-count row's per-round host ms may
+    regress beyond the noise band."""
+    scale = [p for p in files if p.endswith("BENCH_scale.json")]
+    if not scale:
+        return [], False
+    failures = []
+    rows = _load_scale_rows(scale[0])
+    big = max(rows)
+    wall = float(rows[big]["wall_s"])
+    if wall > budget_s:
+        failures.append(
+            f"scale/{big}: {wall:.2f}s host time for "
+            f"{rows[big]['rounds']} rounds, budget {budget_s}s")
+    else:
+        print(f"gate: scale {big}-node pricing {wall:.2f}s "
+              f"(< {budget_s}s budget, "
+              f"{rows[big]['per_round_ms']:.1f} ms/round)")
+    if baseline:
+        prev_files = [p for p in _bench_files(baseline)
+                      if p.endswith("BENCH_scale.json")]
+        if prev_files:
+            prev = _load_scale_rows(prev_files[0])
+            for nodes, r in sorted(rows.items()):
+                if nodes not in prev:
+                    continue
+                ms, was = float(r["per_round_ms"]), \
+                    float(prev[nodes]["per_round_ms"])
+                if ms > was * (1.0 + noise_band):
+                    failures.append(
+                        f"scale/{nodes}: {ms:.1f} ms/round regressed "
+                        f"beyond {was:.1f} x (1 + {noise_band}) "
+                        f"vs baseline")
+        else:
+            print(f"gate: baseline {baseline!r} has no "
+                  f"BENCH_scale.json; skipping scale regression check")
+    return failures, True
+
+
 def gate(path: str, baseline: str = None, noise_band: float = 0.5,
-         min_speedup: float = 8.0) -> int:
+         min_speedup: float = 8.0, scale_budget_s: float = 10.0) -> int:
     """Fail (exit 1) when the kernels bench regresses — see module
-    docstring for the three rules."""
+    docstring for the three rules — or when the fabric scale smoke
+    (``BENCH_scale.json``, if present alongside) blows its ledger-only
+    host-time budget or regresses per-round vs the baseline."""
     files = _bench_files(path)
+    scale_failures, scale_checked = _gate_scale(
+        files, baseline, noise_band, scale_budget_s)
     kern = [p for p in files if p.endswith("BENCH_kernels.json")]
     if not kern:
+        if scale_checked:
+            if scale_failures:
+                print("\n".join("GATE FAIL: " + f
+                                for f in scale_failures), file=sys.stderr)
+                return 1
+            print("gate: OK (scale rows only)")
+            return 0
         print(f"gate: no BENCH_kernels.json under {path!r}",
               file=sys.stderr)
         return 1
     rows = _load_bench(kern[0])
-    failures = []
+    failures = list(scale_failures)
     checked = 0
     for name, us in sorted(rows.items()):
         if not name.startswith("kernel/"):
@@ -469,13 +530,17 @@ def cli(argv=None) -> int:
     ap.add_argument("--min-speedup", type=float, default=8.0,
                     help="required kernel-vs-old-interpret speedup on the "
                          "headline ops (default 8)")
+    ap.add_argument("--scale-budget-s", type=float, default=10.0,
+                    help="host-time budget for the largest fabric scale "
+                         "smoke row in BENCH_scale.json (default 10)")
     args = ap.parse_args(argv)
     if args.trend:
         return trend(args.trend)
     if args.gate:
         return gate(args.gate, baseline=args.baseline,
                     noise_band=args.noise_band,
-                    min_speedup=args.min_speedup)
+                    min_speedup=args.min_speedup,
+                    scale_budget_s=args.scale_budget_s)
     main()
     return 0
 

@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs.base import CommConfig
+from repro.configs.base import CommConfig, FabricConfig
 from repro.configs.registry import get_config
 from repro.data.synthetic import synth_tokens
 from repro.launch.sharding import batch_shardings, train_state_shardings
@@ -70,7 +70,8 @@ def main():
           f"strategy={args.strategy}")
 
     mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
-    comm = CommConfig(strategy=args.strategy, topology=args.topology,
+    comm = CommConfig(strategy=args.strategy,
+                      fabric=FabricConfig(topology=args.topology),
                       gaia_t0=0.05, iter_local=10, dgc_sparsity=0.95)
     params = init_model(jax.random.PRNGKey(0), cfg)
     state = make_train_state(params, comm, 2)

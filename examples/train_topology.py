@@ -18,7 +18,7 @@ import sys
 
 sys.path.insert(0, "src")
 
-from repro.configs.base import CommConfig
+from repro.configs.base import CommConfig, FabricConfig
 from repro.configs.cnn_zoo import CNN_ZOO
 from repro.core.partition import partition_label_skew
 from repro.core.trainer import train_decentralized
@@ -45,8 +45,9 @@ def main():
         print(f"\n== {name}: {len(topo.edges)} edges "
               f"({len(topo.wan_edge_indices())} WAN), "
               f"spectral gap {topo.spectral_gap():.3f}")
-        comm = CommConfig(strategy="dpsgd", topology=name,
-                          link_profile="geo-wan")
+        comm = CommConfig(strategy="dpsgd",
+                          fabric=FabricConfig(topology=name,
+                                              profile="geo-wan"))
         r = train_decentralized(
             CNN_ZOO["gn-lenet"], "dpsgd", parts, (val.x, val.y),
             comm=comm, steps=args.steps, batch=20, lr=0.02,

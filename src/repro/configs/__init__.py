@@ -1,13 +1,14 @@
 from repro.configs.base import (AttentionConfig, CommConfig, EncoderConfig,
-                                INPUT_SHAPES, InputShape, MoEConfig,
-                                ModalityStub, ModelConfig, RGLRUConfig,
-                                SSMConfig, TrainConfig)
+                                FabricConfig, INPUT_SHAPES, InputShape,
+                                LinkConfig, MoEConfig, ModalityStub,
+                                ModelConfig, RGLRUConfig, SSMConfig,
+                                TrainConfig)
 from repro.configs.cnn_zoo import CNN_ZOO, CNNConfig
 from repro.configs.registry import ARCH_IDS, all_configs, get_config
 
 __all__ = [
-    "AttentionConfig", "CommConfig", "EncoderConfig", "INPUT_SHAPES",
-    "InputShape", "MoEConfig", "ModalityStub", "ModelConfig", "RGLRUConfig",
-    "SSMConfig", "TrainConfig", "CNN_ZOO", "CNNConfig", "ARCH_IDS",
-    "all_configs", "get_config",
+    "AttentionConfig", "CommConfig", "EncoderConfig", "FabricConfig",
+    "INPUT_SHAPES", "InputShape", "LinkConfig", "MoEConfig", "ModalityStub",
+    "ModelConfig", "RGLRUConfig", "SSMConfig", "TrainConfig", "CNN_ZOO",
+    "CNNConfig", "ARCH_IDS", "all_configs", "get_config",
 ]

@@ -7,6 +7,7 @@ CPU smoke tests (via ``reduced()``).
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from dataclasses import dataclass, field
 from typing import Optional, Tuple
 
@@ -240,33 +241,32 @@ INPUT_SHAPES = {
 
 
 @dataclass(frozen=True)
-class CommConfig:
-    """The paper's technique as a first-class trainer feature.
+class LinkConfig:
+    """Stochastic-link knobs (``repro.topology.links.LinkModel``).
 
-    Every strategy exists on *both* backends — the CPU-scale simulation
-    (``core.trainer``/``core.algorithms``) and the pod-scale SPMD launch
-    path (``launch.steps``, where dpsgd/adpsgd gossip rides a
-    shard_map + ppermute ring over the mesh ``pod`` axis) — and the two
-    are held equivalent by ``tests/test_launch_gossip.py``."""
-    strategy: str = "bsp"             # bsp | gaia | fedavg | dgc | dpsgd |
-    #                                   adpsgd
-    # communication fabric (repro.topology): who talks to whom, when, and
-    # at what link cost.  Static graphs become constant schedules;
-    # tv-dcliques / random-matching are genuinely time-varying.
-    topology: str = "full"            # full | ring | torus | random |
-    #                                   geo-wan | dcliques | tv-dcliques |
-    #                                   random-matching
-    link_profile: str = "uniform"     # uniform | datacenter | geo-wan
-    # stochastic links (repro.topology.links.LinkModel): "sampled" draws
-    # per-edge, per-activation latency/bandwidth instead of the class
-    # constants — seeded + replayable; with all rates at zero the
-    # sampled ledger reproduces the constant ledger exactly
-    link_model: str = "constant"      # constant | sampled
-    link_jitter: float = 0.0          # per-activation lognormal sigma
-    link_hetero: float = 0.0          # persistent per-edge base spread
+    ``model="sampled"`` draws per-edge, per-activation latency/bandwidth
+    instead of the class constants — seeded + replayable; with all rates
+    at zero the sampled ledger reproduces the constant ledger exactly."""
+    model: str = "constant"           # constant | sampled
+    jitter: float = 0.0               # per-activation lognormal sigma
+    hetero: float = 0.0               # persistent per-edge base spread
     straggler_rate: float = 0.0       # P(normal -> slow) per activation
     straggler_exit: float = 0.5       # P(slow -> normal) per activation
     straggler_slowdown: float = 10.0  # lat x / bw / while slow
+
+
+@dataclass(frozen=True)
+class FabricConfig:
+    """The communication fabric (``repro.topology``): who talks to whom,
+    when, at what link cost, and which nodes show up each round.
+
+    Static graphs become constant schedules; tv-dcliques /
+    random-matching are genuinely time-varying."""
+    topology: str = "full"            # full | ring | torus | random |
+    #                                   geo-wan | dcliques | hier-cliques |
+    #                                   tv-dcliques | random-matching
+    profile: str = "uniform"          # uniform | datacenter | geo-wan
+    link: LinkConfig = field(default_factory=LinkConfig)
     # handshake amortization: a newly-activated link spreads its setup
     # latency over its first `amortize_window` gossip activations (1 =
     # pay up front); dropping a link forfeits the unpaid balance
@@ -276,6 +276,45 @@ class CommConfig:
     # SkewScout topology-rung switch); 0 keeps re-wiring free (the
     # per-class handshake latency is still priced into simulated time)
     rewire_floats: float = 0.0
+    # client sampling / partial participation: each round a seeded
+    # Bernoulli mask keeps this fraction of nodes in the gossip exchange
+    # (local updates continue; an edge is active iff both endpoints
+    # participate).  1.0 = everyone, every round (the pre-sampling
+    # behavior, bit-exact).
+    participation: float = 1.0
+
+
+def _flat_comm_field(name: str, replacement: str, getter):
+    """Deprecated read-only property for a retired flat CommConfig field."""
+    def get(self):
+        warnings.warn(
+            f"CommConfig.{name} is deprecated; read CommConfig.{replacement}",
+            DeprecationWarning, stacklevel=2)
+        return getter(self)
+    get.__name__ = name
+    get.__doc__ = f"Deprecated alias for ``CommConfig.{replacement}``."
+    return property(get)
+
+
+@dataclass(frozen=True)
+class CommConfig:
+    """The paper's technique as a first-class trainer feature.
+
+    Every strategy exists on *both* backends — the CPU-scale simulation
+    (``core.trainer``/``core.algorithms``) and the pod-scale SPMD launch
+    path (``launch.steps``, where dpsgd/adpsgd gossip rides a
+    shard_map + ppermute ring over the mesh ``pod`` axis) — and the two
+    are held equivalent by ``tests/test_launch_gossip.py``.
+
+    Fabric/link knobs live on the nested ``fabric: FabricConfig`` (and
+    its ``link: LinkConfig``); the retired flat fields (``topology``,
+    ``link_profile``, ``link_jitter``, ...) remain readable through
+    deprecated back-compat properties below."""
+    strategy: str = "bsp"             # bsp | gaia | fedavg | dgc | dpsgd |
+    #                                   adpsgd
+    # the communication fabric: topology, link profile, stochastic-link
+    # model, handshake amortization, re-wiring cost, participation
+    fabric: FabricConfig = field(default_factory=FabricConfig)
     # asynchronous gossip (AD-PSGD): the ledger prices rounds on
     # per-edge virtual clocks (links never wait for each other) instead
     # of the synchronous slowest-link rule
@@ -299,6 +338,30 @@ class CommConfig:
     lambda_al: float = 50.0
     lambda_c: float = 1.0
     tuner: str = "hill"               # hill | stochastic | anneal
+
+
+# Back-compat read access for the retired flat fabric fields.  Each fires
+# one DeprecationWarning per read and forwards to the nested config; the
+# flat names are no longer accepted as constructor kwargs.
+for _flat, _nested, _get in (
+    ("topology", "fabric.topology", lambda c: c.fabric.topology),
+    ("link_profile", "fabric.profile", lambda c: c.fabric.profile),
+    ("link_model", "fabric.link.model", lambda c: c.fabric.link.model),
+    ("link_jitter", "fabric.link.jitter", lambda c: c.fabric.link.jitter),
+    ("link_hetero", "fabric.link.hetero", lambda c: c.fabric.link.hetero),
+    ("straggler_rate", "fabric.link.straggler_rate",
+     lambda c: c.fabric.link.straggler_rate),
+    ("straggler_exit", "fabric.link.straggler_exit",
+     lambda c: c.fabric.link.straggler_exit),
+    ("straggler_slowdown", "fabric.link.straggler_slowdown",
+     lambda c: c.fabric.link.straggler_slowdown),
+    ("amortize_window", "fabric.amortize_window",
+     lambda c: c.fabric.amortize_window),
+    ("rewire_floats", "fabric.rewire_floats",
+     lambda c: c.fabric.rewire_floats),
+):
+    setattr(CommConfig, _flat, _flat_comm_field(_flat, _nested, _get))
+del _flat, _nested, _get
 
 
 @dataclass(frozen=True)

@@ -53,7 +53,8 @@ class ADPSGD(DPSGD):
                  use_kernel: bool = True,
                  pad_degree: Optional[int] = None,
                  max_staleness: int = 2,
-                 staleness: Optional[int] = None):
+                 staleness: Optional[int] = None,
+                 participation=None):
         """``max_staleness`` sizes the snapshot buffer (the hard bound a
         controller may move within); ``staleness`` is the current rung,
         defaulting to the bound (fully asynchronous)."""
@@ -65,7 +66,8 @@ class ADPSGD(DPSGD):
         self._stale_cache: Dict = {}
         super().__init__(fns, n_nodes, topology=topology,
                          momentum=momentum, weight_decay=weight_decay,
-                         use_kernel=use_kernel, pad_degree=pad_degree)
+                         use_kernel=use_kernel, pad_degree=pad_degree,
+                         participation=participation)
 
     # ---- staleness plumbing ----
     def set_schedule(self, fabric) -> None:

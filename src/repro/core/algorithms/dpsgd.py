@@ -31,6 +31,7 @@ from typing import Dict, Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.algorithms.base import (ModelFns, Params, pernode_grads,
                                         tree_mean0, tree_size, tmap)
@@ -45,24 +46,33 @@ class DPSGD:
                  topology: Union[Topology, TopologySchedule],
                  momentum: float = 0.9, weight_decay: float = 0.0,
                  use_kernel: bool = True,
-                 pad_degree: Optional[int] = None):
+                 pad_degree: Optional[int] = None,
+                 participation=None):
         """``pad_degree`` widens the neighbor operand shape beyond this
         schedule's max degree — set it to the max over a SkewScout
         topology ladder so rung switches don't change operand shapes
-        (and hence never retrace the step)."""
+        (and hence never retrace the step).
+
+        ``participation``: optional
+        :class:`~repro.topology.links.Participation` sampler.  Each
+        round its seeded node mask zeroes the mixing weight of every
+        edge with a sampled-out endpoint (slack returns to the self
+        weight, so rows still sum to 1 and sampled-out nodes keep their
+        own model).  Masking changes operand *values* only — shapes are
+        untouched, so the step still compiles exactly once."""
         schedule = as_schedule(topology)
         assert schedule.n_nodes == n_nodes, (schedule.n_nodes, n_nodes)
         self.fns, self.K = fns, n_nodes
         self.m, self.wd = momentum, weight_decay
         self.use_kernel = use_kernel
+        self.participation = participation
         # how many times the jitted step body was traced; 1 after any
         # number of rounds == "schedules don't retrigger compilation"
         self.trace_count = 0
         self._pad_degree = max(schedule.max_degree, 1)
         if pad_degree is not None:
             self._pad_degree = max(self._pad_degree, pad_degree)
-        self._operand_cache: Dict[int, Tuple[jnp.ndarray, jnp.ndarray,
-                                             jnp.ndarray]] = {}
+        self._operand_cache: Dict[int, tuple] = {}
         self.set_schedule(schedule)
 
     # ---- schedule plumbing ----
@@ -94,15 +104,31 @@ class DPSGD:
     def mix_operands(self, t: int) -> Tuple[jnp.ndarray, jnp.ndarray,
                                             jnp.ndarray]:
         """Round ``t``'s (nbr_idx, nbr_w, self_w) device arrays, cached
-        per unique graph of the period, all padded to one shape."""
+        per unique graph of the period, all padded to one shape.  With a
+        participation sampler, round ``t``'s node mask is applied to the
+        cached host arrays (same shapes, masked values) before upload;
+        a full-participation round returns the cached device operands
+        untouched."""
         i = id(self.schedule.at(t))
-        ops_t = self._operand_cache.get(i)
-        if ops_t is None:
+        ent = self._operand_cache.get(i)
+        if ent is None:
             idx, w, sw = self.schedule.neighbor_arrays(
                 t, pad_degree=self._pad_degree)
-            ops_t = (jnp.asarray(idx), jnp.asarray(w), jnp.asarray(sw))
-            self._operand_cache[i] = ops_t
-        return ops_t
+            ent = ((idx, w),
+                   (jnp.asarray(idx), jnp.asarray(w), jnp.asarray(sw)))
+            self._operand_cache[i] = ent
+        (idx_np, w_np), ops_t = ent
+        if self.participation is None:
+            return ops_t
+        m = self.participation.mask(int(t))
+        if m.all():
+            return ops_t
+        # w'_ij = w_ij * m_i * m_j (symmetric), slack to the diagonal:
+        # rows still sum to 1 and sampled-out nodes mix with nobody
+        w2 = np.where(m[idx_np] & m[:, None], w_np, 0.0) \
+            .astype(np.float32)
+        sw2 = (1.0 - w2.sum(axis=1)).astype(np.float32)
+        return ops_t[0], jnp.asarray(w2), jnp.asarray(sw2)
 
     def init(self, params: Params, mstate: Params) -> Dict[str, Params]:
         stack = lambda l: jnp.broadcast_to(l, (self.K,) + l.shape)

@@ -88,7 +88,8 @@ class SkewScout:
                  eval_acc_fn: Callable, *, start_index: Optional[int] = None,
                  seed: int = 0, ledger=None, warmup_travels: int = 1,
                  ladder: Optional[List] = None,
-                 cm_ref: Optional[float] = None, cm_fabric=None):
+                 cm_ref: Optional[float] = None, cm_fabric=None,
+                 participation=None):
         """eval_acc_fn(params, mstate, x, y) -> accuracy in [0,1].
         ``ledger``: optional CommLedger; when given, C(θ)/CM is computed
         from bandwidth-priced link traffic (sync) or simulated
@@ -114,7 +115,12 @@ class SkewScout:
         across rung switches.  Amortized handshake installments land in
         whichever C(θ) window reuses the links, so a rung switch that
         persists sees its setup cost decay across windows while
-        thrashing keeps re-paying it."""
+        thrashing keeps re-paying it.
+        ``participation``: optional
+        :class:`~repro.topology.links.Participation` sampler — probes
+        only travel between nodes participating in the probe round
+        (sampled-out nodes neither ship their model nor host a
+        probe), mirroring how the ledger and gossip mask traffic."""
         if ladder is None:
             ladder = THETA_LADDERS[algo_name]
         kw = {} if comm.tuner == "hill" else {"seed": seed}
@@ -125,6 +131,7 @@ class SkewScout:
         self.eval_acc = eval_acc_fn
         self.ledger = ledger
         self.warmup_travels = warmup_travels
+        self.participation = participation
         self._cm_ref = cm_ref
         # normalize to a schedule once: union() is cached per schedule
         # instance, so per-probe CM re-pricing reuses one union graph
@@ -142,10 +149,10 @@ class SkewScout:
     def _ledger_cost(self) -> float:
         """The running cost counter C(θ) windows are cut from — the
         currency (wall-clock / sampled / constant bandwidth-seconds) is
-        the *ledger's* policy (``CommLedger.window_cost``), so the
+        the *ledger's* policy (``LedgerView.window_cost``), so the
         numerator always matches the CM denominator's units."""
-        return self.ledger.window_cost() if self.ledger is not None \
-            else 0.0
+        return self.ledger.view().window_cost \
+            if self.ledger is not None else 0.0
 
     def _cm(self) -> float:
         # an explicit pinned constant always wins — cm_ref exists to
@@ -155,8 +162,8 @@ class SkewScout:
         # lives on the ledger, with cm_fabric pinning the exchange graph
         if self._cm_ref is not None:
             return self._cm_ref
-        return self.ledger.cm_denominator(self.model_floats,
-                                          fabric=self._cm_fabric)
+        return self.ledger.view().cm_denominator(self.model_floats,
+                                                 fabric=self._cm_fabric)
 
     def record_step(self, comm_floats: float) -> None:
         self._comm_since += float(comm_floats)
@@ -167,7 +174,10 @@ class SkewScout:
         Isolated nodes (sparse rounds) fall back to the union graph;
         algorithms with no fabric at all (Gaia/FedAvg/DGC without a
         ledger) keep the legacy ring.  Successive travels rotate through
-        each node's neighbor list so repeated probes cover the fabric."""
+        each node's neighbor list so repeated probes cover the fabric.
+        With a participation sampler, sampled-out nodes neither probe
+        nor host, and participating nodes only target participating
+        neighbors (a node with none sits the probe round out)."""
         K = algo.K
         sched = getattr(algo, "schedule", None)
         graph = union = None
@@ -176,13 +186,25 @@ class SkewScout:
             graph, union = sched.at(step), sched.union()
         elif self.ledger is not None:
             union = self.ledger.topology      # route on the priced fabric
+        m = None if self.participation is None \
+            else self.participation.mask(step)
         route = []
         for k in range(K):
+            if m is not None and not m[k]:
+                continue
             nbrs = graph.neighbors(k) if graph is not None else []
+            if m is not None:
+                nbrs = [j for j in nbrs if m[j]]
             if not nbrs and union is not None:
                 nbrs = union.neighbors(k)
-            j = nbrs[len(self.history) % len(nbrs)] if nbrs \
-                else (k + 1) % K
+                if m is not None:
+                    nbrs = [j for j in nbrs if m[j]]
+            if nbrs:
+                j = nbrs[len(self.history) % len(nbrs)]
+            elif m is None:
+                j = (k + 1) % K
+            else:
+                continue        # no participating peer this round
             route.append((k, j))
         return route
 
@@ -201,7 +223,7 @@ class SkewScout:
             x_away, y_away = sample_subset(j)
             acc_away = float(self.eval_acc(pk, sk, x_away, y_away))
             losses.append(max(0.0, acc_home - acc_away))
-        al = float(np.mean(losses))
+        al = float(np.mean(losses)) if losses else 0.0
         probe_edges = tuple((min(k, j), max(k, j)) for k, j in route
                             if k != j)
         probe_floats = self.model_floats * len(probe_edges)

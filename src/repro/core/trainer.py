@@ -26,9 +26,9 @@ from repro.core.skewscout import SkewScout
 from repro.data.pipeline import DecentralizedLoader
 from repro.models.cnn import cnn_apply, init_cnn
 from repro.topology import (LABEL_AWARE_TOPOLOGIES, LINK_PROFILES,
-                            CommLedger, Topology, TopologySchedule,
-                            as_schedule, build_schedule, make_link_model,
-                            topology_ladder)
+                            CommLedger, Participation, Topology,
+                            TopologySchedule, as_schedule, build_schedule,
+                            make_link_model, topology_ladder)
 
 
 # ---------------------------------------------------------------------------
@@ -75,7 +75,8 @@ def make_algorithm(name: str, fns: ModelFns, n_nodes: int,
                    weight_decay: float = 5e-4, lr0: Optional[float] = None,
                    topology: Optional[Topology | TopologySchedule] = None,
                    seed: int = 0, pad_degree: Optional[int] = None,
-                   staleness: Optional[int] = None):
+                   staleness: Optional[int] = None,
+                   participation: Optional[Participation] = None):
     if name == "bsp":
         return BSP(fns, n_nodes, momentum=momentum, weight_decay=weight_decay)
     if name == "gaia":
@@ -95,22 +96,25 @@ def make_algorithm(name: str, fns: ModelFns, n_nodes: int,
             # standalone fallback; label-aware topologies need the label
             # histograms only train_decentralized can supply — refuse to
             # silently build a label-blind graph in their place
-            if comm.topology in LABEL_AWARE_TOPOLOGIES:
+            if comm.fabric.topology in LABEL_AWARE_TOPOLOGIES:
                 raise ValueError(
-                    f"comm.topology={comm.topology!r} is label-aware: it "
-                    "needs per-node label histograms to assemble cliques. "
-                    "Build it with build_schedule(..., label_hist=...) and "
-                    "pass topology= explicitly (train_decentralized does "
-                    "this from the partitions)")
-            topology = build_schedule(comm.topology, n_nodes, seed=seed)
+                    f"comm.fabric.topology={comm.fabric.topology!r} is "
+                    "label-aware: it needs per-node label histograms to "
+                    "assemble cliques. Build it with build_schedule(..., "
+                    "label_hist=...) and pass topology= explicitly "
+                    "(train_decentralized does this from the partitions)")
+            topology = build_schedule(comm.fabric.topology, n_nodes,
+                                      seed=seed)
         if name == "adpsgd":
             return ADPSGD(fns, n_nodes, topology=topology,
                           momentum=momentum, weight_decay=weight_decay,
                           pad_degree=pad_degree,
                           max_staleness=comm.max_staleness,
-                          staleness=staleness)
+                          staleness=staleness,
+                          participation=participation)
         return DPSGD(fns, n_nodes, topology=topology, momentum=momentum,
-                     weight_decay=weight_decay, pad_degree=pad_degree)
+                     weight_decay=weight_decay, pad_degree=pad_degree,
+                     participation=participation)
     raise ValueError(name)
 
 
@@ -158,13 +162,13 @@ def train_decentralized(cnn_cfg: CNNConfig, algo_name: str,
     # (whatever fabric the run starts on, the controller must be able to
     # climb to the label-aware rung)
     label_hist = None
-    if comm.topology in LABEL_AWARE_TOPOLOGIES or \
+    if comm.fabric.topology in LABEL_AWARE_TOPOLOGIES or \
             (comm.skewscout and algo_name == "dpsgd"):
         n_classes = int(max(int(y.max()) for _, y in parts)) + 1
         label_hist = np.stack([np.bincount(np.asarray(y, np.int64),
                                            minlength=n_classes)
                                for _, y in parts])
-    sched = build_schedule(comm.topology, K, label_hist=label_hist,
+    sched = build_schedule(comm.fabric.topology, K, label_hist=label_hist,
                            seed=seed)
 
     # topology as a SkewScout rung (dpsgd): the theta ladder is a list
@@ -221,18 +225,23 @@ def train_decentralized(cnn_cfg: CNNConfig, algo_name: str,
     # stochastic links: one seeded LinkModel for the run.  Its draws are
     # keyed streams of (seed, edge, activation) — the link seed cannot
     # perturb the clique assignment or anything else the run seed feeds
-    links = make_link_model(comm, LINK_PROFILES[comm.link_profile],
-                            seed=seed)
-    ledger = CommLedger(sched, LINK_PROFILES[comm.link_profile],
-                        rewire_floats_per_edge=comm.rewire_floats,
+    profile = LINK_PROFILES[comm.fabric.profile]
+    links = make_link_model(comm.fabric.link, profile, seed=seed)
+    # partial participation: one seeded per-round node sampler shared by
+    # the ledger (masked pricing), the gossip mixing operands, and the
+    # SkewScout probes — tag-disjoint from the link streams, so toggling
+    # participation never perturbs a link draw
+    part = (Participation(K, comm.fabric.participation, seed=seed)
+            if comm.fabric.participation < 1.0 else None)
+    ledger = CommLedger(sched, profile, config=comm.fabric,
                         async_mode=comm.async_gossip,
                         link_model=links,
-                        amortize_window=comm.amortize_window)
+                        participation=part)
 
     algo = make_algorithm(algo_name, fns, K, comm, momentum=momentum,
                           weight_decay=weight_decay, lr0=lr, topology=sched,
                           seed=seed, pad_degree=pad_degree,
-                          staleness=staleness)
+                          staleness=staleness, participation=part)
     state = algo.init(params, mstate)
     loader = DecentralizedLoader(parts, batch, seed=seed)
     lr_fn = lr_schedule or (lambda s: lr)
@@ -241,7 +250,7 @@ def train_decentralized(cnn_cfg: CNNConfig, algo_name: str,
         # CM pinned to one full-model exchange on the given fabric, in
         # the unit the scout prices C(theta) with: wall-clock for an
         # async ledger, bandwidth-seconds for a sync one
-        led = CommLedger(fabric, LINK_PROFILES[comm.link_profile])
+        led = CommLedger(fabric, profile).view()
         m = float(tree_size(params))
         return led.full_exchange_time(m) if comm.async_gossip \
             else led.full_exchange_cost(m)
@@ -257,17 +266,19 @@ def train_decentralized(cnn_cfg: CNNConfig, algo_name: str,
               else dict(cm_ref=_cm_pin(ladder[0])))
         scout = SkewScout(comm, algo_name, tree_size(params), eval_acc,
                           start_index=start_index, seed=seed,
-                          ledger=ledger, ladder=ladder, **cm)
+                          ledger=ledger, ladder=ladder,
+                          participation=part, **cm)
     elif comm.skewscout and algo_name == "adpsgd":
         cm = (dict(cm_fabric=sched) if links is not None
               else dict(cm_ref=_cm_pin(sched)))
         scout = SkewScout(comm, algo_name, tree_size(params), eval_acc,
                           start_index=start_index, seed=seed,
-                          ledger=ledger, ladder=ladder, **cm)
+                          ledger=ledger, ladder=ladder,
+                          participation=part, **cm)
     elif comm.skewscout and algo_name != "bsp":
         scout = SkewScout(comm, algo_name, tree_size(params), eval_acc,
                           start_index=theta_start_index, seed=seed,
-                          ledger=ledger)
+                          ledger=ledger, participation=part)
 
     loss_curve, acc_curve, gap_curve, stale_curve = [], [], [], []
     comm_total = 0.0
@@ -341,6 +352,7 @@ def train_decentralized(cnn_cfg: CNNConfig, algo_name: str,
     # the fabric the run *ended* on (rung switches may have moved it)
     final_sched = as_schedule(algo.schedule) \
         if algo_name in GOSSIP_ALGOS else sched
+    ledger_view = ledger.view()
     return RunResult(
         name=f"{cnn_cfg.name}/{algo_name}",
         val_acc=acc_curve[-1][1],
@@ -356,9 +368,9 @@ def train_decentralized(cnn_cfg: CNNConfig, algo_name: str,
                 "schedule_period": final_sched.period,
                 # per-node clock accounting (async: who ran ahead; sync:
                 # who sat waiting on the slowest link)
-                "node_clock_skew_s": ledger.clock_skew_s(),
-                "node_busy_s": [float(b) for b in ledger.node_busy_s],
-                "node_idle_s": [float(i) for i in ledger.node_idle_s],
+                "node_clock_skew_s": ledger_view.clock_skew_s,
+                "node_busy_s": [float(b) for b in ledger_view.node_busy_s],
+                "node_idle_s": [float(i) for i in ledger_view.node_idle_s],
                 # stochastic-link extras: straggler/jitter exposure of
                 # the run (activations, slow fraction, knob values)
                 **({"link_model": links.summary()}

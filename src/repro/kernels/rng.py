@@ -76,6 +76,24 @@ def fold_key(*parts: int) -> int:
     return k
 
 
+def fold_keys(key: int, *parts) -> np.ndarray:
+    """Vectorized continuation of :func:`fold_key`: fold integer *array*
+    components into an existing scalar key, elementwise — bit-equal to
+    calling ``fold_key(..., parts[0][k], parts[1][k], ...)`` per element
+    (uint32 arithmetic wraps exactly like the ``& _M32`` masking).
+    Host-side (numpy) only; used to key whole edge sets at once."""
+    u32 = np.uint32
+    k = None
+    for p in parts:
+        p = np.asarray(p).astype(u32)
+        if k is None:
+            # first array part: fold the scalar prefix in exact ints
+            k = _mix(u32((int(key) * _GOLD) & _M32) + p, u32)
+        else:
+            k = _mix(k * u32(_GOLD) + p, u32)
+    return k if k is not None else np.asarray(int(key), u32)
+
+
 def uniform_bits(key, ctr):
     """uint32 hash of (key, counter) — the raw stream.  ``key`` scalar
     (or broadcastable array), ``ctr`` any integer array; numpy in/out

@@ -23,7 +23,7 @@ import jax.numpy as jnp
 
 from repro.analysis import graph_audit
 from repro.analysis import hlo as hlo_analysis
-from repro.configs.base import CommConfig, INPUT_SHAPES
+from repro.configs.base import CommConfig, FabricConfig, INPUT_SHAPES
 from repro.configs.registry import ARCH_IDS, get_config
 from repro.launch import analysis
 from repro.launch.mesh import (devices_per_pod, make_production_mesh,
@@ -115,7 +115,7 @@ def build_step(arch: str, shape_name: str, *,
     shape = INPUT_SHAPES[shape_name]
     pods = mesh_n_pods(mesh)
     comm = CommConfig(strategy=strategy or "bsp",
-                      topology=topology or "ring",
+                      fabric=FabricConfig(topology=topology or "ring"),
                       max_staleness=max_staleness)
     long_mode = shape_name == "long_500k"
 

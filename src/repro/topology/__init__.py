@@ -8,7 +8,10 @@ Module map
     matrix + per-edge LAN/WAN class + cached adjacency) and the static
     builders: ``fully_connected``, ``ring``, ``torus``,
     ``random_regular`` (expander), ``hierarchical`` (geo-WAN
-    datacenters), ``d_cliques`` (label-aware cliques from partition
+    datacenters), ``hierarchical_cliques`` (bounded-degree
+    cliques-of-cliques — the 10k+-node ledger-scale fabric; past
+    ``MIXING_AUTO_MAX`` nodes the dense mixing matrix is skipped),
+    ``d_cliques`` (label-aware cliques from partition
     label histograms).  :class:`TopologySchedule` generalizes the fabric
     to one graph *per round*: ``constant_schedule`` wraps any static
     graph, ``time_varying_d_cliques`` is Bellet et al.'s
@@ -31,7 +34,12 @@ Module map
     the slowest activated link; ``async_mode`` (AD-PSGD) gives every
     link its own virtual clock — a round costs the activated edges' max
     clock, bounded staleness amortizes link latency, and per-node
-    busy/idle/clock-skew accounting exposes the stragglers.  The ledger
+    busy/idle/clock-skew accounting exposes the stragglers.  All
+    bookkeeping lives in flat arrays over a stable edge index — one
+    gossip round is O(active edges) of vectorized work, so 10k+-node
+    fabrics price in milliseconds per round.  Reads go through the
+    frozen :class:`LedgerView` snapshot (``CommLedger.view()``); the
+    old per-quantity accessors survive as deprecated shims.  The ledger
     is threaded through ``core/trainer.py`` and prices SkewScout's
     ``C(theta)/CM`` objective in WAN-weighted cost (sync) or simulated
     wall-clock (async); SkewScout probe shipments are booked per edge
@@ -49,7 +57,12 @@ Module map
     observation into per-edge EWMA *measured* costs
     (``measured_full_exchange_time/cost``), and amortizes re-wiring
     handshakes over ``amortize_window`` activations.
-    ``make_link_model`` builds it from a ``CommConfig``.
+    ``make_link_model`` builds it from a ``LinkConfig``
+    (``CommConfig.fabric.link``).  :class:`Participation` is the seeded
+    per-round node sampler behind partial participation: the same mask
+    gates the ledger's priced traffic, the gossip mixing weights, and
+    SkewScout's probe routes, on a key stream disjoint from the link
+    draws.
 
 Downstream consumers
 --------------------
@@ -62,24 +75,30 @@ staleness as ladder rungs), ``benchmarks/fig_topology.py`` (topology x
 skew x schedule sweep + sync-vs-async column), and
 ``examples/train_topology.py`` (the geo-WAN scenario end-to-end).
 """
-from repro.topology.costs import LINK_PROFILES, CommLedger, LinkProfile
-from repro.topology.links import LinkModel, make_link_model
-from repro.topology.graphs import (LABEL_AWARE_TOPOLOGIES, Topology,
+from repro.topology.costs import (LINK_PROFILES, CommLedger, LedgerView,
+                                  LinkProfile)
+from repro.topology.links import (LinkModel, Participation,
+                                  make_link_model)
+from repro.topology.graphs import (LABEL_AWARE_TOPOLOGIES,
+                                   MIXING_AUTO_MAX, Topology,
                                    TopologySchedule, as_schedule,
                                    build_schedule, build_topology,
                                    constant_schedule, d_cliques,
                                    fully_connected,
                                    greedy_clique_assignment, hierarchical,
+                                   hierarchical_cliques,
                                    metropolis_weights,
                                    random_matching_schedule, random_regular,
                                    ring, topology_ladder, torus,
                                    time_varying_d_cliques)
 
-__all__ = ["LINK_PROFILES", "CommLedger", "LinkProfile", "LinkModel",
+__all__ = ["LINK_PROFILES", "CommLedger", "LedgerView", "LinkProfile",
+           "LinkModel", "MIXING_AUTO_MAX", "Participation",
            "Topology", "TopologySchedule", "LABEL_AWARE_TOPOLOGIES",
            "as_schedule", "build_schedule", "build_topology",
            "constant_schedule", "d_cliques", "fully_connected",
-           "greedy_clique_assignment", "hierarchical", "make_link_model",
+           "greedy_clique_assignment", "hierarchical",
+           "hierarchical_cliques", "make_link_model",
            "metropolis_weights", "random_matching_schedule",
            "random_regular", "ring", "topology_ladder", "torus",
            "time_varying_d_cliques"]

@@ -1,4 +1,4 @@
-"""Link-level communication cost accounting.
+"""Link-level communication cost accounting (array-native).
 
 Replaces the flat ``comm_floats`` scalar with per-link traffic: every
 exchange is attributed to the edges of the run's fabric, split into LAN
@@ -10,11 +10,11 @@ are priced against the *active edge set of that round's graph*, not one
 frozen graph.  When the active edge set changes — a time-varying
 schedule rotating its matchings, or SkewScout switching topology rungs
 mid-run — each newly-activated link is charged an explicit online
-re-wiring cost: ``rewire_floats_per_edge`` control-plane floats plus a
-per-class handshake latency (WAN setup is far slower than LAN), both
-added to the simulated step time.  Re-wiring traffic is booked on the
-links it crosses, so the LAN/WAN split still covers every priced float
-and SkewScout's C(θ)/CM objective sees schedule switches as real cost.
+re-wiring cost: ``rewire_floats`` control-plane floats plus a per-class
+handshake latency (WAN setup is far slower than LAN), both added to the
+simulated step time.  Re-wiring traffic is booked on the links it
+crosses, so the LAN/WAN split still covers every priced float and
+SkewScout's C(θ)/CM objective sees schedule switches as real cost.
 
 Two timing models share the float accounting:
 
@@ -44,8 +44,8 @@ for bursty stragglers.  Both timing models price the *sampled* per-edge
 times, so the async max-of-per-edge-sums diverges from the sync
 sum-of-per-round-maxes under transient stragglers, not only persistent
 WAN gaps.  Every observation also feeds per-edge EWMA **measured**
-costs (``measured_full_exchange_time/cost``) that SkewScout's C(θ)/CM
-pricing consumes in place of profile constants.
+costs that SkewScout's C(θ)/CM pricing consumes in place of profile
+constants.
 
 Amortized re-wiring (``amortize_window=W``): a newly-activated link's
 handshake is paid in ``handshake / W`` installments over its first ``W``
@@ -54,20 +54,57 @@ cheaper per round.  A link dropped before its window completes forfeits
 the unamortized balance immediately (the setup work was really done;
 tearing down just stops deferring the booking), so thrashing between
 schedules stays exactly as expensive as un-amortized switching.  A run
-that ends mid-window leaves the remainder in ``pending_handshake_s``
-(reported in ``summary()``): ``rewire_time_s + pending_handshake_s`` is
-the horizon-independent handshake total to compare across windows.
+that ends mid-window leaves the remainder in
+``view().pending_handshake_s`` (reported in ``summary()``):
+``rewire_time_s + pending_handshake_s`` is the horizon-independent
+handshake total to compare across windows.
+
+Array layout (the 10k-node redesign): every canonical edge the ledger
+ever prices gets a stable integer **edge id** (eid) the first time a
+graph containing it is registered; all bookkeeping — virtual clocks,
+booked traffic, EWMA measured costs, handshake installment balances —
+lives in flat float64 arrays indexed by eid.  A gossip round is a
+handful of vectorized array ops over the round graph's edge list
+(gathered through the per-graph ``eids`` index), so pricing scales with
+the active edge count, not with ``K * degree`` Python-dict updates.
+The array core reproduces the retired dict-backed ledger bit-for-bit
+(``tests/test_fabric_scale.py`` holds them equal on every invariant
+scenario): sequential accumulations that are order-sensitive in IEEE
+float (installment payments, forfeit charges, the non-worst full
+exchange sum) keep their original fold order, everything order-invariant
+(maxes, elementwise folds, independent per-edge adds) is vectorized.
+
+Partial participation (``participation=``): a seeded
+:class:`~repro.topology.links.Participation` mask decides which nodes
+show up for each gossip round; an edge is active iff *both* endpoints
+participate.  Non-participating edges book no floats, pay no
+installments, and do not advance their link-model draw counters — but
+the round's re-wiring tracking still follows the schedule's full active
+set (sampling out of a round does not tear the link down).  With
+``participation=None`` (or fraction 1.0) every round prices exactly as
+before, bit-for-bit.
+
+Read API: :meth:`CommLedger.view` returns a frozen :class:`LedgerView`
+snapshot — scalars plus eid-aligned arrays — rebuilt only when the
+ledger has mutated since the last call.  The ~20 legacy accessors
+(``edge_clocks``/``traffic_by_edge``/``measured_*``/...) survive as thin
+deprecated shims that each fire one ``DeprecationWarning`` and return
+the same values as before.
 
 Units: traffic in *floats* (the repo's communication currency, 4 bytes
 each); bandwidth in floats/second; latency in seconds.
 """
 from __future__ import annotations
 
+import dataclasses
+import functools
+import warnings
 from dataclasses import dataclass
-from typing import Dict, Optional, Sequence, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from repro.configs.base import FabricConfig
 from repro.topology.graphs import (Edge, Topology, TopologySchedule,
                                    as_schedule)
 
@@ -111,34 +148,156 @@ LINK_PROFILES: Dict[str, LinkProfile] = {
 }
 
 
-class _GraphPricing:
-    """Cached per-edge pricing arrays + a vectorized traffic accumulator
-    for one graph of the schedule (the per-step hot path stays numpy;
-    the per-edge dict is only materialized in cold accessors)."""
+def _seqsum(v: np.ndarray) -> float:
+    """Sequential left-fold sum — bit-equal to a Python accumulation
+    loop (``np.cumsum`` accumulates in order; ``np.sum`` is pairwise)."""
+    return float(np.cumsum(v)[-1]) if len(v) else 0.0
 
-    def __init__(self, graph: Topology, profile: LinkProfile):
+
+def _wan_mask(graph: Topology) -> np.ndarray:
+    return np.asarray(graph.edge_class) == "wan" if graph.edge_class \
+        else np.zeros(0, bool)
+
+
+class _GraphPricing:
+    """Cached per-edge pricing arrays for one graph of the schedule:
+    class constants gathered once, endpoint index arrays for per-node
+    routing, the graph's global eid index, and a per-graph traffic
+    accumulator (flushed into the ledger's eid-indexed traffic array on
+    cold reads / schedule switches, preserving the dict-era fold
+    grouping)."""
+
+    def __init__(self, graph: Topology, profile: LinkProfile,
+                 eids: np.ndarray):
         self.graph = graph
         self.deg = graph.degrees().astype(np.float64)
-        self.bw = np.asarray([profile.bandwidth(c)
-                              for c in graph.edge_class])
-        self.lat = np.asarray([profile.latency(c)
-                               for c in graph.edge_class])
-        self.hs = np.asarray([profile.handshake(c)
-                              for c in graph.edge_class])
-        self.is_wan = np.asarray([c == "wan" for c in graph.edge_class],
-                                 bool)
+        self.is_wan = _wan_mask(graph)
+        self.bw = np.where(self.is_wan, profile.wan_bandwidth,
+                           profile.lan_bandwidth)
+        self.lat = np.where(self.is_wan, profile.wan_latency,
+                            profile.lan_latency)
+        self.hs = np.where(self.is_wan, profile.handshake("wan"),
+                           profile.handshake("lan"))
         self.active = frozenset(graph.edges)
+        self.eids = eids
+        # eid -> position in this graph's edge list (installment loop)
+        self.pos_of: Dict[int, int] = {
+            int(g): n for n, g in enumerate(eids)}
         self.edge_index = {e: n for n, e in enumerate(graph.edges)}
         # edge endpoint arrays for vectorized per-node routing
         self.ei = np.asarray([i for i, _ in graph.edges], np.int64)
         self.ej = np.asarray([j for _, j in graph.edges], np.int64)
         self.traffic = np.zeros(len(graph.edges))
 
-    def flush_into(self, traffic: Dict[Edge, float]) -> None:
-        for e, f in zip(self.graph.edges, self.traffic):
-            if f:
-                traffic[e] = traffic.get(e, 0.0) + float(f)
+    def flush_into(self, traffic: np.ndarray) -> None:
+        if len(self.eids):
+            traffic[self.eids] = traffic[self.eids] + self.traffic
         self.traffic[:] = 0.0
+
+
+@dataclass(frozen=True, eq=False)
+class LedgerView:
+    """Frozen snapshot of a :class:`CommLedger` — the read API.
+
+    Scalars are plain floats/ints; per-edge arrays are **eid-aligned**
+    (``edges[k]`` is the canonical edge with eid ``k``, stable across
+    schedule switches) and are copies (a view survives later ledger
+    mutation).  ``union_eids`` selects the current union fabric's edges
+    out of the eid space (``edge_traffic[union_eids]`` is the old
+    ``edge_traffic`` property).  The ``full_exchange_*`` /
+    ``measured_*`` / ``cm_denominator`` pricing helpers evaluate against
+    the *live* ledger (EWMA state moves with new observations).
+
+    ``view()`` is version-cached: repeated calls between ledger
+    mutations return the same object with zero rebuild cost — the fix
+    for the old per-call dict rebuilds in SkewScout's probe loop."""
+    n_nodes: int
+    async_mode: bool
+    rounds: int
+    amortize_window: int
+    sim_time_s: float
+    lan_floats: float
+    wan_floats: float
+    total_floats: float
+    priced_cost: float
+    sampled_priced_cost: float
+    window_cost: float
+    rewire_lan_floats: float
+    rewire_wan_floats: float
+    rewire_floats: float
+    rewiring_cost: float
+    rewire_events: int
+    rewire_time_s: float
+    pending_handshake_s: float
+    clock_skew_s: float
+    edges: Tuple[Edge, ...]
+    edge_clock: np.ndarray = dataclasses.field(repr=False)
+    edge_seen: np.ndarray = dataclasses.field(repr=False)
+    edge_traffic: np.ndarray = dataclasses.field(repr=False)
+    union_eids: np.ndarray = dataclasses.field(repr=False)
+    ewma_latency_s: np.ndarray = dataclasses.field(repr=False)
+    ewma_price_s: np.ndarray = dataclasses.field(repr=False)
+    ewma_seen: np.ndarray = dataclasses.field(repr=False)
+    node_clock: np.ndarray = dataclasses.field(repr=False)
+    node_busy_s: np.ndarray = dataclasses.field(repr=False)
+    node_idle_s: np.ndarray = dataclasses.field(repr=False)
+    _ledger: "CommLedger" = dataclasses.field(repr=False, compare=False)
+
+    # ---- pricing helpers (delegate to the live ledger) ----
+    def full_exchange_cost(self, model_floats: float) -> float:
+        return self._ledger._full_exchange_cost(model_floats)
+
+    def full_exchange_time(self, model_floats: float) -> float:
+        return self._ledger._full_exchange_time(model_floats)
+
+    def measured_latency_s(self, e: Edge, cls: str = "lan") -> float:
+        return self._ledger._measured_latency_s(e, cls)
+
+    def measured_price_per_float(self, e: Edge,
+                                 cls: str = "lan") -> float:
+        return self._ledger._measured_price_per_float(e, cls)
+
+    def measured_full_exchange_cost(self, model_floats: float,
+                                    fabric=None) -> float:
+        return self._ledger._measured_full_exchange_cost(
+            model_floats, fabric=fabric)
+
+    def measured_full_exchange_time(self, model_floats: float,
+                                    fabric=None) -> float:
+        return self._ledger._measured_full_exchange_time(
+            model_floats, fabric=fabric)
+
+    def cm_denominator(self, model_floats: float, fabric=None) -> float:
+        return self._ledger._cm_denominator(model_floats, fabric=fabric)
+
+    # ---- dict conveniences (tests / debugging; O(E) builds) ----
+    def edge_clock_map(self) -> Dict[Edge, float]:
+        """Per-link virtual clocks keyed by canonical edge (only edges
+        that were ever clock-charged appear — the legacy
+        ``edge_clocks()`` contract)."""
+        idx = np.flatnonzero(self.edge_seen)
+        return {self.edges[k]: float(self.edge_clock[k]) for k in idx}
+
+    def traffic_map(self) -> Dict[Edge, float]:
+        """Every float ever booked keyed by canonical edge (edges with
+        zero traffic omitted — the legacy ``traffic_by_edge()``
+        contract)."""
+        idx = np.flatnonzero(self.edge_traffic)
+        return {self.edges[k]: float(self.edge_traffic[k]) for k in idx}
+
+
+def _deprecated(replacement: str):
+    """Mark a legacy CommLedger accessor: one DeprecationWarning per
+    call, then delegate to the private implementation."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(self, *args, **kwargs):
+            warnings.warn(
+                f"CommLedger.{fn.__name__} is deprecated; use "
+                f"{replacement}", DeprecationWarning, stacklevel=2)
+            return fn(self, *args, **kwargs)
+        return wrapper
+    return deco
 
 
 class CommLedger:
@@ -150,50 +309,81 @@ class CommLedger:
     (parameter-server-style traffic has no per-round edge set).
     ``record_gossip(m, t)``: D-PSGD style — every edge *active in round
     t's graph* carries the full model once per direction (``2m`` per
-    active edge).  In ``async_mode`` a per-edge ``staleness`` bound
-    (AD-PSGD) amortizes each link's latency over ``staleness + 1``
-    in-flight deliveries.
+    active edge), masked down to the round's participants when a
+    ``participation`` sampler is attached.  In ``async_mode`` a per-edge
+    ``staleness`` bound (AD-PSGD) amortizes each link's latency over
+    ``staleness + 1`` in-flight deliveries.
     ``record_probe(edges, m)``: SkewScout model traveling — ``m`` floats
     cross each probed union link once.
+
+    Construction takes the typed :class:`~repro.configs.base.FabricConfig`
+    (``config=``) for the amortization/re-wiring knobs; the loose
+    ``rewire_floats_per_edge=`` / ``amortize_window=`` kwargs are
+    deprecated.  Read results through :meth:`view`.
     """
 
     def __init__(self, fabric: Union[Topology, TopologySchedule],
                  profile: LinkProfile, *,
-                 rewire_floats_per_edge: float = 0.0,
+                 config: Optional[FabricConfig] = None,
                  async_mode: bool = False,
-                 link_model=None, amortize_window: int = 1,
-                 ewma_alpha: float = 0.1):
+                 link_model=None,
+                 participation=None,
+                 ewma_alpha: float = 0.1,
+                 rewire_floats_per_edge: Optional[float] = None,
+                 amortize_window: Optional[int] = None):
+        if rewire_floats_per_edge is not None or \
+                amortize_window is not None:
+            warnings.warn(
+                "CommLedger(rewire_floats_per_edge=..., amortize_window"
+                "=...) is deprecated; pass config=FabricConfig(...)",
+                DeprecationWarning, stacklevel=2)
+        if config is not None:
+            if rewire_floats_per_edge is None:
+                rewire_floats_per_edge = config.rewire_floats
+            if amortize_window is None:
+                amortize_window = config.amortize_window
         self.profile = profile
-        self.rewire_floats_per_edge = float(rewire_floats_per_edge)
+        self.rewire_floats_per_edge = float(rewire_floats_per_edge or 0.0)
         self.async_mode = bool(async_mode)
         # stochastic per-link sampler (repro.topology.links.LinkModel);
         # None keeps the class-constant pricing
         self.links = link_model
-        assert int(amortize_window) >= 1, amortize_window
-        self.amortize_window = int(amortize_window)
-        # handshake amortization: canonical edge -> unpaid balance (s)
-        # and the per-activation installment it is paid down in
-        self._pending_hs: Dict[Edge, float] = {}
-        self._hs_inst: Dict[Edge, float] = {}
-        # per-edge EWMA measured costs (observed latency seconds and
-        # price seconds/float) — SkewScout's measured-cost denominators
+        # per-round client sampler (repro.topology.links.Participation);
+        # None = everyone participates every round (the legacy pricing)
+        self.participation = participation
+        amortize_window = 1 if amortize_window is None \
+            else int(amortize_window)
+        assert amortize_window >= 1, amortize_window
+        self.amortize_window = amortize_window
         assert 0.0 < ewma_alpha <= 1.0, ewma_alpha
         self.ewma_alpha = float(ewma_alpha)
-        self._ewma_lat: Dict[Edge, float] = {}
-        self._ewma_price: Dict[Edge, float] = {}
+        # ---- the eid-indexed array core ----
+        # canonical edge -> stable edge id; grown at graph registration
+        self._eid: Dict[Edge, int] = {}
+        self._edge_of_eid: List[Edge] = []
+        self._eid_i = np.zeros(0, np.int64)   # endpoint arrays by eid
+        self._eid_j = np.zeros(0, np.int64)
+        self._clock = np.zeros(0)             # per-edge virtual clock (s)
+        self._clock_seen = np.zeros(0, bool)  # ever clock-charged
+        self._traffic = np.zeros(0)           # floats booked, by eid
+        # per-edge EWMA measured costs (observed latency seconds and
+        # price seconds/float) — SkewScout's measured-cost denominators
+        self._ewma_lat = np.zeros(0)
+        self._ewma_price = np.zeros(0)
+        self._ewma_seen = np.zeros(0, bool)
+        # handshake amortization: unpaid balance + per-activation
+        # installment by eid; `_pending` keeps the dict-era insertion
+        # order (the sequential pay/forfeit folds are order-sensitive)
+        self._hs_bal = np.zeros(0)
+        self._hs_inst = np.zeros(0)
+        self._pending: Dict[int, None] = {}
         # running transfer seconds with every float priced at the
         # bandwidth its activation actually sampled — the sync C(θ)
         # numerator that stays in the same currency as the measured CM
         self._sampled_cost_s = 0.0
-        # source of truth for per-edge traffic survives schedule switches
-        self._traffic: Dict[Edge, float] = {}
         self.lan_floats = 0.0
         self.wan_floats = 0.0
         self.sim_time_s = 0.0
-        # per-edge virtual clocks (canonical edge -> seconds); in sync
-        # mode every activated edge snaps to the global clock, in async
-        # mode each advances by its own cost only
-        self._edge_clock: Dict[Edge, float] = {}
         # online re-wiring accounting (floats also in lan/wan totals)
         self.rewire_lan_floats = 0.0
         self.rewire_wan_floats = 0.0
@@ -204,21 +394,58 @@ class CommLedger:
         self.rounds = 0
         self._last_active: Optional[frozenset] = None
         self._pricing: Dict[int, _GraphPricing] = {}
+        self._measured_ids: Dict[int, tuple] = {}
+        self._version = 0
+        self._view: Optional[LedgerView] = None
+        self._view_version = -1
         self._attach(as_schedule(fabric))
         # per-node busy time: each round a node participates in, it
         # works for the max cost over its own activated incident links
         self.node_busy_s = np.zeros(self.topology.n_nodes)
 
+    # ---- edge registration ----
+    def _register(self, graph: Topology) -> np.ndarray:
+        """Assign stable eids to any of ``graph``'s edges the ledger has
+        not seen, growing the flat bookkeeping arrays; returns the
+        graph's eid index array."""
+        eid = self._eid
+        miss = [e for e in graph.edges if e not in eid]
+        if miss:
+            start = len(self._edge_of_eid)
+            for k, e in enumerate(miss):
+                eid[e] = start + k
+            self._edge_of_eid.extend(miss)
+            add = len(miss)
+            self._eid_i = np.concatenate(
+                [self._eid_i, np.asarray([i for i, _ in miss], np.int64)])
+            self._eid_j = np.concatenate(
+                [self._eid_j, np.asarray([j for _, j in miss], np.int64)])
+            z = np.zeros(add)
+            zb = np.zeros(add, bool)
+            self._clock = np.concatenate([self._clock, z])
+            self._clock_seen = np.concatenate([self._clock_seen, zb])
+            self._traffic = np.concatenate([self._traffic, z])
+            self._ewma_lat = np.concatenate([self._ewma_lat, z])
+            self._ewma_price = np.concatenate([self._ewma_price, z])
+            self._ewma_seen = np.concatenate([self._ewma_seen, zb])
+            self._hs_bal = np.concatenate([self._hs_bal, z])
+            self._hs_inst = np.concatenate([self._hs_inst, z])
+        if not graph.edges:
+            return np.zeros(0, np.int64)
+        return np.fromiter((eid[e] for e in graph.edges), np.int64,
+                           len(graph.edges))
+
     def _attach(self, schedule: TopologySchedule) -> None:
         self.schedule = schedule
         self.topology = schedule.union()
-        self._union_pricing = _GraphPricing(self.topology, self.profile)
+        self._union_pricing = _GraphPricing(
+            self.topology, self.profile, self._register(self.topology))
 
     def _graph_pricing(self, graph: Topology) -> _GraphPricing:
         p = self._pricing.get(id(graph))
         if p is None:
-            p = self._pricing[id(graph)] = _GraphPricing(graph,
-                                                         self.profile)
+            p = self._pricing[id(graph)] = _GraphPricing(
+                graph, self.profile, self._register(graph))
         return p
 
     # ---- recording ----
@@ -226,7 +453,8 @@ class CommLedger:
                      per_edge: np.ndarray) -> None:
         """Attribute ``per_edge`` floats (aligned with ``pricing.graph``'s
         edge list) to links and LAN/WAN totals — all vectorized; the
-        per-edge dict only materializes in the cold accessors."""
+        eid-indexed traffic array only absorbs the per-graph accumulator
+        on cold reads (``view``/``switch_schedule``)."""
         pricing.traffic += per_edge
         self.lan_floats += float(per_edge[~pricing.is_wan].sum())
         self.wan_floats += float(per_edge[pricing.is_wan].sum())
@@ -236,23 +464,28 @@ class CommLedger:
         """Per-edge (latency, bandwidth) for one activation of the
         ``active`` edges: the graph's class constants, or — with a
         ``link_model`` attached — the sampled values, each observation
-        folded into the per-edge EWMA measured costs."""
+        folded into the per-edge EWMA measured costs (one vectorized
+        elementwise fold; bit-equal to the per-edge scalar fold)."""
         if self.links is None or not self.links.stochastic:
             # identity sampling: constants are the truth, the EWMA fold
-            # would only re-derive them — keep the hot path dict-free
+            # would only re-derive them — keep the hot path draw-free
             return pricing.lat, pricing.bw
         lat, bw = self.links.sample(pricing.graph.edges, pricing.lat,
                                     pricing.bw, active)
-        a = self.ewma_alpha
-        for n in np.flatnonzero(active):
-            e = pricing.graph.edges[n]
-            obs_lat, obs_price = float(lat[n]), 1.0 / float(bw[n])
-            old_lat = self._ewma_lat.get(e)
-            old_price = self._ewma_price.get(e)
-            self._ewma_lat[e] = obs_lat if old_lat is None \
-                else (1.0 - a) * old_lat + a * obs_lat
-            self._ewma_price[e] = obs_price if old_price is None \
-                else (1.0 - a) * old_price + a * obs_price
+        act = np.flatnonzero(active)
+        if act.size:
+            ids = pricing.eids[act]
+            a = self.ewma_alpha
+            obs_lat = lat[act]
+            obs_price = 1.0 / bw[act]
+            seen = self._ewma_seen[ids]
+            self._ewma_lat[ids] = np.where(
+                seen, (1.0 - a) * self._ewma_lat[ids] + a * obs_lat,
+                obs_lat)
+            self._ewma_price[ids] = np.where(
+                seen, (1.0 - a) * self._ewma_price[ids] + a * obs_price,
+                obs_price)
+            self._ewma_seen[ids] = True
         return lat, bw
 
     def _book_sampled_cost(self, per_edge: np.ndarray, bw: np.ndarray,
@@ -271,26 +504,29 @@ class CommLedger:
         """Handshake installments due this round: each active edge with
         an unpaid balance pays ``handshake / amortize_window`` into its
         round cost.  Returns the per-edge installment array (None when
-        nothing is owed)."""
-        if not self._pending_hs:
+        nothing is owed).  The loop runs over the pending set only
+        (empty in steady state) in insertion order — the sequential
+        ``rewire_time_s`` fold is order-sensitive."""
+        if not self._pending:
             return None
         inst = None
-        for e in list(self._pending_hs):
-            n = pricing.edge_index.get(e)
+        for g in list(self._pending):
+            n = pricing.pos_of.get(g)
             if n is None or not active[n]:
                 continue
-            bal = self._pending_hs[e]
-            pay = min(self._hs_inst.get(e, bal), bal)
+            bal = float(self._hs_bal[g])
+            pay = min(float(self._hs_inst[g]), bal)
             if inst is None:
                 inst = np.zeros(len(pricing.graph.edges))
             inst[n] += pay
             self.rewire_time_s += pay
             bal -= pay
             if bal <= 1e-18:
-                del self._pending_hs[e]
-                self._hs_inst.pop(e, None)
+                del self._pending[g]
+                self._hs_bal[g] = 0.0
+                self._hs_inst[g] = 0.0
             else:
-                self._pending_hs[e] = bal
+                self._hs_bal[g] = bal
         return inst
 
     def _charge_time(self, pricing: _GraphPricing,
@@ -304,19 +540,15 @@ class CommLedger:
         the *activated* edges' clocks (monotone by construction)."""
         if not active.any():
             return
-        edges = pricing.graph.edges
+        ids = pricing.eids[active]
         if self.async_mode:
-            frontier = 0.0
-            for n in np.flatnonzero(active):
-                e = edges[n]
-                c = self._edge_clock.get(e, 0.0) + float(cost[n])
-                self._edge_clock[e] = c
-                frontier = max(frontier, c)
-            self.sim_time_s = max(self.sim_time_s, frontier)
+            newc = self._clock[ids] + cost[active]
+            self._clock[ids] = newc
+            self.sim_time_s = max(self.sim_time_s, float(newc.max()))
         else:
             self.sim_time_s += float(cost[active].max())
-            for n in np.flatnonzero(active):
-                self._edge_clock[edges[n]] = self.sim_time_s
+            self._clock[ids] = self.sim_time_s
+        self._clock_seen[ids] = True
         busy = np.zeros(len(self.node_busy_s))
         own = np.where(active, cost, 0.0)
         np.maximum.at(busy, pricing.ei, own)
@@ -340,6 +572,7 @@ class CommLedger:
         rounds carry an active edge set — union-routed exchanges
         (probes) never re-wire and never reset the tracking."""
         if self._last_active is None or \
+                pricing.active is self._last_active or \
                 pricing.active == self._last_active:
             self._last_active = pricing.active
             return
@@ -351,16 +584,21 @@ class CommLedger:
         # charged now — the setup work was spent; only the booking was
         # deferred.  This is what keeps schedule thrashing as expensive
         # as un-amortized switching.
-        if dropped and self._pending_hs:
+        if dropped and self._pending:
             forfeit_max = 0.0
             forfeited = []
             busy = np.zeros(len(self.node_busy_s))
             for e in dropped:
-                bal = self._pending_hs.pop(e, 0.0)
-                self._hs_inst.pop(e, None)
+                g = self._eid.get(e)
+                if g is None or g not in self._pending:
+                    continue
+                bal = float(self._hs_bal[g])
+                del self._pending[g]
+                self._hs_bal[g] = 0.0
+                self._hs_inst[g] = 0.0
                 if bal <= 0.0:
                     continue
-                forfeited.append(e)
+                forfeited.append(g)
                 self.rewire_time_s += bal
                 # the endpoints did this work: keep busy/idle/clock-skew
                 # accounting comparable across amortize_window settings
@@ -370,8 +608,9 @@ class CommLedger:
                     if k < len(busy):
                         busy[k] = max(busy[k], bal)
                 if self.async_mode:
-                    c = self._edge_clock.get(e, 0.0) + bal
-                    self._edge_clock[e] = c
+                    c = float(self._clock[g]) + bal
+                    self._clock[g] = c
+                    self._clock_seen[g] = True
                     self.sim_time_s = max(self.sim_time_s, c)
                 else:
                     forfeit_max = max(forfeit_max, bal)
@@ -380,23 +619,28 @@ class CommLedger:
             # fully-paid dropped edge keeps its stale clock) snap to the
             # global clock
             self.sim_time_s += forfeit_max
-            for e in forfeited:
-                if not self.async_mode:
-                    self._edge_clock[e] = max(
-                        self._edge_clock.get(e, 0.0), self.sim_time_s)
+            if forfeited and not self.async_mode:
+                ids = np.asarray(forfeited, np.int64)
+                self._clock[ids] = np.maximum(self._clock[ids],
+                                              self.sim_time_s)
+                self._clock_seen[ids] = True
             self.node_busy_s += busy
         if not new:
             return
+        new_ids = np.fromiter((self._eid[e] for e in new), np.int64,
+                              len(new))
         if self.async_mode:
             # a (re)activated link joins at the global frontier: it
             # cannot have banked transfer time while it did not exist.
             # Without this, a rung switch would hand the controller a
             # free window (the new fabric's clocks lag the ratcheted
             # global max, so C(θ) reads ~0 until they catch up).
-            for e in new:
-                self._edge_clock[e] = max(self._edge_clock.get(e, 0.0),
-                                          self.sim_time_s)
-        is_new = np.asarray([e in new for e in pricing.graph.edges])
+            self._clock[new_ids] = np.maximum(self._clock[new_ids],
+                                              self.sim_time_s)
+            self._clock_seen[new_ids] = True
+        is_new = np.zeros(len(self._edge_of_eid), bool)
+        is_new[new_ids] = True
+        is_new = is_new[pricing.eids]
         per_edge = np.where(is_new, self.rewire_floats_per_edge, 0.0)
         if self.rewire_floats_per_edge > 0.0:
             self._book_floats(pricing, per_edge)
@@ -409,11 +653,12 @@ class CommLedger:
         # old connection is gone)
         if self.amortize_window > 1:
             for n in np.flatnonzero(is_new):
-                e = pricing.graph.edges[n]
+                g = int(pricing.eids[n])
                 hs = float(pricing.hs[n])
                 if hs > 0.0:
-                    self._pending_hs[e] = hs
-                    self._hs_inst[e] = hs / self.amortize_window
+                    self._hs_bal[g] = hs
+                    self._hs_inst[g] = hs / self.amortize_window
+                    self._pending[g] = None
             hs_now = 0.0
         else:
             hs_now = pricing.hs
@@ -448,6 +693,7 @@ class CommLedger:
                           np.where(active, lat + per_edge / bw, 0.0),
                           active)
         self.rounds += 1
+        self._version += 1
 
     def record_gossip(self, model_floats: float,
                       t: Optional[int] = None,
@@ -461,12 +707,23 @@ class CommLedger:
         values (scalar broadcasts) — a link tolerating ``s``-stale
         deliveries pipelines ``s + 1`` payloads, so its latency is paid
         once per ``s + 1`` activations.  Ignored in sync mode, where
-        every round is stop-and-wait regardless of the algorithm."""
+        every round is stop-and-wait regardless of the algorithm.
+
+        With a ``participation`` sampler attached, the round's mask
+        drops every edge whose endpoints did not both show up: no
+        floats, no time, no installment payment, no link-model draw.
+        Re-wiring still tracks the schedule's full active set (sampling
+        out is not a teardown)."""
         graph = self.schedule.at(0 if t is None else t)
         pricing = self._graph_pricing(graph)
         self._rewire(pricing)
         n_edges = len(graph.edges)
-        per_edge = np.full(n_edges, 2.0 * model_floats)
+        if self.participation is not None:
+            m = self.participation.mask(0 if t is None else t)
+            per_edge = np.where(m[pricing.ei] & m[pricing.ej],
+                                2.0 * model_floats, 0.0)
+        else:
+            per_edge = np.full(n_edges, 2.0 * model_floats)
         self._book_floats(pricing, per_edge)
         active = per_edge > 0
         lat, bw = self._link_rates(pricing, active)
@@ -482,6 +739,7 @@ class CommLedger:
             cost = cost + inst
         self._charge_time(pricing, cost, active)
         self.rounds += 1
+        self._version += 1
 
     def record_probe(self, edges: Sequence[Edge],
                      floats_each: float) -> None:
@@ -506,12 +764,13 @@ class CommLedger:
                           np.where(active, lat + per_edge / bw, 0.0),
                           active)
         self.rounds += 1
+        self._version += 1
 
     def switch_schedule(self, fabric: Union[Topology, TopologySchedule]
                         ) -> None:
         """Swap the fabric mid-run (SkewScout climbing a topology rung).
-        Accumulated traffic and per-edge clocks are preserved (see
-        ``traffic_by_edge``); the first gossip round on the new schedule
+        Accumulated traffic and per-edge clocks are preserved (eids are
+        stable for life); the first gossip round on the new schedule
         pays re-wiring for every link the old round's active set did not
         have."""
         schedule = as_schedule(fabric)
@@ -520,231 +779,356 @@ class CommLedger:
         self._flush_traffic()
         self._attach(schedule)
         self._pricing.clear()
+        self._version += 1
 
     def _flush_traffic(self) -> None:
-        """Fold the vectorized per-graph accumulators into the canonical
-        per-edge dict (cold path: accessors and schedule switches)."""
+        """Fold the per-graph accumulators into the canonical
+        eid-indexed traffic array (cold path: views and schedule
+        switches) — one binary add per edge per flush, the dict-era
+        grouping."""
         self._union_pricing.flush_into(self._traffic)
         for p in self._pricing.values():
             p.flush_into(self._traffic)
 
-    # ---- pricing ----
-    def traffic_by_edge(self) -> Dict[Edge, float]:
-        """Every float ever booked, keyed by canonical edge — survives
-        schedule switches (``sum(...) == total_floats`` always)."""
+    # ---- the read API ----
+    def view(self) -> LedgerView:
+        """Frozen :class:`LedgerView` snapshot; version-cached, so
+        repeated reads between mutations cost nothing."""
+        if self._view is not None and self._view_version == self._version:
+            return self._view
         self._flush_traffic()
-        return dict(self._traffic)
+        n = len(self._edge_of_eid)
+        self._view = LedgerView(
+            n_nodes=self.topology.n_nodes,
+            async_mode=self.async_mode,
+            rounds=self.rounds,
+            amortize_window=self.amortize_window,
+            sim_time_s=self.sim_time_s,
+            lan_floats=self.lan_floats,
+            wan_floats=self.wan_floats,
+            total_floats=self._total_floats(),
+            priced_cost=self._priced_cost(),
+            sampled_priced_cost=self._sampled_priced_cost(),
+            window_cost=self._window_cost(),
+            rewire_lan_floats=self.rewire_lan_floats,
+            rewire_wan_floats=self.rewire_wan_floats,
+            rewire_floats=self._rewire_floats_total(),
+            rewiring_cost=self._rewiring_cost(),
+            rewire_events=self.rewire_events,
+            rewire_time_s=self.rewire_time_s,
+            pending_handshake_s=self._pending_handshake_s(),
+            clock_skew_s=self._clock_skew_s(),
+            edges=tuple(self._edge_of_eid),
+            edge_clock=self._clock[:n].copy(),
+            edge_seen=self._clock_seen[:n].copy(),
+            edge_traffic=self._traffic[:n].copy(),
+            union_eids=self._union_pricing.eids.copy(),
+            ewma_latency_s=self._ewma_lat[:n].copy(),
+            ewma_price_s=self._ewma_price[:n].copy(),
+            ewma_seen=self._ewma_seen[:n].copy(),
+            node_clock=self._node_clocks(),
+            node_busy_s=self.node_busy_s.copy(),
+            node_idle_s=self._node_idle_s(),
+            _ledger=self,
+        )
+        self._view_version = self._version
+        return self._view
 
-    @property
-    def edge_traffic(self) -> np.ndarray:
-        """Per-edge floats, aligned with ``self.topology.edges`` — a
-        *view* onto the current schedule's union graph.  After a
-        ``switch_schedule`` to a sparser fabric, traffic booked on links
-        the new union lacks is not shown here (use ``traffic_by_edge``
-        for the lossless history)."""
-        self._flush_traffic()
-        return np.asarray([self._traffic.get(e, 0.0)
-                           for e in self.topology.edges])
-
-    # ---- clocks ----
-    def edge_clocks(self) -> Dict[Edge, float]:
-        """Per-link virtual clocks (seconds), keyed by canonical edge —
-        survives schedule switches.  Monotone non-decreasing per edge in
-        both modes; in sync mode activated edges snap to the global
-        clock, in async mode each advances by its own cost only."""
-        return dict(self._edge_clock)
-
-    def node_clocks(self) -> np.ndarray:
-        """When each node last finished a communication: the max clock
-        over its incident links (0 if it never communicated)."""
-        clk = np.zeros(self.topology.n_nodes)
-        for (i, j), c in self._edge_clock.items():
-            if i < len(clk):
-                clk[i] = max(clk[i], c)
-            if j < len(clk):
-                clk[j] = max(clk[j], c)
-        return clk
-
-    def clock_skew_s(self) -> float:
-        """Spread of the per-node clocks — 0 when every node finishes
-        rounds in lockstep (sync, constant fabric); positive when async
-        lets fast nodes run ahead of the stragglers."""
-        clk = self.node_clocks()
-        return float(clk.max() - clk.min()) if len(clk) else 0.0
-
-    @property
-    def node_idle_s(self) -> np.ndarray:
-        """Per-node idle time: the global clock minus the node's own
-        busy time.  In sync mode this is time spent waiting on other
-        nodes' slower links; in async mode, time a fast node is done
-        before the last link drains."""
-        return np.maximum(self.sim_time_s - self.node_busy_s, 0.0)
-
-    @property
-    def total_floats(self) -> float:
+    # ---- private implementations (shared by view() and the shims) ----
+    def _total_floats(self) -> float:
         return self.lan_floats + self.wan_floats
 
-    def priced_cost(self) -> float:
-        """Cumulative bandwidth-weighted cost (seconds of link time);
-        WAN floats dominate under the geo-wan profile, matching the
-        paper's Gaia objective of pricing scarce WAN bytes.  Includes
-        re-wiring traffic, so a controller that flaps between schedules
-        pays for it in C(θ)."""
+    def _priced_cost(self) -> float:
         return (self.lan_floats * self.profile.price_per_float("lan")
                 + self.wan_floats * self.profile.price_per_float("wan"))
 
-    def sampled_priced_cost(self) -> float:
-        """``priced_cost`` in *sampled* currency: every booked float
-        priced at the bandwidth its activation actually sampled, so a
-        sync SkewScout window numerator stays unit-consistent with the
-        EWMA-measured CM denominator (constant-priced floats against a
-        measured CM would read systematically cheap and drift during
-        EWMA warm-up).  Falls back to ``priced_cost`` when no stochastic
-        link model is attached — the constants are the truth there."""
+    def _sampled_priced_cost(self) -> float:
         if self.links is None or not self.links.stochastic:
-            return self.priced_cost()
+            return self._priced_cost()
         return self._sampled_cost_s
 
-    @property
-    def rewire_floats(self) -> float:
+    def _rewire_floats_total(self) -> float:
         return self.rewire_lan_floats + self.rewire_wan_floats
 
-    def rewiring_cost(self) -> float:
-        """Priced cost of the re-wiring traffic alone — the component of
-        ``priced_cost`` a schedule-flapping controller is paying for
-        link churn."""
+    def _rewiring_cost(self) -> float:
         return (self.rewire_lan_floats * self.profile.price_per_float("lan")
                 + self.rewire_wan_floats
                 * self.profile.price_per_float("wan"))
 
+    def _window_cost(self) -> float:
+        if self.async_mode:
+            return self.sim_time_s
+        return self._sampled_priced_cost()
+
+    def _pending_handshake_s(self) -> float:
+        return float(sum(float(self._hs_bal[g]) for g in self._pending))
+
+    def _node_clocks(self) -> np.ndarray:
+        clk = np.zeros(self.topology.n_nodes)
+        K = len(clk)
+        seen = self._clock_seen
+        ids = np.flatnonzero(seen)
+        if ids.size:
+            c = self._clock[ids]
+            i = self._eid_i[ids]
+            j = self._eid_j[ids]
+            mi = i < K
+            mj = j < K
+            np.maximum.at(clk, i[mi], c[mi])
+            np.maximum.at(clk, j[mj], c[mj])
+        return clk
+
+    def _clock_skew_s(self) -> float:
+        clk = self._node_clocks()
+        return float(clk.max() - clk.min()) if len(clk) else 0.0
+
+    def _node_idle_s(self) -> np.ndarray:
+        return np.maximum(self.sim_time_s - self.node_busy_s, 0.0)
+
+    def _edge_clocks_map(self) -> Dict[Edge, float]:
+        ids = np.flatnonzero(self._clock_seen)
+        return {self._edge_of_eid[g]: float(self._clock[g]) for g in ids}
+
+    def _traffic_map(self) -> Dict[Edge, float]:
+        self._flush_traffic()
+        ids = np.flatnonzero(self._traffic)
+        return {self._edge_of_eid[g]: float(self._traffic[g])
+                for g in ids}
+
+    def _edge_traffic_union(self) -> np.ndarray:
+        self._flush_traffic()
+        return self._traffic[self._union_pricing.eids]
+
     def _full_exchange(self, model_floats: float, g: Topology,
-                       lat_of, price_of, worst: bool) -> float:
+                       lat_e: np.ndarray, price_e: np.ndarray,
+                       worst: bool) -> float:
         """One BSP-style full-model exchange on ``g`` (each node's model
         share routed uniformly over its incident edges): the max link
         time (``worst=True``, latency + transfer) or the summed
-        bandwidth-seconds.  The per-edge (latency, price) come from the
-        accessors, so the constant and measured variants share one
+        bandwidth-seconds (sequential fold — bit-equal to the retired
+        per-edge loop).  The per-edge (latency, price) arrays come from
+        the callers, so the constant and measured variants share one
         routing formula."""
         if not len(g.edges):
             return 1e-30
         deg = g.degrees().astype(np.float64)
         share = model_floats / np.maximum(deg, 1)
-        acc = 0.0
-        for n, (i, j) in enumerate(g.edges):
-            cls = g.edge_class[n]
-            per_edge = share[i] + share[j]
-            if worst:
-                acc = max(acc, lat_of((i, j), cls)
-                          + per_edge * price_of((i, j), cls))
-            else:
-                acc += per_edge * price_of((i, j), cls)
+        ei = np.asarray([i for i, _ in g.edges], np.int64)
+        ej = np.asarray([j for _, j in g.edges], np.int64)
+        per_edge = share[ei] + share[ej]
+        if worst:
+            acc = max(0.0, float((lat_e + per_edge * price_e).max()))
+        else:
+            acc = _seqsum(per_edge * price_e)
         return max(acc, 1e-30)
 
-    def full_exchange_cost(self, model_floats: float) -> float:
-        """Priced cost of one BSP-style full-model exchange on the union
-        fabric — SkewScout's CM denominator (bandwidth-seconds)."""
-        return self._full_exchange(
-            model_floats, self.topology,
-            lambda e, cls: self.profile.latency(cls),
-            lambda e, cls: self.profile.price_per_float(cls), worst=False)
+    def _const_rates(self, g: Topology) -> tuple:
+        is_wan = _wan_mask(g)
+        lat = np.where(is_wan, self.profile.latency("wan"),
+                       self.profile.latency("lan"))
+        price = np.where(is_wan, self.profile.price_per_float("wan"),
+                         self.profile.price_per_float("lan"))
+        return lat, price
 
-    def full_exchange_time(self, model_floats: float) -> float:
-        """Wall-clock of one BSP-style full-model exchange on the union
-        fabric (slowest link's latency + transfer) — the CM denominator
-        when SkewScout prices C(θ) in async simulated time."""
-        return self._full_exchange(
-            model_floats, self.topology,
-            lambda e, cls: self.profile.latency(cls),
-            lambda e, cls: self.profile.price_per_float(cls), worst=True)
+    def _full_exchange_cost(self, model_floats: float) -> float:
+        lat, price = self._const_rates(self.topology)
+        return self._full_exchange(model_floats, self.topology, lat,
+                                   price, worst=False)
 
-    # ---- measured costs (per-edge EWMA over sampled observations) ----
-    def measured_latency_s(self, e: Edge, cls: str = "lan") -> float:
-        """EWMA of the link's observed latency; profile constant until
-        the link has been observed (or when no link model is attached —
-        the constants *are* the truth then)."""
-        return self._ewma_lat.get(e, self.profile.latency(cls))
+    def _full_exchange_time(self, model_floats: float) -> float:
+        lat, price = self._const_rates(self.topology)
+        return self._full_exchange(model_floats, self.topology, lat,
+                                   price, worst=True)
 
-    def measured_price_per_float(self, e: Edge, cls: str = "lan") -> float:
-        """EWMA of the link's observed seconds-per-float (inverse
-        sampled bandwidth), with the same profile-constant fallback."""
-        return self._ewma_price.get(e, self.profile.price_per_float(cls))
+    def _measured_latency_s(self, e: Edge, cls: str = "lan") -> float:
+        g = self._eid.get(e)
+        if g is not None and self._ewma_seen[g]:
+            return float(self._ewma_lat[g])
+        return self.profile.latency(cls)
+
+    def _measured_price_per_float(self, e: Edge,
+                                  cls: str = "lan") -> float:
+        g = self._eid.get(e)
+        if g is not None and self._ewma_seen[g]:
+            return float(self._ewma_price[g])
+        return self.profile.price_per_float(cls)
 
     def _measured_union(self, fabric) -> Topology:
         return self.topology if fabric is None \
             else as_schedule(fabric).union()
 
-    def measured_full_exchange_cost(self, model_floats: float,
-                                    fabric=None) -> float:
-        """``full_exchange_cost`` priced from the per-edge EWMA measured
-        costs instead of profile constants — SkewScout's CM denominator
-        when a link model makes the constants a fiction.  ``fabric``
-        pins the exchange graph (e.g. the densest ladder rung) so the
-        denominator stays comparable across rung switches."""
-        return self._full_exchange(
-            model_floats, self._measured_union(fabric),
-            self.measured_latency_s, self.measured_price_per_float,
-            worst=False)
+    def _measured_rates(self, g: Topology) -> tuple:
+        """Per-edge EWMA measured (latency, price) with profile-constant
+        fallback for never-observed links, cached per graph object."""
+        ent = self._measured_ids.get(id(g))
+        if ent is None or ent[0] is not g:
+            ids = np.fromiter((self._eid.get(e, -1) for e in g.edges),
+                              np.int64, len(g.edges))
+            self._measured_ids[id(g)] = ent = (g, ids)
+        ids = ent[1]
+        lat_c, price_c = self._const_rates(g)
+        seen = (ids >= 0) & self._ewma_seen[np.maximum(ids, 0)]
+        safe = np.maximum(ids, 0)
+        lat = np.where(seen, self._ewma_lat[safe], lat_c)
+        price = np.where(seen, self._ewma_price[safe], price_c)
+        return lat, price
 
-    def measured_full_exchange_time(self, model_floats: float,
-                                    fabric=None) -> float:
-        """``full_exchange_time`` from measured per-edge costs — the CM
-        denominator for an async ledger under a link model."""
-        return self._full_exchange(
-            model_floats, self._measured_union(fabric),
-            self.measured_latency_s, self.measured_price_per_float,
-            worst=True)
+    def _measured_full_exchange_cost(self, model_floats: float,
+                                     fabric=None) -> float:
+        g = self._measured_union(fabric)
+        lat, price = self._measured_rates(g)
+        return self._full_exchange(model_floats, g, lat, price,
+                                   worst=False)
 
-    # ---- controller-facing pricing policy ----
-    def window_cost(self) -> float:
-        """The running counter SkewScout cuts C(θ) windows from — the
-        one place the numerator currency is chosen: simulated wall-clock
-        for an async ledger; for a sync ledger, bandwidth-seconds priced
-        at the sampled bandwidths when a stochastic link model is
-        attached (``sampled_priced_cost``) and at the profile constants
-        otherwise."""
-        if self.async_mode:
-            return self.sim_time_s
-        return self.sampled_priced_cost()
+    def _measured_full_exchange_time(self, model_floats: float,
+                                     fabric=None) -> float:
+        g = self._measured_union(fabric)
+        lat, price = self._measured_rates(g)
+        return self._full_exchange(model_floats, g, lat, price,
+                                   worst=True)
 
-    def cm_denominator(self, model_floats: float, fabric=None) -> float:
-        """The CM denominator matching :meth:`window_cost`'s currency —
-        one full-model exchange priced as wall-clock (async) or
-        bandwidth-seconds (sync), from the per-edge EWMA measured costs
-        when a link model is attached and from the profile constants
-        otherwise.  ``fabric`` pins the exchange graph (constants-only
-        callers that need a pin use a precomputed ``cm_ref`` instead,
-        since constants never drift)."""
+    def _cm_denominator(self, model_floats: float,
+                        fabric=None) -> float:
         if self.links is not None:
-            return (self.measured_full_exchange_time(model_floats,
-                                                     fabric=fabric)
+            return (self._measured_full_exchange_time(model_floats,
+                                                      fabric=fabric)
                     if self.async_mode
-                    else self.measured_full_exchange_cost(model_floats,
-                                                          fabric=fabric))
-        return (self.full_exchange_time(model_floats) if self.async_mode
-                else self.full_exchange_cost(model_floats))
+                    else self._measured_full_exchange_cost(model_floats,
+                                                           fabric=fabric))
+        return (self._full_exchange_time(model_floats) if self.async_mode
+                else self._full_exchange_cost(model_floats))
+
+    # ---- deprecated accessor shims (use view() instead) ----
+    @_deprecated("CommLedger.view().traffic_map()")
+    def traffic_by_edge(self) -> Dict[Edge, float]:
+        """Deprecated: ``view().traffic_map()`` (or
+        ``view().edge_traffic``, eid-aligned)."""
+        return self._traffic_map()
 
     @property
+    @_deprecated("CommLedger.view().edge_traffic[view().union_eids]")
+    def edge_traffic(self) -> np.ndarray:
+        """Deprecated: per-edge floats aligned with
+        ``self.topology.edges`` — ``view().edge_traffic`` indexed by
+        ``view().union_eids``."""
+        return self._edge_traffic_union()
+
+    @_deprecated("CommLedger.view().edge_clock_map()")
+    def edge_clocks(self) -> Dict[Edge, float]:
+        """Deprecated: ``view().edge_clock_map()`` (or
+        ``view().edge_clock``, eid-aligned)."""
+        return self._edge_clocks_map()
+
+    @_deprecated("CommLedger.view().node_clock")
+    def node_clocks(self) -> np.ndarray:
+        """Deprecated: ``view().node_clock``."""
+        return self._node_clocks()
+
+    @_deprecated("CommLedger.view().clock_skew_s")
+    def clock_skew_s(self) -> float:
+        """Deprecated: ``view().clock_skew_s``."""
+        return self._clock_skew_s()
+
+    @property
+    @_deprecated("CommLedger.view().node_idle_s")
+    def node_idle_s(self) -> np.ndarray:
+        """Deprecated: ``view().node_idle_s``."""
+        return self._node_idle_s()
+
+    @property
+    @_deprecated("CommLedger.view().total_floats")
+    def total_floats(self) -> float:
+        """Deprecated: ``view().total_floats``."""
+        return self._total_floats()
+
+    @_deprecated("CommLedger.view().priced_cost")
+    def priced_cost(self) -> float:
+        """Deprecated: ``view().priced_cost``."""
+        return self._priced_cost()
+
+    @_deprecated("CommLedger.view().sampled_priced_cost")
+    def sampled_priced_cost(self) -> float:
+        """Deprecated: ``view().sampled_priced_cost``."""
+        return self._sampled_priced_cost()
+
+    @property
+    @_deprecated("CommLedger.view().rewire_floats")
+    def rewire_floats(self) -> float:
+        """Deprecated: ``view().rewire_floats``."""
+        return self._rewire_floats_total()
+
+    @_deprecated("CommLedger.view().rewiring_cost")
+    def rewiring_cost(self) -> float:
+        """Deprecated: ``view().rewiring_cost``."""
+        return self._rewiring_cost()
+
+    @_deprecated("CommLedger.view().full_exchange_cost(m)")
+    def full_exchange_cost(self, model_floats: float) -> float:
+        """Deprecated: ``view().full_exchange_cost(m)``."""
+        return self._full_exchange_cost(model_floats)
+
+    @_deprecated("CommLedger.view().full_exchange_time(m)")
+    def full_exchange_time(self, model_floats: float) -> float:
+        """Deprecated: ``view().full_exchange_time(m)``."""
+        return self._full_exchange_time(model_floats)
+
+    @_deprecated("CommLedger.view().measured_latency_s(e, cls)")
+    def measured_latency_s(self, e: Edge, cls: str = "lan") -> float:
+        """Deprecated: ``view().measured_latency_s(e, cls)``."""
+        return self._measured_latency_s(e, cls)
+
+    @_deprecated("CommLedger.view().measured_price_per_float(e, cls)")
+    def measured_price_per_float(self, e: Edge,
+                                 cls: str = "lan") -> float:
+        """Deprecated: ``view().measured_price_per_float(e, cls)``."""
+        return self._measured_price_per_float(e, cls)
+
+    @_deprecated("CommLedger.view().measured_full_exchange_cost(m)")
+    def measured_full_exchange_cost(self, model_floats: float,
+                                    fabric=None) -> float:
+        """Deprecated: ``view().measured_full_exchange_cost(m)``."""
+        return self._measured_full_exchange_cost(model_floats,
+                                                 fabric=fabric)
+
+    @_deprecated("CommLedger.view().measured_full_exchange_time(m)")
+    def measured_full_exchange_time(self, model_floats: float,
+                                    fabric=None) -> float:
+        """Deprecated: ``view().measured_full_exchange_time(m)``."""
+        return self._measured_full_exchange_time(model_floats,
+                                                 fabric=fabric)
+
+    @_deprecated("CommLedger.view().window_cost")
+    def window_cost(self) -> float:
+        """Deprecated: ``view().window_cost``."""
+        return self._window_cost()
+
+    @_deprecated("CommLedger.view().cm_denominator(m)")
+    def cm_denominator(self, model_floats: float, fabric=None) -> float:
+        """Deprecated: ``view().cm_denominator(m)``."""
+        return self._cm_denominator(model_floats, fabric=fabric)
+
+    @property
+    @_deprecated("CommLedger.view().pending_handshake_s")
     def pending_handshake_s(self) -> float:
-        """Unpaid handshake balance still being amortized (seconds) —
-        cost already incurred by the links but deferred into their
-        remaining window; ``rewire_time_s + pending_handshake_s`` is the
-        horizon-independent handshake total."""
-        return float(sum(self._pending_hs.values()))
+        """Deprecated: ``view().pending_handshake_s``."""
+        return self._pending_handshake_s()
 
     def summary(self) -> Dict[str, float]:
         return dict(lan_floats=self.lan_floats, wan_floats=self.wan_floats,
-                    total_floats=self.total_floats,
+                    total_floats=self._total_floats(),
                     sim_time_s=self.sim_time_s,
-                    priced_cost=self.priced_cost(), rounds=self.rounds,
-                    rewire_floats=self.rewire_floats,
+                    priced_cost=self._priced_cost(), rounds=self.rounds,
+                    rewire_floats=self._rewire_floats_total(),
                     rewire_events=self.rewire_events,
                     rewire_time_s=self.rewire_time_s,
                     async_mode=float(self.async_mode),
-                    clock_skew_s=self.clock_skew_s(),
+                    clock_skew_s=self._clock_skew_s(),
                     busy_s_max=float(self.node_busy_s.max()),
-                    idle_s_mean=float(self.node_idle_s.mean()),
+                    idle_s_mean=float(self._node_idle_s().mean()),
                     amortize_window=float(self.amortize_window),
-                    pending_handshake_s=self.pending_handshake_s,
+                    pending_handshake_s=self._pending_handshake_s(),
                     **({"link_" + k: float(v)
                         for k, v in self.links.summary().items()}
-                       if self.links is not None else {}))
+                       if self.links is not None else {}),
+                    **({"participation": float(self.participation.fraction)}
+                       if self.participation is not None else {}))

@@ -13,6 +13,10 @@ Builders:
   random_regular    d-regular expander via the pairing model
   hierarchical      geo-WAN: LAN cliques (datacenters) joined by WAN
                     links between gateway nodes (the paper's Gaia setting)
+  hierarchical_cliques
+                    cliques-of-cliques: LAN cliques whose gateways form
+                    higher-level WAN cliques recursively — bounded degree,
+                    the 10k+-node ledger-scale fabric
   d_cliques         label-aware cliques (Bellet et al., 2021): greedy
                     clique assembly so each clique's aggregate label
                     histogram is near-uniform; inter-clique ring over WAN
@@ -52,14 +56,16 @@ class Topology:
 
     edges        canonical (i < j) undirected edge list
     mixing       (K, K) symmetric doubly-stochastic matrix, supported
-                 exactly on edges + the diagonal
+                 exactly on edges + the diagonal — or ``None`` on
+                 ledger-only fabrics past ``MIXING_AUTO_MAX`` nodes,
+                 where the dense matrix alone would be gigabytes
     edge_class   per-edge link class, "lan" or "wan"
     cliques      D-Cliques / datacenter grouping (empty when unused)
     """
     name: str
     n_nodes: int
     edges: Tuple[Edge, ...]
-    mixing: np.ndarray
+    mixing: Optional[np.ndarray]
     edge_class: Tuple[str, ...] = ()
     cliques: Tuple[Tuple[int, ...], ...] = ()
 
@@ -68,20 +74,38 @@ class Topology:
             object.__setattr__(self, "edge_class",
                                ("lan",) * len(self.edges))
         assert len(self.edge_class) == len(self.edges)
-        # adjacency cache: schedules rebuild neighbor sets every round, so
-        # neighbors() must be O(deg), not an O(E) edge-list scan per call
-        adj: List[List[int]] = [[] for _ in range(self.n_nodes)]
-        for i, j in self.edges:
-            adj[i].append(j)
-            adj[j].append(i)
-        object.__setattr__(self, "_adj",
-                           tuple(tuple(sorted(a)) for a in adj))
-        object.__setattr__(self, "_deg",
-                           np.asarray([len(a) for a in adj], np.int64))
+        # adjacency cache, CSR layout: schedules rebuild neighbor sets
+        # every round and the ledger gathers endpoints per round, so
+        # neighbors() must be O(deg) and the build O(E) array work —
+        # not a Python loop over 100k+ edges
+        K = self.n_nodes
+        if self.edges:
+            pairs = np.asarray(self.edges, np.int64)
+            ei, ej = pairs[:, 0], pairs[:, 1]
+        else:
+            ei = ej = np.zeros(0, np.int64)
+        object.__setattr__(self, "_ei", ei)
+        object.__setattr__(self, "_ej", ej)
+        src = np.concatenate([ei, ej])
+        dst = np.concatenate([ej, ei])
+        deg = np.bincount(src, minlength=K).astype(np.int64)
+        order = np.lexsort((dst, src))
+        object.__setattr__(self, "_csr_dst", dst[order])
+        object.__setattr__(self, "_csr_ptr",
+                           np.concatenate([np.zeros(1, np.int64),
+                                           np.cumsum(deg)]))
+        object.__setattr__(self, "_deg", deg)
 
     # ---- structure ----
     def neighbors(self, k: int) -> List[int]:
-        return list(self._adj[k])
+        return self._csr_dst[self._csr_ptr[k]:self._csr_ptr[k + 1]] \
+            .tolist()
+
+    def edge_arrays(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Endpoint arrays (ei, ej) aligned with ``edges`` — the
+        vectorized consumers' layout (ledger pricing, full-exchange
+        routing)."""
+        return self._ei, self._ej
 
     def degrees(self) -> np.ndarray:
         return self._deg.copy()
@@ -101,6 +125,9 @@ class Topology:
     # ---- spectral ----
     def spectral_gap(self) -> float:
         """1 - |lambda_2(W)|: larger gap => faster gossip consensus."""
+        assert self.mixing is not None, \
+            f"{self.name}: no mixing matrix (ledger-only fabric past " \
+            f"{MIXING_AUTO_MAX} nodes); rebuild with with_mixing=True"
         ev = np.sort(np.abs(np.linalg.eigvalsh(self.mixing)))
         return float(1.0 - ev[-2]) if len(ev) > 1 else 1.0
 
@@ -114,6 +141,9 @@ class Topology:
         ``pad_degree`` widens D beyond this graph's max degree so every
         round of a schedule (and every rung of a topology ladder) shares
         one operand shape — the jitted step never retraces."""
+        assert self.mixing is not None, \
+            f"{self.name}: no mixing matrix (ledger-only fabric past " \
+            f"{MIXING_AUTO_MAX} nodes); rebuild with with_mixing=True"
         K = self.n_nodes
         D = max(self.max_degree if pad_degree is None else pad_degree, 1)
         assert D >= self.max_degree, (D, self.max_degree)
@@ -136,43 +166,68 @@ def metropolis_weights(n_nodes: int, edges: Sequence[Edge]) -> np.ndarray:
     """Symmetric doubly-stochastic W: W_ij = 1/(1 + max(deg_i, deg_j)) on
     edges, diagonal takes the slack.  Standard gossip weights — doubly
     stochastic for any graph, uniform 1/K on the complete graph."""
-    deg = np.zeros(n_nodes, np.int64)
-    for i, j in edges:
-        deg[i] += 1
-        deg[j] += 1
     W = np.zeros((n_nodes, n_nodes))
-    for i, j in edges:
-        W[i, j] = W[j, i] = 1.0 / (1.0 + max(deg[i], deg[j]))
+    if edges:
+        pairs = np.asarray(list(edges), np.int64)
+        ei, ej = pairs[:, 0], pairs[:, 1]
+        deg = np.bincount(np.concatenate([ei, ej]), minlength=n_nodes)
+        w = 1.0 / (1.0 + np.maximum(deg[ei], deg[ej]))
+        W[ei, ej] = w
+        W[ej, ei] = w
     np.fill_diagonal(W, 1.0 - W.sum(axis=1))
     return W
 
 
 def _connected(n_nodes: int, edges: Sequence[Edge]) -> bool:
-    adj: Dict[int, List[int]] = {k: [] for k in range(n_nodes)}
-    for i, j in edges:
-        adj[i].append(j)
-        adj[j].append(i)
-    seen, stack = {0}, [0]
-    while stack:
-        for j in adj[stack.pop()]:
-            if j not in seen:
-                seen.add(j)
-                stack.append(j)
-    return len(seen) == n_nodes
+    """Label-propagation connected-components over endpoint arrays
+    (hook to the min label, then pointer-jump until stable) — O(E log K)
+    array work instead of a Python DFS, so the 125k-edge 10k-node
+    fabrics stay cheap to validate."""
+    if n_nodes <= 1:
+        return True
+    if not edges:
+        return False
+    pairs = np.asarray(list(edges), np.int64)
+    ei, ej = pairs[:, 0], pairs[:, 1]
+    comp = np.arange(n_nodes)
+    while True:
+        prev = comp.copy()
+        lo = np.minimum(comp[ei], comp[ej])
+        np.minimum.at(comp, ei, lo)
+        np.minimum.at(comp, ej, lo)
+        while True:
+            jumped = comp[comp]
+            if np.array_equal(jumped, comp):
+                break
+            comp = jumped
+        if np.array_equal(comp, prev):
+            break
+    return int(comp.max()) == 0
+
+
+MIXING_AUTO_MAX = 4096
+"""Above this node count ``_build`` skips the dense mixing matrix: the
+ledger, link model, and schedules only need edge lists, and (K, K)
+float64 at 10k nodes is 800 MB.  Consumers that genuinely need W
+(spectral gap, neighbor_mix operands) assert it is present."""
 
 
 def _build(name: str, n_nodes: int, edges: Sequence[Edge],
            edge_class: Sequence[str] = (),
            cliques: Sequence[Tuple[int, ...]] = (),
-           require_connected: bool = True) -> Topology:
+           require_connected: bool = True,
+           with_mixing: Optional[bool] = None) -> Topology:
     """``require_connected=False`` is for the per-round graphs of a
     time-varying schedule (matchings are never connected on their own —
-    only the union over a period must be)."""
+    only the union over a period must be).  ``with_mixing=None`` builds
+    W only up to ``MIXING_AUTO_MAX`` nodes; pass True/False to force."""
     edges = _canonical(edges)
     if n_nodes > 1 and require_connected:
         assert _connected(n_nodes, edges), f"{name}: graph not connected"
-    return Topology(name, n_nodes, tuple(edges),
-                    metropolis_weights(n_nodes, edges),
+    if with_mixing is None:
+        with_mixing = n_nodes <= MIXING_AUTO_MAX
+    mixing = metropolis_weights(n_nodes, edges) if with_mixing else None
+    return Topology(name, n_nodes, tuple(edges), mixing,
                     tuple(edge_class), tuple(tuple(c) for c in cliques))
 
 
@@ -257,6 +312,44 @@ def hierarchical(n_nodes: int, n_datacenters: Optional[int] = None
     edges = _canonical(edges)
     return _build("geo-wan", n_nodes, edges, [ec[e] for e in edges],
                   cliques=groups)
+
+
+def hierarchical_cliques(n_nodes: int, clique_size: int = 25) -> Topology:
+    """Cliques-of-cliques: the bounded-degree fabric that scales the
+    geo-WAN shape to 10k+ nodes.
+
+    Level 0 groups consecutive nodes into LAN cliques of ``clique_size``;
+    each clique's first member is its gateway, and the gateways are
+    recursively grouped into higher-level WAN cliques of the same size
+    until a single top clique remains.  Every node keeps degree
+    O(clique_size * levels) — at K=10000, c=25 that is ~125k edges and
+    max degree 63, vs the flat :func:`hierarchical`'s sqrt(K)-degree
+    gateways — and construction is O(E), so ledger-only pricing runs at
+    fabric sizes where a dense mixing matrix is not even materialized
+    (see ``MIXING_AUTO_MAX``)."""
+    assert clique_size >= 2, clique_size
+    edges: List[Edge] = []
+    cls: List[str] = []
+    groups = [list(range(n_nodes))[a:a + clique_size]
+              for a in range(0, n_nodes, clique_size)]
+    level0 = [g for g in groups if g]
+    groups, wan = level0, False
+    while True:
+        for g in groups:
+            for a in range(len(g)):
+                for b in range(a + 1, len(g)):
+                    edges.append((g[a], g[b]))
+                    cls.append("wan" if wan else "lan")
+        if len(groups) <= 1:
+            break
+        gateways = [g[0] for g in groups]
+        groups = [gateways[a:a + clique_size]
+                  for a in range(0, len(gateways), clique_size)]
+        wan = True
+    ec = {(min(i, j), max(i, j)): c for (i, j), c in zip(edges, cls)}
+    edges = _canonical(edges)
+    return _build("hier-cliques", n_nodes, edges,
+                  [ec[e] for e in edges], cliques=level0)
 
 
 def greedy_clique_assignment(label_hist: np.ndarray,
@@ -447,6 +540,9 @@ class TopologySchedule:
         J = np.full((K, K), 1.0 / K)
         M = np.eye(K)
         for g in self._graphs:
+            assert g.mixing is not None, \
+                f"{g.name}: no mixing matrix (ledger-only fabric past " \
+                f"{MIXING_AUTO_MAX} nodes)"
             M = (g.mixing - J) @ M
         rate = float(np.max(np.abs(np.linalg.eigvals(M))))
         return 1.0 - rate ** (1.0 / self.period)
@@ -628,6 +724,8 @@ def build_topology(name: str, n_nodes: int, *,
         return random_regular(n_nodes, deg, seed=seed)
     if name in ("geo-wan", "hierarchical"):
         return hierarchical(n_nodes, **kw)
+    if name in ("hier-cliques", "hierarchical-cliques"):
+        return hierarchical_cliques(n_nodes, **kw)
     if name in ("dcliques", "d-cliques"):
         assert label_hist is not None, \
             "dcliques topology needs per-node label histograms"

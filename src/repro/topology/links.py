@@ -1,4 +1,4 @@
-"""Stochastic heterogeneous links: per-edge latency/bandwidth sampling.
+"""Stochastic heterogeneous links + per-round client participation.
 
 ``LinkProfile`` prices every link of a class (lan | wan) from two
 constants, which makes AD-PSGD's headline advantage unmeasurable: the
@@ -29,50 +29,56 @@ Seeding and replay: every draw is a pure function of
 ``(seed, edge, activation index)`` — a counter-based hash stream from
 ``kernels/rng.py`` (the same lowbias32 stream the Pallas kernels
 generate in-kernel), evaluated vectorized over all of a round's active
-edges at once instead of constructing one ``np.random.Generator`` per
-edge per activation.  Activation ``n`` of an edge owns uniform counters
+edges at once.  Activation ``n`` of an edge owns uniform counters
 ``[4n, 4n+4)`` on that edge's round stream: the jitter normal consumes
 ``4n``/``4n+1`` (Box–Muller), the Markov transition uniform is ``4n+2``,
 and ``4n+3`` is reserved.  A rebuilt model (same seed) replaying the
 same sequence of ledger calls therefore produces bit-identical sampled
 times, in any interleaving of edges; the Markov state is a fold over the
 keyed draws, so it replays too.  With all three knobs at zero,
-:meth:`sample` returns the class-constant arrays unchanged (bitwise),
-which is what lets a "sampled" ledger at zero rates reproduce the
-constant-profile ledger exactly.
+:meth:`LinkModel.sample` returns the class-constant arrays unchanged
+(bitwise), which is what lets a "sampled" ledger at zero rates reproduce
+the constant-profile ledger exactly.
 
-Consumed by :class:`~repro.topology.costs.CommLedger` (``link_model=``):
-gossip, exchange, and probe rounds all price sampled per-edge times, and
-the ledger folds each observation into per-edge EWMA *measured* costs
-that SkewScout's C(θ)/CM pricing reads in place of profile constants.
+Array layout (the 10k-node redesign): per-link state — stream key, base
+multipliers, draw counter, Markov bit — lives in flat arrays indexed by
+a slot id; an edge list is resolved to its slot array once (cached per
+edge-tuple object) and every later activation is pure gather/scatter.
+Slot admission keys whole edge sets in one :func:`rng.fold_keys` batch,
+bit-equal to the retired per-edge ``fold_key`` loop.
+
+:class:`Participation` is the client-sampling analogue: a seeded
+per-round Bernoulli node mask (tag-disjoint from both link streams, so
+toggling sampling can never perturb link draws and vice versa).  The
+ledger prices only edges whose endpoints both participate; dpsgd/adpsgd
+zero the corresponding mixing weights; SkewScout probes route around
+absent nodes.
+
+Consumed by :class:`~repro.topology.costs.CommLedger` (``link_model=`` /
+``participation=``): gossip, exchange, and probe rounds all price
+sampled per-edge times, and the ledger folds each observation into
+per-edge EWMA *measured* costs that SkewScout's C(θ)/CM pricing reads in
+place of profile constants.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import warnings
 from typing import Dict, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.configs.base import LinkConfig
 from repro.kernels import rng
 from repro.topology.costs import LinkProfile
 
 Edge = Tuple[int, int]
 
-# draw-key tags: keep the per-edge base stream and the per-activation
-# stream disjoint (both are keyed under the same model seed)
+# draw-key tags: keep the per-edge base stream, the per-activation
+# stream, and the participation stream disjoint (all keyed under one
+# model seed)
 _TAG_BASE = 0x0B
 _TAG_ROUND = 0x0A
-
-
-@dataclass
-class _EdgeState:
-    """Mutable per-link sampling state (replayable: a pure fold over the
-    keyed draws, advanced once per activation)."""
-    key: int = 0              # cached per-edge round-stream key
-    lat_mult: float = 1.0     # persistent per-edge base draw (hetero)
-    bw_mult: float = 1.0
-    n: int = 0                # activations so far (the draw counter)
-    slow: bool = False        # Markov transient-slowdown state
+_TAG_PART = 0x0C
 
 
 class LinkModel:
@@ -80,7 +86,8 @@ class LinkModel:
 
     ``sample`` maps a graph's per-edge class-constant (latency,
     bandwidth) arrays to sampled arrays for one activation, advancing
-    each active edge's draw counter and Markov state.
+    each active edge's draw counter and Markov state — all flat-array
+    gather/scatter after the edge set's one-time slot admission.
     """
 
     def __init__(self, profile: LinkProfile, *, seed: int = 0,
@@ -98,7 +105,15 @@ class LinkModel:
         self.straggler_rate = float(straggler_rate)
         self.straggler_exit = float(straggler_exit)
         self.straggler_slowdown = float(straggler_slowdown)
-        self._edges: Dict[Edge, _EdgeState] = {}
+        # per-link state, slot-indexed flat arrays
+        self._slot: Dict[Edge, int] = {}
+        self._key = np.zeros(0, np.uint32)   # round-stream keys
+        self._lat_mult = np.ones(0)          # persistent base draws
+        self._bw_mult = np.ones(0)
+        self._n = np.zeros(0, np.int64)      # activations (draw counter)
+        self._slow = np.zeros(0, bool)       # Markov slow state
+        # edge-tuple object -> its slot index array (the per-graph cache)
+        self._slots_cache: Dict[int, tuple] = {}
         # counters for the trainer's straggler/jitter extras
         self.activations = 0
         self.slow_activations = 0
@@ -110,19 +125,48 @@ class LinkModel:
         return (self.jitter > 0 or self.hetero > 0
                 or self.straggler_rate > 0)
 
-    # ---- draws ----
-    def _state(self, e: Edge) -> _EdgeState:
-        st = self._edges.get(e)
-        if st is None:
-            st = _EdgeState(key=rng.fold_key(self.seed, _TAG_ROUND,
-                                             e[0], e[1]))
-            if self.hetero > 0:
-                base = rng.fold_key(self.seed, _TAG_BASE, e[0], e[1])
-                z = rng.normal01(np.uint32(base), np.arange(2))
-                st.lat_mult = float(np.exp(self.hetero * z[0]))
-                st.bw_mult = float(np.exp(-self.hetero * z[1]))
-            self._edges[e] = st
-        return st
+    # ---- slot admission ----
+    def _admit(self, edges: Sequence[Edge]) -> None:
+        """Create slots for unseen edges, keying and base-drawing the
+        whole batch in one vectorized pass (bit-equal to the per-edge
+        scalar ``fold_key``/``normal01`` calls it replaces)."""
+        start = len(self._key)
+        for k, e in enumerate(edges):
+            self._slot[e] = start + k
+        ii = np.asarray([i for i, _ in edges], np.int64)
+        jj = np.asarray([j for _, j in edges], np.int64)
+        key = rng.fold_keys(rng.fold_key(self.seed, _TAG_ROUND), ii, jj)
+        n = len(edges)
+        if self.hetero > 0:
+            base = rng.fold_keys(rng.fold_key(self.seed, _TAG_BASE),
+                                 ii, jj)
+            z0 = rng.normal01(base, np.zeros(n, np.int64))
+            z1 = rng.normal01(base, np.ones(n, np.int64))
+            lat_mult = np.exp(self.hetero * z0)
+            bw_mult = np.exp(-self.hetero * z1)
+        else:
+            lat_mult = np.ones(n)
+            bw_mult = np.ones(n)
+        self._key = np.concatenate([self._key, key.astype(np.uint32)])
+        self._lat_mult = np.concatenate([self._lat_mult, lat_mult])
+        self._bw_mult = np.concatenate([self._bw_mult, bw_mult])
+        self._n = np.concatenate([self._n, np.zeros(n, np.int64)])
+        self._slow = np.concatenate([self._slow, np.zeros(n, bool)])
+
+    def _slots_for(self, edges: Sequence[Edge]) -> np.ndarray:
+        """Slot index array for ``edges``, cached per edge-tuple object
+        (graphs are long-lived; the cache keeps a reference so the id
+        key cannot be recycled)."""
+        ent = self._slots_cache.get(id(edges))
+        if ent is not None and ent[0] is edges:
+            return ent[1]
+        miss = [e for e in edges if e not in self._slot]
+        if miss:
+            self._admit(miss)
+        slots = np.fromiter((self._slot[e] for e in edges), np.int64,
+                            len(edges))
+        self._slots_cache[id(edges)] = (edges, slots)
+        return slots
 
     def sample(self, edges: Sequence[Edge], lat: np.ndarray,
                bw: np.ndarray, active: np.ndarray
@@ -133,9 +177,9 @@ class LinkModel:
         by the caller anyway) and do not advance their counters.
 
         All active edges draw in one vectorized hash evaluation: keys
-        and counters are gathered from the per-edge states, the jitter
+        and counters are gathered from the slot arrays, the jitter
         normals and Markov uniforms come from one ``kernels/rng.py``
-        batch each, and only the state write-back walks the edges."""
+        batch each, and the state write-back is a scatter."""
         if not self.stochastic:
             return lat, bw
         s_lat = lat.astype(np.float64).copy()
@@ -143,9 +187,9 @@ class LinkModel:
         idx = np.flatnonzero(active)
         if idx.size == 0:
             return s_lat, s_bw
-        states = [self._state(edges[n]) for n in idx]
-        keys = np.array([st.key for st in states], np.uint32)
-        ctr = np.array([st.n for st in states], np.int64)
+        sl = self._slots_for(edges)[idx]
+        keys = self._key[sl]
+        ctr = self._n[sl]
         # activation n owns uniform counters [4n, 4n+4) on the edge's
         # round stream: Box-Muller jitter at 4n/4n+1, Markov u at 4n+2
         mult = np.ones(idx.size, np.float64)
@@ -155,21 +199,18 @@ class LinkModel:
         if self.straggler_rate > 0:
             u = rng.uniform01(keys, (4 * ctr + 2).astype(np.uint32)
                               ).astype(np.float64)
-            slow = np.array([st.slow for st in states], bool)
+            slow = self._slow[sl]
             mult = np.where(slow, mult * self.straggler_slowdown, mult)
             self.slow_activations += int(np.sum(slow))
             next_slow = np.where(slow, u >= self.straggler_exit,
                                  u < self.straggler_rate)
         else:
-            next_slow = np.array([st.slow for st in states], bool)
+            next_slow = self._slow[sl]
         self.activations += idx.size
-        for j, st in enumerate(states):
-            st.n += 1
-            st.slow = bool(next_slow[j])
-        base_lat = np.array([st.lat_mult for st in states], np.float64)
-        base_bw = np.array([st.bw_mult for st in states], np.float64)
-        s_lat[idx] = lat[idx] * base_lat * mult
-        s_bw[idx] = bw[idx] * base_bw / mult
+        self._n[sl] = ctr + 1
+        self._slow[sl] = next_slow
+        s_lat[idx] = lat[idx] * self._lat_mult[sl] * mult
+        s_bw[idx] = bw[idx] * self._bw_mult[sl] / mult
         return s_lat, s_bw
 
     # ---- reporting ----
@@ -186,19 +227,69 @@ class LinkModel:
                     slow_fraction=self.slow_fraction())
 
 
-def make_link_model(comm, profile: LinkProfile,
+class Participation:
+    """Seeded per-round client sampling: round ``t``'s Bernoulli node
+    mask is a pure function of ``(seed, t)`` on its own tag-disjoint
+    hash stream — replayable, order-independent, and isolated from the
+    link model's draws (toggling one can never shift the other).
+
+    Semantics: a masked-out node skips the round's *communication* only
+    (local updates continue); an edge is active iff both endpoints
+    participate.  ``fraction=1.0`` is the exact pre-sampling behaviour
+    (all-true masks).  Masks are cached (read by the ledger, the mixing
+    operands, and SkewScout in the same round) and frozen read-only."""
+
+    def __init__(self, n_nodes: int, fraction: float, *, seed: int = 0):
+        assert 0.0 < float(fraction) <= 1.0, fraction
+        self.n_nodes = int(n_nodes)
+        self.fraction = float(fraction)
+        self.seed = int(seed)
+        self._cache: Dict[int, np.ndarray] = {}
+
+    def mask(self, t) -> np.ndarray:
+        """Boolean (n_nodes,) participant mask for round ``t``."""
+        t = int(t)
+        m = self._cache.get(t)
+        if m is None:
+            if self.fraction >= 1.0:
+                m = np.ones(self.n_nodes, bool)
+            else:
+                key = np.uint32(rng.fold_key(self.seed, _TAG_PART, t))
+                u = rng.uniform01(key, np.arange(self.n_nodes,
+                                                 dtype=np.uint32))
+                m = np.asarray(u < np.float32(self.fraction))
+            m.flags.writeable = False
+            if len(self._cache) >= 16:
+                self._cache.pop(next(iter(self._cache)))
+            self._cache[t] = m
+        return m
+
+    def summary(self) -> Dict[str, float]:
+        return dict(fraction=self.fraction, n_nodes=float(self.n_nodes))
+
+
+def make_link_model(link, profile: LinkProfile, *,
                     seed: int = 0) -> Optional[LinkModel]:
-    """Build the :class:`LinkModel` a ``CommConfig`` asks for (``None``
-    for the constant-profile ledger).  The model draws from its own
-    keyed streams, so the link seed can never perturb anything else
-    seeded from the run seed (clique assignment, data order, init)."""
-    if comm.link_model == "constant":
+    """Build the :class:`LinkModel` a :class:`LinkConfig` asks for
+    (``None`` for the constant-profile ledger).  The model draws from
+    its own keyed streams, so the link seed can never perturb anything
+    else seeded from the run seed (clique assignment, data order, init).
+
+    Passing a full ``CommConfig`` is deprecated; pass
+    ``comm.fabric.link``."""
+    if hasattr(link, "fabric"):          # a CommConfig (deprecated)
+        warnings.warn(
+            "make_link_model(comm, ...) is deprecated; pass "
+            "comm.fabric.link", DeprecationWarning, stacklevel=2)
+        link = link.fabric.link
+    assert isinstance(link, LinkConfig), link
+    if link.model == "constant":
         return None
-    if comm.link_model != "sampled":
+    if link.model != "sampled":
         raise ValueError(
-            f"unknown link_model {comm.link_model!r} (constant | sampled)")
-    return LinkModel(profile, seed=seed, jitter=comm.link_jitter,
-                     hetero=comm.link_hetero,
-                     straggler_rate=comm.straggler_rate,
-                     straggler_exit=comm.straggler_exit,
-                     straggler_slowdown=comm.straggler_slowdown)
+            f"unknown link_model {link.model!r} (constant | sampled)")
+    return LinkModel(profile, seed=seed, jitter=link.jitter,
+                     hetero=link.hetero,
+                     straggler_rate=link.straggler_rate,
+                     straggler_exit=link.straggler_exit,
+                     straggler_slowdown=link.straggler_slowdown)

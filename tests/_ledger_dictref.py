@@ -1,0 +1,831 @@
+"""Frozen pre-redesign dict-backed ledger + link model (verbatim copy).
+
+This module is the bit-equality reference for ``tests/test_fabric_scale.py``:
+it preserves the exact per-edge Python-dict bookkeeping (`DictCommLedger`)
+and per-edge-state link sampler (`DictLinkModel`) that the array-native
+`repro.topology.costs.CommLedger` / `repro.topology.links.LinkModel`
+replaced.  Do not "fix" or modernize this file — its value is that it is
+the old implementation, byte-for-byte in semantics, so the equivalence
+suite can assert the rewrite reproduced every float exactly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from repro.kernels import rng
+from repro.topology.graphs import (Edge, Topology, TopologySchedule,
+                                   as_schedule)
+
+
+
+
+@dataclass(frozen=True)
+class LinkProfile:
+    """Per-class bandwidth/latency.  ``uniform`` removes the LAN/WAN
+    distinction (every link is LAN-priced) — the seed repo's behaviour.
+    ``*_handshake`` is the connection-setup latency a newly-activated
+    link pays once (re-wiring); it defaults to 3x the link's propagation
+    latency (SYN / SYN-ACK / ACK) when not given."""
+    name: str
+    lan_bandwidth: float        # floats / second
+    wan_bandwidth: float
+    lan_latency: float = 0.0    # seconds
+    wan_latency: float = 0.0
+    lan_handshake: Optional[float] = None   # seconds; None -> 3x latency
+    wan_handshake: Optional[float] = None
+
+    def bandwidth(self, cls: str) -> float:
+        return self.wan_bandwidth if cls == "wan" else self.lan_bandwidth
+
+    def latency(self, cls: str) -> float:
+        return self.wan_latency if cls == "wan" else self.lan_latency
+
+    def handshake(self, cls: str) -> float:
+        h = self.wan_handshake if cls == "wan" else self.lan_handshake
+        return 3.0 * self.latency(cls) if h is None else h
+
+    def price_per_float(self, cls: str) -> float:
+        """Seconds per float — the scarcity weight used by SkewScout."""
+        return 1.0 / self.bandwidth(cls)
+
+
+# 4-byte floats: 10 Gb/s LAN ~ 312.5e6 floats/s; 100 Mb/s WAN ~ 3.125e6
+LINK_PROFILES: Dict[str, LinkProfile] = {
+    "uniform": LinkProfile("uniform", 312.5e6, 312.5e6, 0.0, 0.0),
+    "datacenter": LinkProfile("datacenter", 312.5e6, 312.5e6,
+                              1e-4, 1e-4),
+    "geo-wan": LinkProfile("geo-wan", 312.5e6, 3.125e6, 1e-4, 5e-2),
+}
+
+
+class _GraphPricing:
+    """Cached per-edge pricing arrays + a vectorized traffic accumulator
+    for one graph of the schedule (the per-step hot path stays numpy;
+    the per-edge dict is only materialized in cold accessors)."""
+
+    def __init__(self, graph: Topology, profile: LinkProfile):
+        self.graph = graph
+        self.deg = graph.degrees().astype(np.float64)
+        self.bw = np.asarray([profile.bandwidth(c)
+                              for c in graph.edge_class])
+        self.lat = np.asarray([profile.latency(c)
+                               for c in graph.edge_class])
+        self.hs = np.asarray([profile.handshake(c)
+                              for c in graph.edge_class])
+        self.is_wan = np.asarray([c == "wan" for c in graph.edge_class],
+                                 bool)
+        self.active = frozenset(graph.edges)
+        self.edge_index = {e: n for n, e in enumerate(graph.edges)}
+        # edge endpoint arrays for vectorized per-node routing
+        self.ei = np.asarray([i for i, _ in graph.edges], np.int64)
+        self.ej = np.asarray([j for _, j in graph.edges], np.int64)
+        self.traffic = np.zeros(len(graph.edges))
+
+    def flush_into(self, traffic: Dict[Edge, float]) -> None:
+        for e, f in zip(self.graph.edges, self.traffic):
+            if f:
+                traffic[e] = traffic.get(e, 0.0) + float(f)
+        self.traffic[:] = 0.0
+
+
+class DictCommLedger:
+    """Accumulates per-edge traffic and simulated time for one run.
+
+    ``record_exchange(c)``: all-to-all style — each node's ``c`` exchanged
+    floats are spread uniformly over its incident edges (the sum over
+    edges conserves ``K * c``); priced on the schedule's union graph
+    (parameter-server-style traffic has no per-round edge set).
+    ``record_gossip(m, t)``: D-PSGD style — every edge *active in round
+    t's graph* carries the full model once per direction (``2m`` per
+    active edge).  In ``async_mode`` a per-edge ``staleness`` bound
+    (AD-PSGD) amortizes each link's latency over ``staleness + 1``
+    in-flight deliveries.
+    ``record_probe(edges, m)``: SkewScout model traveling — ``m`` floats
+    cross each probed union link once.
+    """
+
+    def __init__(self, fabric: Union[Topology, TopologySchedule],
+                 profile: LinkProfile, *,
+                 rewire_floats_per_edge: float = 0.0,
+                 async_mode: bool = False,
+                 link_model=None, amortize_window: int = 1,
+                 ewma_alpha: float = 0.1):
+        self.profile = profile
+        self.rewire_floats_per_edge = float(rewire_floats_per_edge)
+        self.async_mode = bool(async_mode)
+        # stochastic per-link sampler (repro.topology.links.LinkModel);
+        # None keeps the class-constant pricing
+        self.links = link_model
+        assert int(amortize_window) >= 1, amortize_window
+        self.amortize_window = int(amortize_window)
+        # handshake amortization: canonical edge -> unpaid balance (s)
+        # and the per-activation installment it is paid down in
+        self._pending_hs: Dict[Edge, float] = {}
+        self._hs_inst: Dict[Edge, float] = {}
+        # per-edge EWMA measured costs (observed latency seconds and
+        # price seconds/float) — SkewScout's measured-cost denominators
+        assert 0.0 < ewma_alpha <= 1.0, ewma_alpha
+        self.ewma_alpha = float(ewma_alpha)
+        self._ewma_lat: Dict[Edge, float] = {}
+        self._ewma_price: Dict[Edge, float] = {}
+        # running transfer seconds with every float priced at the
+        # bandwidth its activation actually sampled — the sync C(θ)
+        # numerator that stays in the same currency as the measured CM
+        self._sampled_cost_s = 0.0
+        # source of truth for per-edge traffic survives schedule switches
+        self._traffic: Dict[Edge, float] = {}
+        self.lan_floats = 0.0
+        self.wan_floats = 0.0
+        self.sim_time_s = 0.0
+        # per-edge virtual clocks (canonical edge -> seconds); in sync
+        # mode every activated edge snaps to the global clock, in async
+        # mode each advances by its own cost only
+        self._edge_clock: Dict[Edge, float] = {}
+        # online re-wiring accounting (floats also in lan/wan totals)
+        self.rewire_lan_floats = 0.0
+        self.rewire_wan_floats = 0.0
+        self.rewire_events = 0
+        self.rewire_time_s = 0.0     # handshake seconds booked on links
+        # communication rounds recorded — includes probe/overhead
+        # exchanges, so this is NOT the trainer's step count
+        self.rounds = 0
+        self._last_active: Optional[frozenset] = None
+        self._pricing: Dict[int, _GraphPricing] = {}
+        self._attach(as_schedule(fabric))
+        # per-node busy time: each round a node participates in, it
+        # works for the max cost over its own activated incident links
+        self.node_busy_s = np.zeros(self.topology.n_nodes)
+
+    def _attach(self, schedule: TopologySchedule) -> None:
+        self.schedule = schedule
+        self.topology = schedule.union()
+        self._union_pricing = _GraphPricing(self.topology, self.profile)
+
+    def _graph_pricing(self, graph: Topology) -> _GraphPricing:
+        p = self._pricing.get(id(graph))
+        if p is None:
+            p = self._pricing[id(graph)] = _GraphPricing(graph,
+                                                         self.profile)
+        return p
+
+    # ---- recording ----
+    def _book_floats(self, pricing: _GraphPricing,
+                     per_edge: np.ndarray) -> None:
+        """Attribute ``per_edge`` floats (aligned with ``pricing.graph``'s
+        edge list) to links and LAN/WAN totals — all vectorized; the
+        per-edge dict only materializes in the cold accessors."""
+        pricing.traffic += per_edge
+        self.lan_floats += float(per_edge[~pricing.is_wan].sum())
+        self.wan_floats += float(per_edge[pricing.is_wan].sum())
+
+    def _link_rates(self, pricing: _GraphPricing, active: np.ndarray
+                    ) -> tuple:
+        """Per-edge (latency, bandwidth) for one activation of the
+        ``active`` edges: the graph's class constants, or — with a
+        ``link_model`` attached — the sampled values, each observation
+        folded into the per-edge EWMA measured costs."""
+        if self.links is None or not self.links.stochastic:
+            # identity sampling: constants are the truth, the EWMA fold
+            # would only re-derive them — keep the hot path dict-free
+            return pricing.lat, pricing.bw
+        lat, bw = self.links.sample(pricing.graph.edges, pricing.lat,
+                                    pricing.bw, active)
+        a = self.ewma_alpha
+        for n in np.flatnonzero(active):
+            e = pricing.graph.edges[n]
+            obs_lat, obs_price = float(lat[n]), 1.0 / float(bw[n])
+            old_lat = self._ewma_lat.get(e)
+            old_price = self._ewma_price.get(e)
+            self._ewma_lat[e] = obs_lat if old_lat is None \
+                else (1.0 - a) * old_lat + a * obs_lat
+            self._ewma_price[e] = obs_price if old_price is None \
+                else (1.0 - a) * old_price + a * obs_price
+        return lat, bw
+
+    def _book_sampled_cost(self, per_edge: np.ndarray, bw: np.ndarray,
+                           active: np.ndarray) -> None:
+        """Accumulate the transfer seconds of ``per_edge`` floats at the
+        (possibly sampled) ``bw`` of this activation — the sampled
+        analogue of ``priced_cost``'s float-times-constant-price sum.
+        No-op without a stochastic link model: ``sampled_priced_cost``
+        falls back to ``priced_cost`` there."""
+        if self.links is not None and self.links.stochastic:
+            self._sampled_cost_s += float(
+                (per_edge[active] / bw[active]).sum())
+
+    def _pay_installments(self, pricing: _GraphPricing,
+                          active: np.ndarray) -> Optional[np.ndarray]:
+        """Handshake installments due this round: each active edge with
+        an unpaid balance pays ``handshake / amortize_window`` into its
+        round cost.  Returns the per-edge installment array (None when
+        nothing is owed)."""
+        if not self._pending_hs:
+            return None
+        inst = None
+        for e in list(self._pending_hs):
+            n = pricing.edge_index.get(e)
+            if n is None or not active[n]:
+                continue
+            bal = self._pending_hs[e]
+            pay = min(self._hs_inst.get(e, bal), bal)
+            if inst is None:
+                inst = np.zeros(len(pricing.graph.edges))
+            inst[n] += pay
+            self.rewire_time_s += pay
+            bal -= pay
+            if bal <= 1e-18:
+                del self._pending_hs[e]
+                self._hs_inst.pop(e, None)
+            else:
+                self._pending_hs[e] = bal
+        return inst
+
+    def _charge_time(self, pricing: _GraphPricing,
+                     cost: np.ndarray, active: np.ndarray) -> None:
+        """Advance the clocks by ``cost`` seconds per edge (aligned with
+        ``pricing.graph.edges``; only ``active`` entries count).
+
+        sync: stop-and-wait — the global clock grows by the round's max
+        cost and every activated edge snaps to it.  async: each edge's
+        clock advances by its own cost; the global clock is the max of
+        the *activated* edges' clocks (monotone by construction)."""
+        if not active.any():
+            return
+        edges = pricing.graph.edges
+        if self.async_mode:
+            frontier = 0.0
+            for n in np.flatnonzero(active):
+                e = edges[n]
+                c = self._edge_clock.get(e, 0.0) + float(cost[n])
+                self._edge_clock[e] = c
+                frontier = max(frontier, c)
+            self.sim_time_s = max(self.sim_time_s, frontier)
+        else:
+            self.sim_time_s += float(cost[active].max())
+            for n in np.flatnonzero(active):
+                self._edge_clock[edges[n]] = self.sim_time_s
+        busy = np.zeros(len(self.node_busy_s))
+        own = np.where(active, cost, 0.0)
+        np.maximum.at(busy, pricing.ei, own)
+        np.maximum.at(busy, pricing.ej, own)
+        self.node_busy_s += busy
+
+    def _rewire(self, pricing: _GraphPricing) -> None:
+        """Charge the online re-wiring cost for links that were not
+        active in the previous gossip round: a control-plane handshake
+        of ``rewire_floats_per_edge`` floats per new link, priced at the
+        link's class and added to the simulated step time; the link's
+        per-class *setup latency* (``LinkProfile.handshake``: WAN >>
+        LAN) is charged as its own serial setup event at the default
+        ``amortize_window=1`` (the exact legacy behaviour), or scheduled
+        as ``handshake / amortize_window`` installments paid into the
+        link's first ``amortize_window`` gossip activations.  Links
+        dropped before their window completes forfeit the unpaid
+        balance immediately.
+        Floats are booked into the LAN/WAN totals too, so ``lan_floats +
+        wan_floats`` still covers every priced float.  Only gossip
+        rounds carry an active edge set — union-routed exchanges
+        (probes) never re-wire and never reset the tracking."""
+        if self._last_active is None or \
+                pricing.active == self._last_active:
+            self._last_active = pricing.active
+            return
+        prev = self._last_active
+        new = pricing.active - prev
+        dropped = prev - pricing.active
+        self._last_active = pricing.active
+        # teardown: a dropped link's unamortized handshake balance is
+        # charged now — the setup work was spent; only the booking was
+        # deferred.  This is what keeps schedule thrashing as expensive
+        # as un-amortized switching.
+        if dropped and self._pending_hs:
+            forfeit_max = 0.0
+            forfeited = []
+            busy = np.zeros(len(self.node_busy_s))
+            for e in dropped:
+                bal = self._pending_hs.pop(e, 0.0)
+                self._hs_inst.pop(e, None)
+                if bal <= 0.0:
+                    continue
+                forfeited.append(e)
+                self.rewire_time_s += bal
+                # the endpoints did this work: keep busy/idle/clock-skew
+                # accounting comparable across amortize_window settings
+                # (at window 1 the same seconds flow through the round's
+                # _charge_time and land on the endpoints there)
+                for k in e:
+                    if k < len(busy):
+                        busy[k] = max(busy[k], bal)
+                if self.async_mode:
+                    c = self._edge_clock.get(e, 0.0) + bal
+                    self._edge_clock[e] = c
+                    self.sim_time_s = max(self.sim_time_s, c)
+                else:
+                    forfeit_max = max(forfeit_max, bal)
+            # sync: teardowns run in parallel across the dropped links,
+            # and the links that actually forfeited (only those — a
+            # fully-paid dropped edge keeps its stale clock) snap to the
+            # global clock
+            self.sim_time_s += forfeit_max
+            for e in forfeited:
+                if not self.async_mode:
+                    self._edge_clock[e] = max(
+                        self._edge_clock.get(e, 0.0), self.sim_time_s)
+            self.node_busy_s += busy
+        if not new:
+            return
+        if self.async_mode:
+            # a (re)activated link joins at the global frontier: it
+            # cannot have banked transfer time while it did not exist.
+            # Without this, a rung switch would hand the controller a
+            # free window (the new fabric's clocks lag the ratcheted
+            # global max, so C(θ) reads ~0 until they catch up).
+            for e in new:
+                self._edge_clock[e] = max(self._edge_clock.get(e, 0.0),
+                                          self.sim_time_s)
+        is_new = np.asarray([e in new for e in pricing.graph.edges])
+        per_edge = np.where(is_new, self.rewire_floats_per_edge, 0.0)
+        if self.rewire_floats_per_edge > 0.0:
+            self._book_floats(pricing, per_edge)
+            self.rewire_lan_floats += float(per_edge[~pricing.is_wan].sum())
+            self.rewire_wan_floats += float(per_edge[pricing.is_wan].sum())
+        # window 1 (the default) keeps the exact legacy behaviour: the
+        # whole handshake is charged here as its own serial setup event.
+        # W > 1 schedules it as installments over the link's first W
+        # activations instead (re-activation restarts the window: the
+        # old connection is gone)
+        if self.amortize_window > 1:
+            for n in np.flatnonzero(is_new):
+                e = pricing.graph.edges[n]
+                hs = float(pricing.hs[n])
+                if hs > 0.0:
+                    self._pending_hs[e] = hs
+                    self._hs_inst[e] = hs / self.amortize_window
+            hs_now = 0.0
+        else:
+            hs_now = pricing.hs
+        # the control-plane transfer itself (amortized handshake latency
+        # is paid through the installments, starting with this round's
+        # gossip; control-plane floats are priced at nominal constants)
+        self._book_sampled_cost(per_edge, pricing.bw, is_new)
+        cost = np.where(is_new,
+                        hs_now + pricing.lat + per_edge / pricing.bw, 0.0)
+        self.rewire_time_s += float(cost[is_new].sum())
+        self._charge_time(pricing, cost, cost > 0)
+        self.rewire_events += len(new)
+
+    def record_exchange(self,
+                        floats_per_node: Union[float, Sequence[float]]
+                        ) -> None:
+        """All-to-all exchange of ``floats_per_node`` floats per node,
+        routed uniformly over each node's incident edges of the union
+        fabric.  Union routing has no per-round active edge set, so it
+        neither pays nor resets re-wiring."""
+        pricing = self._union_pricing
+        K = self.topology.n_nodes
+        c = np.broadcast_to(np.asarray(floats_per_node, np.float64), (K,))
+        share = np.where(pricing.deg > 0,
+                         c / np.maximum(pricing.deg, 1), 0.0)
+        per_edge = share[pricing.ei] + share[pricing.ej]
+        self._book_floats(pricing, per_edge)
+        active = per_edge > 0
+        lat, bw = self._link_rates(pricing, active)
+        self._book_sampled_cost(per_edge, bw, active)
+        self._charge_time(pricing,
+                          np.where(active, lat + per_edge / bw, 0.0),
+                          active)
+        self.rounds += 1
+
+    def record_gossip(self, model_floats: float,
+                      t: Optional[int] = None,
+                      staleness: Union[None, int, Sequence[int]] = None
+                      ) -> None:
+        """One gossip round at round index ``t``: the full model crosses
+        every edge active in ``schedule.at(t)``, both directions.
+        ``t=None`` keeps the legacy one-graph behaviour (round 0).
+
+        ``staleness`` (async mode only): per-edge bounded-staleness
+        values (scalar broadcasts) — a link tolerating ``s``-stale
+        deliveries pipelines ``s + 1`` payloads, so its latency is paid
+        once per ``s + 1`` activations.  Ignored in sync mode, where
+        every round is stop-and-wait regardless of the algorithm."""
+        graph = self.schedule.at(0 if t is None else t)
+        pricing = self._graph_pricing(graph)
+        self._rewire(pricing)
+        n_edges = len(graph.edges)
+        per_edge = np.full(n_edges, 2.0 * model_floats)
+        self._book_floats(pricing, per_edge)
+        active = per_edge > 0
+        lat, bw = self._link_rates(pricing, active)
+        self._book_sampled_cost(per_edge, bw, active)
+        if self.async_mode and staleness is not None:
+            s = np.broadcast_to(np.asarray(staleness, np.float64),
+                                (n_edges,))
+            assert (s >= 0).all(), "staleness must be non-negative"
+            lat = lat / (1.0 + s)
+        cost = np.where(active, lat + per_edge / bw, 0.0)
+        inst = self._pay_installments(pricing, active)
+        if inst is not None:
+            cost = cost + inst
+        self._charge_time(pricing, cost, active)
+        self.rounds += 1
+
+    def record_probe(self, edges: Sequence[Edge],
+                     floats_each: float) -> None:
+        """SkewScout model traveling: ``floats_each`` floats cross each
+        probed link once (one direction).  Probes ride union-fabric
+        links (probe routing follows active edges, which are union
+        members), are booked into the LAN/WAN totals and per-edge
+        traffic, block on delivery (staleness 0 — the measurement needs
+        the fresh model), and neither pay nor reset re-wiring."""
+        pricing = self._union_pricing
+        per_edge = np.zeros(len(pricing.graph.edges))
+        for i, j in edges:
+            e = (min(i, j), max(i, j))
+            assert e in pricing.edge_index, \
+                f"probe edge {e} is not on the union fabric"
+            per_edge[pricing.edge_index[e]] += float(floats_each)
+        self._book_floats(pricing, per_edge)
+        active = per_edge > 0
+        lat, bw = self._link_rates(pricing, active)
+        self._book_sampled_cost(per_edge, bw, active)
+        self._charge_time(pricing,
+                          np.where(active, lat + per_edge / bw, 0.0),
+                          active)
+        self.rounds += 1
+
+    def switch_schedule(self, fabric: Union[Topology, TopologySchedule]
+                        ) -> None:
+        """Swap the fabric mid-run (SkewScout climbing a topology rung).
+        Accumulated traffic and per-edge clocks are preserved (see
+        ``traffic_by_edge``); the first gossip round on the new schedule
+        pays re-wiring for every link the old round's active set did not
+        have."""
+        schedule = as_schedule(fabric)
+        assert schedule.n_nodes == self.topology.n_nodes, \
+            (schedule.n_nodes, self.topology.n_nodes)
+        self._flush_traffic()
+        self._attach(schedule)
+        self._pricing.clear()
+
+    def _flush_traffic(self) -> None:
+        """Fold the vectorized per-graph accumulators into the canonical
+        per-edge dict (cold path: accessors and schedule switches)."""
+        self._union_pricing.flush_into(self._traffic)
+        for p in self._pricing.values():
+            p.flush_into(self._traffic)
+
+    # ---- pricing ----
+    def traffic_by_edge(self) -> Dict[Edge, float]:
+        """Every float ever booked, keyed by canonical edge — survives
+        schedule switches (``sum(...) == total_floats`` always)."""
+        self._flush_traffic()
+        return dict(self._traffic)
+
+    @property
+    def edge_traffic(self) -> np.ndarray:
+        """Per-edge floats, aligned with ``self.topology.edges`` — a
+        *view* onto the current schedule's union graph.  After a
+        ``switch_schedule`` to a sparser fabric, traffic booked on links
+        the new union lacks is not shown here (use ``traffic_by_edge``
+        for the lossless history)."""
+        self._flush_traffic()
+        return np.asarray([self._traffic.get(e, 0.0)
+                           for e in self.topology.edges])
+
+    # ---- clocks ----
+    def edge_clocks(self) -> Dict[Edge, float]:
+        """Per-link virtual clocks (seconds), keyed by canonical edge —
+        survives schedule switches.  Monotone non-decreasing per edge in
+        both modes; in sync mode activated edges snap to the global
+        clock, in async mode each advances by its own cost only."""
+        return dict(self._edge_clock)
+
+    def node_clocks(self) -> np.ndarray:
+        """When each node last finished a communication: the max clock
+        over its incident links (0 if it never communicated)."""
+        clk = np.zeros(self.topology.n_nodes)
+        for (i, j), c in self._edge_clock.items():
+            if i < len(clk):
+                clk[i] = max(clk[i], c)
+            if j < len(clk):
+                clk[j] = max(clk[j], c)
+        return clk
+
+    def clock_skew_s(self) -> float:
+        """Spread of the per-node clocks — 0 when every node finishes
+        rounds in lockstep (sync, constant fabric); positive when async
+        lets fast nodes run ahead of the stragglers."""
+        clk = self.node_clocks()
+        return float(clk.max() - clk.min()) if len(clk) else 0.0
+
+    @property
+    def node_idle_s(self) -> np.ndarray:
+        """Per-node idle time: the global clock minus the node's own
+        busy time.  In sync mode this is time spent waiting on other
+        nodes' slower links; in async mode, time a fast node is done
+        before the last link drains."""
+        return np.maximum(self.sim_time_s - self.node_busy_s, 0.0)
+
+    @property
+    def total_floats(self) -> float:
+        return self.lan_floats + self.wan_floats
+
+    def priced_cost(self) -> float:
+        """Cumulative bandwidth-weighted cost (seconds of link time);
+        WAN floats dominate under the geo-wan profile, matching the
+        paper's Gaia objective of pricing scarce WAN bytes.  Includes
+        re-wiring traffic, so a controller that flaps between schedules
+        pays for it in C(θ)."""
+        return (self.lan_floats * self.profile.price_per_float("lan")
+                + self.wan_floats * self.profile.price_per_float("wan"))
+
+    def sampled_priced_cost(self) -> float:
+        """``priced_cost`` in *sampled* currency: every booked float
+        priced at the bandwidth its activation actually sampled, so a
+        sync SkewScout window numerator stays unit-consistent with the
+        EWMA-measured CM denominator (constant-priced floats against a
+        measured CM would read systematically cheap and drift during
+        EWMA warm-up).  Falls back to ``priced_cost`` when no stochastic
+        link model is attached — the constants are the truth there."""
+        if self.links is None or not self.links.stochastic:
+            return self.priced_cost()
+        return self._sampled_cost_s
+
+    @property
+    def rewire_floats(self) -> float:
+        return self.rewire_lan_floats + self.rewire_wan_floats
+
+    def rewiring_cost(self) -> float:
+        """Priced cost of the re-wiring traffic alone — the component of
+        ``priced_cost`` a schedule-flapping controller is paying for
+        link churn."""
+        return (self.rewire_lan_floats * self.profile.price_per_float("lan")
+                + self.rewire_wan_floats
+                * self.profile.price_per_float("wan"))
+
+    def _full_exchange(self, model_floats: float, g: Topology,
+                       lat_of, price_of, worst: bool) -> float:
+        """One BSP-style full-model exchange on ``g`` (each node's model
+        share routed uniformly over its incident edges): the max link
+        time (``worst=True``, latency + transfer) or the summed
+        bandwidth-seconds.  The per-edge (latency, price) come from the
+        accessors, so the constant and measured variants share one
+        routing formula."""
+        if not len(g.edges):
+            return 1e-30
+        deg = g.degrees().astype(np.float64)
+        share = model_floats / np.maximum(deg, 1)
+        acc = 0.0
+        for n, (i, j) in enumerate(g.edges):
+            cls = g.edge_class[n]
+            per_edge = share[i] + share[j]
+            if worst:
+                acc = max(acc, lat_of((i, j), cls)
+                          + per_edge * price_of((i, j), cls))
+            else:
+                acc += per_edge * price_of((i, j), cls)
+        return max(acc, 1e-30)
+
+    def full_exchange_cost(self, model_floats: float) -> float:
+        """Priced cost of one BSP-style full-model exchange on the union
+        fabric — SkewScout's CM denominator (bandwidth-seconds)."""
+        return self._full_exchange(
+            model_floats, self.topology,
+            lambda e, cls: self.profile.latency(cls),
+            lambda e, cls: self.profile.price_per_float(cls), worst=False)
+
+    def full_exchange_time(self, model_floats: float) -> float:
+        """Wall-clock of one BSP-style full-model exchange on the union
+        fabric (slowest link's latency + transfer) — the CM denominator
+        when SkewScout prices C(θ) in async simulated time."""
+        return self._full_exchange(
+            model_floats, self.topology,
+            lambda e, cls: self.profile.latency(cls),
+            lambda e, cls: self.profile.price_per_float(cls), worst=True)
+
+    # ---- measured costs (per-edge EWMA over sampled observations) ----
+    def measured_latency_s(self, e: Edge, cls: str = "lan") -> float:
+        """EWMA of the link's observed latency; profile constant until
+        the link has been observed (or when no link model is attached —
+        the constants *are* the truth then)."""
+        return self._ewma_lat.get(e, self.profile.latency(cls))
+
+    def measured_price_per_float(self, e: Edge, cls: str = "lan") -> float:
+        """EWMA of the link's observed seconds-per-float (inverse
+        sampled bandwidth), with the same profile-constant fallback."""
+        return self._ewma_price.get(e, self.profile.price_per_float(cls))
+
+    def _measured_union(self, fabric) -> Topology:
+        return self.topology if fabric is None \
+            else as_schedule(fabric).union()
+
+    def measured_full_exchange_cost(self, model_floats: float,
+                                    fabric=None) -> float:
+        """``full_exchange_cost`` priced from the per-edge EWMA measured
+        costs instead of profile constants — SkewScout's CM denominator
+        when a link model makes the constants a fiction.  ``fabric``
+        pins the exchange graph (e.g. the densest ladder rung) so the
+        denominator stays comparable across rung switches."""
+        return self._full_exchange(
+            model_floats, self._measured_union(fabric),
+            self.measured_latency_s, self.measured_price_per_float,
+            worst=False)
+
+    def measured_full_exchange_time(self, model_floats: float,
+                                    fabric=None) -> float:
+        """``full_exchange_time`` from measured per-edge costs — the CM
+        denominator for an async ledger under a link model."""
+        return self._full_exchange(
+            model_floats, self._measured_union(fabric),
+            self.measured_latency_s, self.measured_price_per_float,
+            worst=True)
+
+    # ---- controller-facing pricing policy ----
+    def window_cost(self) -> float:
+        """The running counter SkewScout cuts C(θ) windows from — the
+        one place the numerator currency is chosen: simulated wall-clock
+        for an async ledger; for a sync ledger, bandwidth-seconds priced
+        at the sampled bandwidths when a stochastic link model is
+        attached (``sampled_priced_cost``) and at the profile constants
+        otherwise."""
+        if self.async_mode:
+            return self.sim_time_s
+        return self.sampled_priced_cost()
+
+    def cm_denominator(self, model_floats: float, fabric=None) -> float:
+        """The CM denominator matching :meth:`window_cost`'s currency —
+        one full-model exchange priced as wall-clock (async) or
+        bandwidth-seconds (sync), from the per-edge EWMA measured costs
+        when a link model is attached and from the profile constants
+        otherwise.  ``fabric`` pins the exchange graph (constants-only
+        callers that need a pin use a precomputed ``cm_ref`` instead,
+        since constants never drift)."""
+        if self.links is not None:
+            return (self.measured_full_exchange_time(model_floats,
+                                                     fabric=fabric)
+                    if self.async_mode
+                    else self.measured_full_exchange_cost(model_floats,
+                                                          fabric=fabric))
+        return (self.full_exchange_time(model_floats) if self.async_mode
+                else self.full_exchange_cost(model_floats))
+
+    @property
+    def pending_handshake_s(self) -> float:
+        """Unpaid handshake balance still being amortized (seconds) —
+        cost already incurred by the links but deferred into their
+        remaining window; ``rewire_time_s + pending_handshake_s`` is the
+        horizon-independent handshake total."""
+        return float(sum(self._pending_hs.values()))
+
+    def summary(self) -> Dict[str, float]:
+        return dict(lan_floats=self.lan_floats, wan_floats=self.wan_floats,
+                    total_floats=self.total_floats,
+                    sim_time_s=self.sim_time_s,
+                    priced_cost=self.priced_cost(), rounds=self.rounds,
+                    rewire_floats=self.rewire_floats,
+                    rewire_events=self.rewire_events,
+                    rewire_time_s=self.rewire_time_s,
+                    async_mode=float(self.async_mode),
+                    clock_skew_s=self.clock_skew_s(),
+                    busy_s_max=float(self.node_busy_s.max()),
+                    idle_s_mean=float(self.node_idle_s.mean()),
+                    amortize_window=float(self.amortize_window),
+                    pending_handshake_s=self.pending_handshake_s,
+                    **({"link_" + k: float(v)
+                        for k, v in self.links.summary().items()}
+                       if self.links is not None else {}))
+
+
+
+
+
+# draw-key tags: keep the per-edge base stream and the per-activation
+# stream disjoint (both are keyed under the same model seed)
+_TAG_BASE = 0x0B
+_TAG_ROUND = 0x0A
+
+
+@dataclass
+class _EdgeState:
+    """Mutable per-link sampling state (replayable: a pure fold over the
+    keyed draws, advanced once per activation)."""
+    key: int = 0              # cached per-edge round-stream key
+    lat_mult: float = 1.0     # persistent per-edge base draw (hetero)
+    bw_mult: float = 1.0
+    n: int = 0                # activations so far (the draw counter)
+    slow: bool = False        # Markov transient-slowdown state
+
+
+class DictLinkModel:
+    """Seeded per-link latency/bandwidth sampler (see module docstring).
+
+    ``sample`` maps a graph's per-edge class-constant (latency,
+    bandwidth) arrays to sampled arrays for one activation, advancing
+    each active edge's draw counter and Markov state.
+    """
+
+    def __init__(self, profile: LinkProfile, *, seed: int = 0,
+                 jitter: float = 0.0, hetero: float = 0.0,
+                 straggler_rate: float = 0.0, straggler_exit: float = 0.5,
+                 straggler_slowdown: float = 10.0):
+        assert jitter >= 0 and hetero >= 0, (jitter, hetero)
+        assert 0.0 <= straggler_rate <= 1.0, straggler_rate
+        assert 0.0 < straggler_exit <= 1.0, straggler_exit
+        assert straggler_slowdown >= 1.0, straggler_slowdown
+        self.profile = profile
+        self.seed = int(seed)
+        self.jitter = float(jitter)
+        self.hetero = float(hetero)
+        self.straggler_rate = float(straggler_rate)
+        self.straggler_exit = float(straggler_exit)
+        self.straggler_slowdown = float(straggler_slowdown)
+        self._edges: Dict[Edge, _EdgeState] = {}
+        # counters for the trainer's straggler/jitter extras
+        self.activations = 0
+        self.slow_activations = 0
+
+    @property
+    def stochastic(self) -> bool:
+        """False when every knob is zero — sampling is the identity and
+        the hot path can skip the per-edge draws entirely."""
+        return (self.jitter > 0 or self.hetero > 0
+                or self.straggler_rate > 0)
+
+    # ---- draws ----
+    def _state(self, e: Edge) -> _EdgeState:
+        st = self._edges.get(e)
+        if st is None:
+            st = _EdgeState(key=rng.fold_key(self.seed, _TAG_ROUND,
+                                             e[0], e[1]))
+            if self.hetero > 0:
+                base = rng.fold_key(self.seed, _TAG_BASE, e[0], e[1])
+                z = rng.normal01(np.uint32(base), np.arange(2))
+                st.lat_mult = float(np.exp(self.hetero * z[0]))
+                st.bw_mult = float(np.exp(-self.hetero * z[1]))
+            self._edges[e] = st
+        return st
+
+    def sample(self, edges: Sequence[Edge], lat: np.ndarray,
+               bw: np.ndarray, active: np.ndarray
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """Sampled (latency, bandwidth) arrays for one activation of the
+        ``active`` edges, starting from the graph's class-constant
+        arrays.  Inactive edges keep the constants (their cost is masked
+        by the caller anyway) and do not advance their counters.
+
+        All active edges draw in one vectorized hash evaluation: keys
+        and counters are gathered from the per-edge states, the jitter
+        normals and Markov uniforms come from one ``kernels/rng.py``
+        batch each, and only the state write-back walks the edges."""
+        if not self.stochastic:
+            return lat, bw
+        s_lat = lat.astype(np.float64).copy()
+        s_bw = bw.astype(np.float64).copy()
+        idx = np.flatnonzero(active)
+        if idx.size == 0:
+            return s_lat, s_bw
+        states = [self._state(edges[n]) for n in idx]
+        keys = np.array([st.key for st in states], np.uint32)
+        ctr = np.array([st.n for st in states], np.int64)
+        # activation n owns uniform counters [4n, 4n+4) on the edge's
+        # round stream: Box-Muller jitter at 4n/4n+1, Markov u at 4n+2
+        mult = np.ones(idx.size, np.float64)
+        if self.jitter > 0:
+            z = rng.normal01(keys, 2 * ctr)
+            mult *= np.exp(self.jitter * z)
+        if self.straggler_rate > 0:
+            u = rng.uniform01(keys, (4 * ctr + 2).astype(np.uint32)
+                              ).astype(np.float64)
+            slow = np.array([st.slow for st in states], bool)
+            mult = np.where(slow, mult * self.straggler_slowdown, mult)
+            self.slow_activations += int(np.sum(slow))
+            next_slow = np.where(slow, u >= self.straggler_exit,
+                                 u < self.straggler_rate)
+        else:
+            next_slow = np.array([st.slow for st in states], bool)
+        self.activations += idx.size
+        for j, st in enumerate(states):
+            st.n += 1
+            st.slow = bool(next_slow[j])
+        base_lat = np.array([st.lat_mult for st in states], np.float64)
+        base_bw = np.array([st.bw_mult for st in states], np.float64)
+        s_lat[idx] = lat[idx] * base_lat * mult
+        s_bw[idx] = bw[idx] * base_bw / mult
+        return s_lat, s_bw
+
+    # ---- reporting ----
+    def slow_fraction(self) -> float:
+        """Fraction of activations that hit a straggler's slow state."""
+        return self.slow_activations / max(self.activations, 1)
+
+    def summary(self) -> Dict[str, float]:
+        return dict(jitter=self.jitter, hetero=self.hetero,
+                    straggler_rate=self.straggler_rate,
+                    straggler_slowdown=self.straggler_slowdown,
+                    activations=float(self.activations),
+                    slow_activations=float(self.slow_activations),
+                    slow_fraction=self.slow_fraction())

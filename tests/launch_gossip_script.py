@@ -35,7 +35,7 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.configs.base import CommConfig
+from repro.configs.base import CommConfig, FabricConfig
 from repro.configs.registry import get_config
 from repro.core.algorithms.adpsgd import ADPSGD
 from repro.core.algorithms.base import ModelFns
@@ -211,7 +211,8 @@ def main():
     sched_rm = random_matching_schedule(K, seed=1)
     traces = []
     st_dpsgd = run_launch(
-        CommConfig(strategy="dpsgd", topology="random-matching"), 4,
+        CommConfig(strategy="dpsgd",
+                   fabric=FabricConfig(topology="random-matching")), 4,
         mix_for=lambda t: gossip_operands(sched_rm, t), count=traces)
     assert len(traces) == 1, f"dpsgd retraced across rotation: {traces}"
     core = run_core(DPSGD(fns, K, topology=sched_rm, momentum=MOM,
@@ -224,7 +225,8 @@ def main():
     stale_of = lambda t: 2 if t < 2 else 1
     traces = []
     st = run_launch(
-        CommConfig(strategy="adpsgd", topology="ring", max_staleness=2), 4,
+        CommConfig(strategy="adpsgd", fabric=FabricConfig(topology="ring"),
+                   max_staleness=2), 4,
         mix_for=lambda t: gossip_operands(sched_ring, t,
                                           staleness=stale_of(t),
                                           max_staleness=2),
@@ -239,7 +241,8 @@ def main():
 
     # ---------------- adpsgd @ staleness 0 == dpsgd, bit for bit -----
     st0 = run_launch(
-        CommConfig(strategy="adpsgd", topology="random-matching",
+        CommConfig(strategy="adpsgd",
+                   fabric=FabricConfig(topology="random-matching"),
                    max_staleness=2), 4,
         mix_for=lambda t: gossip_operands(sched_rm, t, staleness=0,
                                           max_staleness=2))
@@ -249,7 +252,7 @@ def main():
     print("BITWISE_OK adpsgd0==dpsgd", flush=True)
 
     # ---------------- exchange lowers to pod-axis collectives --------
-    comm = CommConfig(strategy="dpsgd", topology="ring")
+    comm = CommConfig(strategy="dpsgd", fabric=FabricConfig(topology="ring"))
     step = make_train_step(cfg, comm, mesh=mesh, lr=LRS[0], momentum=MOM,
                            weight_decay=WD, remat=False, chunk=CHUNK)
     state_shape = train_state_shape(cfg, comm, K)

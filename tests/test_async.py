@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import CommConfig
+from repro.configs.base import CommConfig, FabricConfig
 from repro.core.algorithms.adpsgd import ADPSGD
 from repro.core.algorithms.base import ModelFns
 from repro.core.algorithms.dpsgd import DPSGD
@@ -53,7 +53,7 @@ def test_async_edge_clocks_monotone_and_sim_time_monotone():
     last_clocks, last_t = {}, 0.0
     for t in range(3 * sched.period):
         led.record_gossip(500.0, t=t, staleness=1)
-        clocks = led.edge_clocks()
+        clocks = led.view().edge_clock_map()
         for e, c in clocks.items():
             assert c >= last_clocks.get(e, 0.0), (e, c)
         assert led.sim_time_s >= last_t
@@ -65,9 +65,9 @@ def test_sync_edge_clocks_snap_to_global_clock():
     led = CommLedger(ring(5), LINK_PROFILES["geo-wan"])
     for t in range(3):
         led.record_gossip(100.0, t=t)
-        for c in led.edge_clocks().values():
+        for c in led.view().edge_clock_map().values():
             assert c == pytest.approx(led.sim_time_s)
-    assert led.clock_skew_s() == pytest.approx(0.0)
+    assert led.view().clock_skew_s == pytest.approx(0.0)
 
 
 def test_async_lan_wan_partition_covers_all_priced_floats():
@@ -75,15 +75,18 @@ def test_async_lan_wan_partition_covers_all_priced_floats():
     and re-wiring traffic all booked."""
     sched = time_varying_d_cliques(exclusive_hist(9, 3), seed=0)
     led = CommLedger(sched, LINK_PROFILES["geo-wan"],
-                     rewire_floats_per_edge=32.0, async_mode=True)
+                     config=FabricConfig(rewire_floats=32.0),
+                     async_mode=True)
     union = led.topology
     for t in range(2 * sched.period):
         led.record_gossip(500.0, t=t, staleness=2)
         led.record_probe([union.edges[t % len(union.edges)]], 100.0)
-    assert led.total_floats == pytest.approx(
+    assert led.view().total_floats == pytest.approx(
         led.lan_floats + led.wan_floats)
-    assert led.edge_traffic.sum() == pytest.approx(led.total_floats)
-    assert led.rewire_floats > 0
+    v = led.view()
+    assert v.edge_traffic[v.union_eids].sum() == pytest.approx(
+        v.total_floats)
+    assert led.view().rewire_floats > 0
     assert led.rewire_time_s > 0          # handshakes priced into time
 
 
@@ -122,16 +125,16 @@ def test_async_per_node_busy_idle_and_clock_skew():
         led_a.record_gossip(1000.0, t=t, staleness=2)
     for led in (led_s, led_a):
         assert (led.node_busy_s <= led.sim_time_s + 1e-12).all()
-        assert (led.node_idle_s >= 0).all()
+        assert (led.view().node_idle_s >= 0).all()
     # gateways carry the WAN link: they are the busy ones; LAN-only
     # nodes spend most of the synchronous run waiting
     gateway_busy = led_s.node_busy_s.max()
     lan_busy = led_s.node_busy_s.min()
     assert gateway_busy > 10 * lan_busy
-    assert led_s.node_idle_s.max() == pytest.approx(
+    assert led_s.view().node_idle_s.max() == pytest.approx(
         led_s.sim_time_s - lan_busy)
-    assert led_s.clock_skew_s() == pytest.approx(0.0)
-    assert led_a.clock_skew_s() > 0.0
+    assert led_s.view().clock_skew_s == pytest.approx(0.0)
+    assert led_a.view().clock_skew_s > 0.0
 
 
 def test_record_probe_books_floats_and_blocks_on_latency():
@@ -140,12 +143,12 @@ def test_record_probe_books_floats_and_blocks_on_latency():
     led = CommLedger(topo, prof, async_mode=True)
     wan_edge = topo.edges[int(topo.wan_edge_indices()[0])]
     led.record_probe([wan_edge], 500.0)
-    assert led.total_floats == pytest.approx(500.0)
+    assert led.view().total_floats == pytest.approx(500.0)
     assert led.wan_floats == pytest.approx(500.0)
     # probes block on the fresh model: full latency, no amortization
     assert led.sim_time_s == pytest.approx(
         prof.wan_latency + 500.0 / prof.wan_bandwidth)
-    assert led.traffic_by_edge()[wan_edge] == pytest.approx(500.0)
+    assert led.view().traffic_map()[wan_edge] == pytest.approx(500.0)
     with pytest.raises(AssertionError, match="union"):
         led.record_probe([(0, 0)], 1.0)
 
@@ -176,7 +179,8 @@ def test_async_reactivated_edges_join_at_the_global_frontier():
 def test_probe_neither_pays_nor_resets_rewiring_async():
     sched = time_varying_d_cliques(exclusive_hist(9, 3), seed=0)
     led = CommLedger(sched, LINK_PROFILES["uniform"],
-                     rewire_floats_per_edge=100.0, async_mode=True)
+                     config=FabricConfig(rewire_floats=100.0),
+                     async_mode=True)
     led.record_gossip(10.0, t=0)
     led.record_probe([led.topology.edges[0]], 5.0)
     assert led.rewire_events == 0
@@ -213,9 +217,9 @@ def test_rewire_charges_handshake_latency_even_with_zero_floats():
     """The docstring's promise: the handshake is priced at the link's
     setup latency, not only its control-plane floats.  Switching to a
     fabric that activates a WAN link costs WAN handshake time even when
-    rewire_floats_per_edge == 0."""
+    FabricConfig.rewire_floats == 0."""
     prof = LINK_PROFILES["geo-wan"]
-    led = CommLedger(ring(6), prof, rewire_floats_per_edge=0.0)
+    led = CommLedger(ring(6), prof, config=FabricConfig(rewire_floats=0.0))
     led.record_gossip(100.0, t=0)
     before = led.sim_time_s
     # splice in a WAN link the ring never had: its activation must pay
@@ -225,7 +229,7 @@ def test_rewire_charges_handshake_latency_even_with_zero_floats():
     assert led.sim_time_s - before >= prof.handshake("wan")
     assert led.rewire_time_s >= prof.handshake("wan")
     assert led.rewire_events == 1
-    assert led.rewire_floats == 0.0       # no control-plane floats asked
+    assert led.view().rewire_floats == 0.0       # no control-plane floats asked
 
 
 def test_rewire_wan_handshake_dominates_lan():
@@ -234,7 +238,8 @@ def test_rewire_wan_handshake_dominates_lan():
     prof = LINK_PROFILES["geo-wan"]
     deltas = {}
     for cls in ("lan", "wan"):
-        led = CommLedger(ring(6), prof, rewire_floats_per_edge=8.0)
+        led = CommLedger(ring(6), prof,
+                         config=FabricConfig(rewire_floats=8.0))
         led.record_gossip(10.0, t=0)
         led.switch_schedule(ring_plus(6, (0, 3), cls))
         led.record_gossip(10.0, t=1)
@@ -405,8 +410,9 @@ def test_adpsgd_async_matches_dpsgd_accuracy_with_lower_wall_clock():
     for name, async_gossip in (("dpsgd", False), ("adpsgd", True)):
         runs[name] = train_decentralized(
             CNN_ZOO["gn-lenet"], name, parts, (val.x, val.y),
-            comm=CommConfig(strategy=name, topology="geo-wan",
-                            link_profile="geo-wan",
+            comm=CommConfig(strategy=name,
+                            fabric=FabricConfig(topology="geo-wan",
+                                                profile="geo-wan"),
                             async_gossip=async_gossip, max_staleness=2),
             **kw)
     sync, asy = runs["dpsgd"], runs["adpsgd"]
@@ -433,8 +439,10 @@ def test_trainer_adpsgd_staleness_rung_switch_end_to_end():
     for k in range(K6):
         i = np.where(ds.y == k % 3)[0][k // 3::2]
         parts.append((ds.x[i], ds.y[i]))
-    comm = CommConfig(strategy="adpsgd", topology="geo-wan",
-                      link_profile="geo-wan", async_gossip=True,
+    comm = CommConfig(strategy="adpsgd",
+                      fabric=FabricConfig(topology="geo-wan",
+                                          profile="geo-wan"),
+                      async_gossip=True,
                       max_staleness=2, skewscout=True, travel_every=3)
     r = train_decentralized(CNN_ZOO["gn-lenet"], "adpsgd", parts,
                             (ds.x, ds.y), comm=comm, steps=12, batch=5,

@@ -8,7 +8,7 @@ import dataclasses
 import numpy as np
 import pytest
 
-from repro.configs.base import CommConfig
+from repro.configs.base import CommConfig, FabricConfig, LinkConfig
 from repro.topology import (LINK_PROFILES, CommLedger, LinkModel,
                             d_cliques, fully_connected,
                             greedy_clique_assignment, make_link_model,
@@ -52,7 +52,7 @@ def test_link_model_same_seed_bit_identical_across_rebuilds():
 
     a, b = build(), build()
     assert a.sim_time_s == b.sim_time_s          # bitwise, not approx
-    assert a.edge_clocks() == b.edge_clocks()
+    assert a.view().edge_clock_map() == b.view().edge_clock_map()
     np.testing.assert_array_equal(a.node_busy_s, b.node_busy_s)
     assert a.links.slow_activations == b.links.slow_activations
 
@@ -81,12 +81,14 @@ def test_zero_rate_sampled_ledger_equals_constant_exactly(async_mode):
     gossip, exchanges, probes, and schedule rotation included."""
     prof = LINK_PROFILES["geo-wan"]
     sched = time_varying_d_cliques(exclusive_hist(9, 3), seed=0)
-    const = CommLedger(sched, prof, rewire_floats_per_edge=32.0,
+    const = CommLedger(sched, prof,
+                       config=FabricConfig(rewire_floats=32.0),
                        async_mode=async_mode)
-    sampled = CommLedger(sched, prof, rewire_floats_per_edge=32.0,
+    sampled = CommLedger(sched, prof,
+                         config=FabricConfig(rewire_floats=32.0,
+                                             amortize_window=1),
                          async_mode=async_mode,
-                         link_model=LinkModel(prof, seed=7),
-                         amortize_window=1)
+                         link_model=LinkModel(prof, seed=7))
     probe_edge = const.topology.edges[0]
     for t in range(2 * sched.period):
         for led in (const, sampled):
@@ -95,11 +97,11 @@ def test_zero_rate_sampled_ledger_equals_constant_exactly(async_mode):
             led.record_exchange(40.0)
             led.record_probe([probe_edge], 25.0)
     assert sampled.sim_time_s == const.sim_time_s
-    assert sampled.priced_cost() == const.priced_cost()
+    assert sampled.view().priced_cost == const.view().priced_cost
     assert sampled.lan_floats == const.lan_floats
     assert sampled.wan_floats == const.wan_floats
     assert sampled.rewire_time_s == const.rewire_time_s
-    assert sampled.edge_clocks() == const.edge_clocks()
+    assert sampled.view().edge_clock_map() == const.view().edge_clock_map()
 
 
 # ---------------------------------------------------------------------------
@@ -177,7 +179,8 @@ def test_amortized_handshake_conserves_total_and_flattens_spike():
     prof = LINK_PROFILES["geo-wan"]
     first_round_delta, totals = {}, {}
     for W in (1, 4):
-        led = CommLedger(ring(6), prof, amortize_window=W)
+        led = CommLedger(ring(6), prof,
+                         config=FabricConfig(amortize_window=W))
         led.record_gossip(100.0, t=0)
         led.switch_schedule(ring_plus(6, (0, 3), "wan"))
         before = led.sim_time_s
@@ -185,7 +188,7 @@ def test_amortized_handshake_conserves_total_and_flattens_spike():
         first_round_delta[W] = led.sim_time_s - before
         for t in range(2, 10):
             led.record_gossip(100.0, t=t)
-        assert led.pending_handshake_s == pytest.approx(0.0, abs=1e-15)
+        assert led.view().pending_handshake_s == pytest.approx(0.0, abs=1e-15)
         totals[W] = led.rewire_time_s
     # total handshake seconds booked are window-independent
     assert totals[4] == pytest.approx(totals[1])
@@ -205,8 +208,9 @@ def test_thrashing_forfeits_balance_and_stays_expensive():
     g1, g2 = ring(6), ring_plus(6, (0, 3), "wan")
     totals, busy = {}, {}
     for W in (1, 4):
-        led = CommLedger(g1, prof, rewire_floats_per_edge=16.0,
-                         amortize_window=W)
+        led = CommLedger(g1, prof,
+                         config=FabricConfig(rewire_floats=16.0,
+                                             amortize_window=W))
         led.record_gossip(100.0, t=0)
         for t in range(1, 9):
             led.switch_schedule(g2 if t % 2 else g1)
@@ -215,9 +219,9 @@ def test_thrashing_forfeits_balance_and_stays_expensive():
         busy[W] = led.node_busy_s.copy()
         # conservation: lan + wan covers every priced float, with the
         # re-wiring control-plane floats booked too
-        assert led.total_floats == pytest.approx(
+        assert led.view().total_floats == pytest.approx(
             led.lan_floats + led.wan_floats)
-        assert led.rewire_floats > 0
+        assert led.view().rewire_floats > 0
     assert totals[4] == pytest.approx(totals[1]), totals
     # forfeited balances land on the endpoints' busy accounting too, so
     # per-node busy/idle stays comparable across amortize_window values
@@ -226,7 +230,8 @@ def test_thrashing_forfeits_balance_and_stays_expensive():
 
 def test_amortize_window_validation():
     with pytest.raises(AssertionError):
-        CommLedger(ring(4), LINK_PROFILES["uniform"], amortize_window=0)
+        CommLedger(ring(4), LINK_PROFILES["uniform"],
+                   config=FabricConfig(amortize_window=0))
 
 
 # ---------------------------------------------------------------------------
@@ -245,7 +250,7 @@ def test_ewma_measured_cost_converges_to_sampling_mean():
         led.record_gossip(1e4, t=t)
     expect = float(np.exp(sigma ** 2 / 2)) / prof.lan_bandwidth
     for e in led.topology.edges:
-        got = led.measured_price_per_float(e, "lan")
+        got = led.view().measured_price_per_float(e, "lan")
         assert abs(got - expect) / expect < 0.2, (e, got, expect)
 
 
@@ -256,15 +261,15 @@ def test_measured_costs_fall_back_to_profile_until_observed():
                      link_model=lm)
     # nothing observed yet: measured == profile-derived exactly
     m = 1e6
-    assert led.measured_full_exchange_cost(m) == pytest.approx(
-        led.full_exchange_cost(m))
-    assert led.measured_full_exchange_time(m) == pytest.approx(
-        led.full_exchange_time(m))
+    assert led.view().measured_full_exchange_cost(m) == pytest.approx(
+        led.view().full_exchange_cost(m))
+    assert led.view().measured_full_exchange_time(m) == pytest.approx(
+        led.view().full_exchange_time(m))
     for t in range(50):
         led.record_gossip(1e4, t=t)
     # after observations the measured denominator departs the constants
-    assert led.measured_full_exchange_cost(m) != pytest.approx(
-        led.full_exchange_cost(m), rel=1e-6)
+    assert led.view().measured_full_exchange_cost(m) != pytest.approx(
+        led.view().full_exchange_cost(m), rel=1e-6)
     assert len(hier6.edges) == len(led.topology.edges)
 
 
@@ -281,14 +286,14 @@ def test_sync_window_numerator_matches_measured_cm_currency():
     led = CommLedger(ring(6), prof, link_model=lm)
     for t in range(60):
         led.record_gossip(1e4, t=t)
-    assert led.sampled_priced_cost() > 1.5 * led.priced_cost()
+    assert led.view().sampled_priced_cost > 1.5 * led.view().priced_cost
     scout = SkewScout(CommConfig(strategy="gaia", skewscout=True),
                       "gaia", 1000, lambda *a: 0.0, ledger=led)
-    assert scout._ledger_cost() == led.sampled_priced_cost()
+    assert scout._ledger_cost() == led.view().sampled_priced_cost
     # zero rates: sampled currency degenerates to the constant pricing
     led0 = CommLedger(ring(6), prof, link_model=LinkModel(prof, seed=3))
     led0.record_gossip(1e4, t=0)
-    assert led0.sampled_priced_cost() == led0.priced_cost()
+    assert led0.view().sampled_priced_cost == led0.view().priced_cost
 
 
 def test_skewscout_cm_uses_measured_costs_under_link_model():
@@ -304,14 +309,14 @@ def test_skewscout_cm_uses_measured_costs_under_link_model():
                       cm_fabric=fully_connected(6))
     before = scout._cm()
     assert before == pytest.approx(
-        led.measured_full_exchange_cost(1000.0,
+        led.view().measured_full_exchange_cost(1000.0,
                                         fabric=fully_connected(6)))
     for t in range(40):
         led.record_gossip(1e4, t=t)
     # the denominator tracked the observations (no pinned constant)
     assert scout._cm() != pytest.approx(before, rel=1e-6)
     assert scout._cm() == pytest.approx(
-        led.measured_full_exchange_cost(1000.0,
+        led.view().measured_full_exchange_cost(1000.0,
                                         fabric=fully_connected(6)))
 
 
@@ -357,13 +362,13 @@ def test_link_model_draws_cannot_perturb_clique_assignment():
 
 def test_make_link_model_registry():
     prof = LINK_PROFILES["uniform"]
-    assert make_link_model(CommConfig(), prof) is None
-    lm = make_link_model(CommConfig(link_model="sampled", link_jitter=0.2,
+    assert make_link_model(LinkConfig(), prof) is None
+    lm = make_link_model(LinkConfig(model="sampled", jitter=0.2,
                                     straggler_rate=0.1), prof, seed=4)
     assert isinstance(lm, LinkModel) and lm.seed == 4
     assert lm.jitter == 0.2 and lm.straggler_rate == 0.1
     with pytest.raises(ValueError, match="link_model"):
-        make_link_model(CommConfig(link_model="quantum"), prof)
+        make_link_model(LinkConfig(model="quantum"), prof)
 
 
 def test_trainer_straggler_async_beats_sync_at_equal_accuracy():
@@ -382,11 +387,13 @@ def test_trainer_straggler_async_beats_sync_at_equal_accuracy():
         parts.append((ds.x[i], ds.y[i]))
     steps, runs = 12, {}
     for name, async_gossip in (("dpsgd", False), ("adpsgd", True)):
-        comm = CommConfig(strategy=name, topology="ring",
-                          link_profile="datacenter",
-                          link_model="sampled", straggler_rate=0.2,
-                          straggler_slowdown=25.0,
-                          async_gossip=async_gossip, max_staleness=2)
+        comm = CommConfig(
+            strategy=name,
+            fabric=FabricConfig(
+                topology="ring", profile="datacenter",
+                link=LinkConfig(model="sampled", straggler_rate=0.2,
+                                straggler_slowdown=25.0)),
+            async_gossip=async_gossip, max_staleness=2)
         runs[name] = train_decentralized(
             CNN_ZOO["gn-lenet"], name, parts, (ds.x, ds.y), comm=comm,
             steps=steps, batch=5, eval_every=steps)
@@ -403,9 +410,10 @@ def test_trainer_straggler_async_beats_sync_at_equal_accuracy():
     # zero-rate sampled trainer run must price like the constant ledger
     base, samp = {}, {}
     for tag, link_model in (("const", "constant"), ("samp", "sampled")):
-        comm = CommConfig(strategy="dpsgd", topology="ring",
-                          link_profile="datacenter",
-                          link_model=link_model)
+        comm = CommConfig(strategy="dpsgd",
+                          fabric=FabricConfig(
+                              topology="ring", profile="datacenter",
+                              link=LinkConfig(model=link_model)))
         r = train_decentralized(
             CNN_ZOO["gn-lenet"], "dpsgd", parts, (ds.x, ds.y), comm=comm,
             steps=3, batch=5, eval_every=3)
@@ -419,7 +427,8 @@ def test_trainer_straggler_async_beats_sync_at_equal_accuracy():
 def test_ledger_summary_reports_link_and_amortization_state():
     prof = LINK_PROFILES["geo-wan"]
     lm = LinkModel(prof, seed=0, jitter=0.1, straggler_rate=0.05)
-    led = CommLedger(ring(6), prof, link_model=lm, amortize_window=3)
+    led = CommLedger(ring(6), prof, link_model=lm,
+                     config=FabricConfig(amortize_window=3))
     led.record_gossip(1e4, t=0)
     s = led.summary()
     assert s["amortize_window"] == 3.0
@@ -429,7 +438,12 @@ def test_ledger_summary_reports_link_and_amortization_state():
 
 
 def test_dataclass_replace_keeps_link_knobs():
-    comm = CommConfig(link_model="sampled", straggler_rate=0.3,
-                      amortize_window=5)
-    c2 = dataclasses.replace(comm, topology="ring")
-    assert c2.link_model == "sampled" and c2.amortize_window == 5
+    comm = CommConfig(fabric=FabricConfig(
+        link=LinkConfig(model="sampled", straggler_rate=0.3),
+        amortize_window=5))
+    c2 = dataclasses.replace(
+        comm, fabric=dataclasses.replace(comm.fabric, topology="ring"))
+    assert c2.fabric.topology == "ring"
+    assert c2.fabric.link.model == "sampled"
+    assert c2.fabric.link.straggler_rate == 0.3
+    assert c2.fabric.amortize_window == 5

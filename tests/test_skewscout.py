@@ -247,10 +247,10 @@ def test_probe_traffic_is_booked_on_the_ledger():
     scout = make_scout(algo, ledger=ledger)
     scout.record_step(0.0)
     rep = scout.maybe_travel(0, algo, None, lambda n: (None, None))
-    assert ledger.total_floats == pytest.approx(rep.probe_floats)
-    assert ledger.total_floats == pytest.approx(
+    assert ledger.view().total_floats == pytest.approx(rep.probe_floats)
+    assert ledger.view().total_floats == pytest.approx(
         ledger.lan_floats + ledger.wan_floats)
-    by_edge = ledger.traffic_by_edge()
+    by_edge = ledger.view().traffic_map()
     for e in set(rep.probe_edges):
         assert by_edge[e] >= 1000
     # the probe's own cost is part of the measured window: with zero

@@ -9,7 +9,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import CommConfig
+from repro.configs.base import CommConfig, FabricConfig
 from repro.core.algorithms.base import ModelFns, tree_size
 from repro.core.algorithms.bsp import BSP
 from repro.core.algorithms.dpsgd import DPSGD
@@ -465,9 +465,9 @@ def test_ledger_exchange_conserves_floats():
     led = CommLedger(topo, LINK_PROFILES["geo-wan"])
     led.record_exchange(1000.0)
     # every node's floats land somewhere: total == K * c, split LAN/WAN
-    assert led.total_floats == pytest.approx(9 * 1000.0)
+    assert led.view().total_floats == pytest.approx(9 * 1000.0)
     assert led.lan_floats > 0 and led.wan_floats > 0
-    assert led.total_floats == pytest.approx(
+    assert led.view().total_floats == pytest.approx(
         led.lan_floats + led.wan_floats)
 
 
@@ -476,8 +476,9 @@ def test_ledger_gossip_traffic_per_edge():
     led = CommLedger(topo, LINK_PROFILES["uniform"])
     led.record_gossip(100.0)
     # each of the 5 edges carries the model both directions
-    assert led.total_floats == pytest.approx(5 * 2 * 100.0)
-    np.testing.assert_allclose(led.edge_traffic, 200.0)
+    v = led.view()
+    assert v.total_floats == pytest.approx(5 * 2 * 100.0)
+    np.testing.assert_allclose(v.edge_traffic[v.union_eids], 200.0)
 
 
 def test_ledger_wan_pricing_dominates_under_geo_profile():
@@ -486,12 +487,12 @@ def test_ledger_wan_pricing_dominates_under_geo_profile():
     led = CommLedger(topo, prof)
     led.record_gossip(1000.0)
     wan_cost = led.wan_floats * prof.price_per_float("wan")
-    assert wan_cost / led.priced_cost() > 0.9   # WAN bytes dominate
+    assert wan_cost / led.view().priced_cost > 0.9   # WAN bytes dominate
     # uniform profile: priced cost is proportional to raw floats
     led_u = CommLedger(topo, LINK_PROFILES["uniform"])
     led_u.record_gossip(1000.0)
-    assert led_u.priced_cost() == pytest.approx(
-        led_u.total_floats * LINK_PROFILES["uniform"].price_per_float("lan"))
+    assert led_u.view().priced_cost == pytest.approx(
+        led_u.view().total_floats * LINK_PROFILES["uniform"].price_per_float("lan"))
 
 
 def test_ledger_sim_time_slowest_link():
@@ -507,10 +508,11 @@ def test_ledger_per_node_vector_exchange():
     topo = ring(4)
     led = CommLedger(topo, LINK_PROFILES["uniform"])
     led.record_exchange([100.0, 0.0, 0.0, 0.0])
-    assert led.total_floats == pytest.approx(100.0)
+    v = led.view()
+    assert v.total_floats == pytest.approx(100.0)
     # node 0 has two incident edges, 50 floats each
-    nz = led.edge_traffic[led.edge_traffic > 0]
-    np.testing.assert_allclose(nz, 50.0)
+    traffic = v.edge_traffic[v.union_eids]
+    np.testing.assert_allclose(traffic[traffic > 0], 50.0)
 
 
 # ---------------------------------------------------------------------------
@@ -522,26 +524,28 @@ def test_ledger_invariant_lan_wan_partition_all_priced_floats():
     exchanges, and re-wiring traffic alike."""
     sched = time_varying_d_cliques(exclusive_hist(9, 3), seed=0)
     led = CommLedger(sched, LINK_PROFILES["geo-wan"],
-                     rewire_floats_per_edge=32.0)
+                     config=FabricConfig(rewire_floats=32.0))
     for t in range(2 * sched.period):
         led.record_gossip(500.0, t=t)
         led.record_exchange(40.0)
-    assert led.total_floats == pytest.approx(
+    assert led.view().total_floats == pytest.approx(
         led.lan_floats + led.wan_floats)
     # per-edge attribution conserves the same total
-    assert led.edge_traffic.sum() == pytest.approx(led.total_floats)
-    assert led.rewire_floats > 0
-    assert led.rewire_floats == pytest.approx(
+    v = led.view()
+    assert v.edge_traffic[v.union_eids].sum() == pytest.approx(
+        v.total_floats)
+    assert led.view().rewire_floats > 0
+    assert led.view().rewire_floats == pytest.approx(
         led.rewire_lan_floats + led.rewire_wan_floats)
     # rewiring is priced (it is part of priced_cost, not free)
-    assert led.rewiring_cost() > 0
-    assert led.rewiring_cost() < led.priced_cost()
+    assert led.view().rewiring_cost > 0
+    assert led.view().rewiring_cost < led.view().priced_cost
 
 
 def test_ledger_sim_time_monotone_nondecreasing():
     sched = random_matching_schedule(8, seed=2)
     led = CommLedger(sched, LINK_PROFILES["geo-wan"],
-                     rewire_floats_per_edge=8.0)
+                     config=FabricConfig(rewire_floats=8.0))
     last = 0.0
     for t in range(3 * sched.period):
         led.record_gossip(100.0, t=t)
@@ -555,26 +559,26 @@ def test_ledger_sim_time_monotone_nondecreasing():
 
 def test_ledger_rewiring_accounting():
     """Constant schedules never re-wire; time-varying schedules pay
-    rewire_floats_per_edge for each newly-activated link, and the first
-    round establishes the fabric for free."""
+    FabricConfig.rewire_floats for each newly-activated link, and the
+    first round establishes the fabric for free."""
     const = CommLedger(ring(6), LINK_PROFILES["uniform"],
-                       rewire_floats_per_edge=100.0)
+                       config=FabricConfig(rewire_floats=100.0))
     for t in range(5):
         const.record_gossip(10.0, t=t)
-    assert const.rewire_floats == 0.0 and const.rewire_events == 0
+    assert const.view().rewire_floats == 0.0 and const.rewire_events == 0
 
     sched = time_varying_d_cliques(exclusive_hist(9, 3), seed=0)
     led = CommLedger(sched, LINK_PROFILES["uniform"],
-                     rewire_floats_per_edge=100.0)
+                     config=FabricConfig(rewire_floats=100.0))
     led.record_gossip(10.0, t=0)
     assert led.rewire_events == 0            # first activation is free
-    base = led.total_floats
+    base = led.view().total_floats
     led.record_gossip(10.0, t=1)
     new_edges = len(set(sched.at(1).edges) - set(sched.at(0).edges))
     assert new_edges > 0
     assert led.rewire_events == new_edges
-    assert led.rewire_floats == pytest.approx(100.0 * new_edges)
-    assert led.total_floats == pytest.approx(
+    assert led.view().rewire_floats == pytest.approx(100.0 * new_edges)
+    assert led.view().total_floats == pytest.approx(
         base + 2 * 10.0 * len(sched.at(1).edges) + 100.0 * new_edges)
 
 
@@ -584,7 +588,7 @@ def test_ledger_probe_exchange_neither_pays_nor_resets_rewiring():
     round, and must not mask the next round's genuine re-wiring."""
     sched = time_varying_d_cliques(exclusive_hist(9, 3), seed=0)
     led = CommLedger(sched, LINK_PROFILES["uniform"],
-                     rewire_floats_per_edge=100.0)
+                     config=FabricConfig(rewire_floats=100.0))
     led.record_gossip(10.0, t=0)
     led.record_exchange(5.0)                 # probe between rounds
     assert led.rewire_events == 0            # probe did not "re-wire"
@@ -600,11 +604,11 @@ def test_ledger_traffic_by_edge_survives_switch_to_sparser_fabric():
     led.record_gossip(10.0, t=0)
     led.switch_schedule(ring(6))
     led.record_gossip(10.0, t=0)
-    assert sum(led.traffic_by_edge().values()) == pytest.approx(
-        led.total_floats)
-    # the view only shows the ring's edges now
-    assert len(led.edge_traffic) == len(ring(6).edges)
-    assert led.edge_traffic.sum() < led.total_floats
+    v = led.view()
+    assert sum(v.traffic_map().values()) == pytest.approx(v.total_floats)
+    # the union selection only shows the ring's edges now
+    assert len(v.union_eids) == len(ring(6).edges)
+    assert v.edge_traffic[v.union_eids].sum() < v.total_floats
 
 
 def test_dpsgd_set_schedule_refuses_pad_growth_after_compile():
@@ -628,15 +632,15 @@ def test_ledger_switch_schedule_charges_rewiring_and_keeps_traffic():
     sparse = time_varying_d_cliques(hist, seed=0)
     dense = fully_connected(9)
     led = CommLedger(sparse, LINK_PROFILES["uniform"],
-                     rewire_floats_per_edge=50.0)
+                     config=FabricConfig(rewire_floats=50.0))
     led.record_gossip(10.0, t=0)
-    before = led.total_floats
+    before = led.view().total_floats
     led.switch_schedule(dense)
-    assert led.total_floats == pytest.approx(before)   # history kept
+    assert led.view().total_floats == pytest.approx(before)   # history kept
     led.record_gossip(10.0, t=1)
     new_edges = len(set(dense.edges) - set(sparse.at(0).edges))
     assert led.rewire_events == new_edges
-    assert led.total_floats == pytest.approx(
+    assert led.view().total_floats == pytest.approx(
         before + 2 * 10.0 * len(dense.edges) + 50.0 * new_edges)
     assert led.summary()["rewire_floats"] == pytest.approx(
         50.0 * new_edges)
@@ -663,8 +667,10 @@ def test_dpsgd_full_topology_matches_bsp_accuracy():
                               (val.x, val.y), **kw)
     dp = train_decentralized(CNN_ZOO["gn-lenet"], "dpsgd", parts,
                              (val.x, val.y),
-                             comm=CommConfig(strategy="dpsgd",
-                                             topology="full"), **kw)
+                             comm=CommConfig(
+                                 strategy="dpsgd",
+                                 fabric=FabricConfig(topology="full")),
+                             **kw)
     assert abs(dp.val_acc - bsp.val_acc) < 0.005 + 1e-9, \
         (dp.val_acc, bsp.val_acc)
     assert dp.topology == "full"
@@ -694,8 +700,10 @@ def test_tv_dcliques_matches_constant_accuracy_with_fewer_wan_floats():
     for name in ("dcliques", "tv-dcliques"):
         runs[name] = train_decentralized(
             CNN_ZOO["gn-lenet"], "dpsgd", parts, (val.x, val.y),
-            comm=CommConfig(strategy="dpsgd", topology=name,
-                            link_profile="geo-wan"), **kw)
+            comm=CommConfig(strategy="dpsgd",
+                            fabric=FabricConfig(topology=name,
+                                                profile="geo-wan")),
+            **kw)
     const, tv = runs["dcliques"], runs["tv-dcliques"]
     # within noise of the constant variant
     assert tv.val_acc > const.val_acc - 0.06, \
@@ -730,9 +738,11 @@ def test_make_algorithm_rejects_label_aware_topology_without_hist():
     fns = make_quadratic_fns()
     for name in ("dcliques", "d-cliques", "tv-dcliques"):
         with pytest.raises(ValueError, match="label-aware"):
-            make_algorithm("dpsgd", fns, 4, CommConfig(topology=name))
+            make_algorithm("dpsgd", fns, 4,
+                           CommConfig(fabric=FabricConfig(topology=name)))
     # label-blind topologies still fall back fine
-    algo = make_algorithm("dpsgd", fns, 4, CommConfig(topology="ring"))
+    algo = make_algorithm("dpsgd", fns, 4,
+                          CommConfig(fabric=FabricConfig(topology="ring")))
     assert algo.schedule.at(0).name == "ring"
 
 
@@ -745,7 +755,8 @@ def test_skewscout_topology_mode_starts_on_configured_fabric():
     from repro.data.synthetic import synth_images
     ds = synth_images(120, seed=0, n_classes=3)
     parts = [(ds.x[i::4], ds.y[i::4]) for i in range(4)]
-    comm = CommConfig(strategy="dpsgd", topology="random-matching",
+    comm = CommConfig(strategy="dpsgd",
+                      fabric=FabricConfig(topology="random-matching"),
                       skewscout=True, travel_every=1000)  # never moves
     r = train_decentralized(CNN_ZOO["gn-lenet"], "dpsgd", parts,
                             (ds.x, ds.y), comm=comm, steps=3, batch=5,
@@ -775,9 +786,11 @@ def test_skewscout_topology_rung_switch_end_to_end():
     for k in range(K):                      # node k sees a single class
         i = np.where(ds.y == k % 3)[0][k // 3::2]
         parts.append((ds.x[i], ds.y[i]))
-    comm = CommConfig(strategy="dpsgd", topology="ring", skewscout=True,
-                      travel_every=3, link_profile="geo-wan",
-                      rewire_floats=64.0)
+    comm = CommConfig(strategy="dpsgd",
+                      fabric=FabricConfig(topology="ring",
+                                          profile="geo-wan",
+                                          rewire_floats=64.0),
+                      skewscout=True, travel_every=3)
     r = train_decentralized(CNN_ZOO["gn-lenet"], "dpsgd", parts,
                             (ds.x, ds.y), comm=comm, steps=12, batch=5,
                             eval_every=12)
